@@ -1,0 +1,53 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.bucketing import derive_buckets
+from repro.core.scheduler import (DualBalancedScheduler, LeastBatchScheduler,
+                                  LeastCacheScheduler, UniformCPScheduler)
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.workload import make_workload
+
+CFG = get_config("deepseek-v3")          # the paper's serving backbone
+LM = LatencyModel(CFG)
+BUCKETS = derive_buckets(LM)
+N_INST, PER_NODE = 32, 8                 # paper: 32 DP instances, 8/node
+
+
+def make_scheduler(name: str):
+    return {
+        "nanocp": lambda: DualBalancedScheduler(buckets=BUCKETS),
+        "least_batch": LeastBatchScheduler,
+        "least_cache": LeastCacheScheduler,
+        "cp2": lambda: UniformCPScheduler(cp=2),
+        "cp4": lambda: UniformCPScheduler(cp=4),
+        "cp8": lambda: UniformCPScheduler(cp=8),
+    }[name]()
+
+
+def simulate(sched_name: str, *, rate: float, duration: float = 10.0,
+             long_ratio: float = 0.05, seed: int = 0, horizon: float = 90.0,
+             multi_step: int = 4, kind: str = "mixed"):
+    wl = make_workload(kind, rate=rate, duration=duration,
+                       long_ratio=long_ratio, seed=seed)
+    sim = ClusterSimulator(CFG, make_scheduler(sched_name),
+                           num_instances=N_INST, instances_per_node=PER_NODE,
+                           kv_capacity_tokens=1_000_000,
+                           multi_step=multi_step)
+    res = sim.run(wl, horizon=horizon)
+    return wl, sim, res
+
+
+class Rows:
+    """CSV accumulator: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us: float, derived) -> None:
+        self.rows.append((name, us, derived))
+
+    def emit(self) -> None:
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,313 @@
+"""Post-SPMD HLO text analyzer: FLOPs / bytes / collective bytes with
+while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts a loop body ONCE (verified empirically:
+scan of 8 matmuls reports 1/8 of the FLOPs), which would wildly undercount
+scan-over-layers models.  This analyzer parses ``compiled.as_text()`` (the
+PER-DEVICE SPMD module), builds the computation call graph, extracts each
+while loop's trip count from its condition's comparison constant, and
+multiplies body costs accordingly.
+
+Costs:
+  flops       — 2*prod(out)*prod(contracted lhs dims) per dot (incl. inside
+                fusions); elementwise ops are ignored (matmul-dominated).
+  bytes       — sum of operand+result bytes of top-level instructions
+                (fusion internals excluded — matches XLA's bytes-accessed).
+  collectives — per-device ring-traffic estimates by op kind and replica
+                group size g:
+                  all-gather / reduce-scatter: in * (g-1)  /  in * (g-1)/g
+                  all-reduce: 2 * in * (g-1)/g
+                  all-to-all: in * (g-1)/g,  collective-permute: in
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    # (callee, kind) edges: kind in {"while", "call", "fusion", "cond"}
+    calls: list = field(default_factory=list)
+    trip_hint: int = 0          # if this is a while BODY: trip count
+    const_ints: list = field(default_factory=list)
+    # fusion call sites deferred to analyze(): (callee, [operand bytes], out)
+    fusion_sites: list = field(default_factory=list)
+    # param name -> consumer opcodes + sliced-access bytes (for fusion params)
+    param_names: list = field(default_factory=list)
+    consumers: dict = field(default_factory=lambda: defaultdict(list))
+
+    def param_access(self) -> list:
+        """Per-parameter actual access bytes, or None for full reads.
+
+        A fusion parameter consumed ONLY by windowing ops (slice /
+        dynamic-slice / gather) is charged the window bytes, not the whole
+        operand — stacked per-layer weights sliced inside scan bodies would
+        otherwise be charged per iteration."""
+        out = []
+        for pname in self.param_names:
+            cons = self.consumers.get(pname, [])
+            if cons and all(op in ("slice", "dynamic-slice", "gather")
+                            for op, _ in cons):
+                out.append(sum(b for _, b in cons))
+            else:
+                out.append(None)
+        return out
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-_]+) \(.*?\) -> .* \{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w\.\-_]+) = (\([^)]*\)|[\w\[\],\{\} ]+?) ([\w\-]+)\((.*)")
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    op_shapes: dict[str, str] = {}
+
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            op_shapes = {}
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            # parameters: "%p = f32[..] parameter(0)" matches _OP_RE; skip rest
+            continue
+        name, type_str, opcode, rest = m.groups()
+        op_shapes[name] = type_str
+        if opcode in ("bitcast", "get-tuple-element", "tuple", "after-all",
+                      "partition-id", "replica-id", "iota", "reshape",
+                      "broadcast", "copy"):
+            # zero-cost / layout-only ops.  `copy` is excluded because the
+            # XLA:CPU artifact copies scan carries per iteration; the TPU
+            # target elides them via in-place buffer aliasing (donated
+            # carries), so charging them would misstate the TPU roofline.
+            continue
+        if opcode == "constant":
+            cm = re.match(r"(\d+)\)", rest)
+            if cm:
+                cur.const_ints.append(int(cm.group(1)))
+            continue
+        if opcode == "parameter":
+            cur.param_names.append(name)
+            continue
+
+        out_bytes = _shape_bytes(type_str)
+        # operand shapes: resolve %refs against recorded shapes
+        opnds = re.findall(r"%([\w\.\-_]+)", rest.split(", calls=")[0]
+                           .split(", body=")[0])
+        in_bytes = sum(_shape_bytes(op_shapes.get(o, "")) for o in opnds)
+        for o in opnds:
+            cur.consumers[o].append((opcode, out_bytes))
+
+        if opcode in ("slice", "dynamic-slice", "gather"):
+            # actual access = the extracted window, not the whole operand
+            # (stacked-layer weights sliced inside scans would otherwise
+            # count the full stack once per iteration)
+            cur.bytes += 2 * out_bytes
+            continue
+        if opcode in ("dynamic-update-slice", "scatter"):
+            # read-modify-write of the update window; the base buffer
+            # aliases in place
+            upd = _shape_bytes(op_shapes.get(opnds[1], "")) if len(opnds) > 1 \
+                else out_bytes
+            cur.bytes += 3 * upd
+            continue
+        if opcode == "dot":
+            flops = _dot_flops(type_str, rest, op_shapes)
+            cur.flops += flops
+            cur.bytes += in_bytes + out_bytes
+        elif opcode == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-_]+)", rest)
+            if fm:
+                cur.calls.append((fm.group(1), "fusion"))
+                cur.fusion_sites.append(
+                    (fm.group(1), name,
+                     [_shape_bytes(op_shapes.get(o, "")) for o in opnds],
+                     out_bytes))
+            else:
+                cur.bytes += in_bytes + out_bytes
+        elif opcode == "while":
+            bm = re.search(r"body=%?([\w\.\-_]+)", rest)
+            cm2 = re.search(r"condition=%?([\w\.\-_]+)", rest)
+            if bm:
+                cur.calls.append((bm.group(1), "while"))
+            if cm2 and bm:
+                cur.calls.append((cm2.group(1), f"cond:{bm.group(1)}"))
+        elif opcode in ("call", "custom-call", "conditional"):
+            fm = re.search(r"(?:calls|to_apply)=%?([\w\.\-_]+)", rest)
+            if fm:
+                cur.calls.append((fm.group(1), "call"))
+            cur.bytes += in_bytes + out_bytes
+        elif opcode.rstrip(".0123456789") in _COLLECTIVES or any(
+                opcode.startswith(c) for c in _COLLECTIVES):
+            kind = next(c for c in _COLLECTIVES if opcode.startswith(c))
+            g = _group_size(rest)
+            if kind == "all-gather":
+                traffic = out_bytes * (g - 1) / max(g, 1)
+            elif kind == "reduce-scatter":
+                traffic = in_bytes * (g - 1) / max(g, 1)
+            elif kind == "all-reduce":
+                traffic = 2 * in_bytes * (g - 1) / max(g, 1)
+            elif kind == "all-to-all":
+                traffic = in_bytes * (g - 1) / max(g, 1)
+            else:                            # collective-permute
+                traffic = in_bytes
+            cur.coll_bytes += traffic
+            cur.coll_by_kind[kind] += traffic
+            cur.bytes += in_bytes + out_bytes
+        else:
+            cur.bytes += in_bytes + out_bytes
+    return comps
+
+
+def _dot_flops(type_str: str, rest: str, op_shapes: dict) -> float:
+    _, out_dims = _shape_dims(type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    opnds = re.findall(r"%([\w\.\-_]+)", rest)
+    k = 1
+    if lm and opnds:
+        _, lhs_dims = _shape_dims(op_shapes.get(opnds[0], ""))
+        for d in lm.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_n * k
+
+
+def _group_size(rest: str) -> int:
+    gm = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if gm:
+        return len([x for x in gm.group(1).split(",") if x.strip()])
+    gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)  # iota format
+    if gm:
+        return int(gm.group(2))
+    gm = re.search(r"source_target_pairs=", rest)
+    return 2 if gm else 1
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the condition's comparison constant (scan loops
+    compare the induction variable against a compile-time constant)."""
+    return max(cond.const_ints, default=1)
+
+
+def analyze(text: str) -> dict:
+    """Returns trip-count-corrected totals for the entry computation."""
+    comps = parse_hlo(text)
+    entry = next((c for c in comps if "main" in c), None)
+    if entry is None:
+        entry = next(iter(comps))
+    trips: dict[str, int] = {}
+    for c in comps.values():
+        for callee, kind in c.calls:
+            if kind.startswith("cond:"):
+                body = kind.split(":", 1)[1]
+                if callee in comps:
+                    trips[body] = _trip_count(comps[callee])
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 50:
+            return (0.0, 0.0, 0.0, defaultdict(float))
+        c = comps[name]
+        f, b, cb = c.flops, c.bytes, c.coll_bytes
+        for callee, opname, opnd_bytes, out_b in c.fusion_sites:
+            short = opname
+            if short.startswith(("convert", "copy", "bitcast")):
+                # dtype-convert / layout fusions: XLA:CPU materialises f32
+                # copies of bf16 operands before dots; the TPU MXU consumes
+                # bf16 natively, so these are compilation artifacts (the
+                # consuming op still charges its operand reads).
+                continue
+            if short.startswith("dynamic-update-slice"):
+                # in-place windowed write on TPU: charge the window
+                # (= everything but the aliased base buffer), not the pool
+                win = sum(opnd_bytes) - max(opnd_bytes, default=0)
+                b += 3 * win
+                continue
+            acc = comps[callee].param_access() if callee in comps else []
+            site = out_b
+            for i, full in enumerate(opnd_bytes):
+                a = acc[i] if i < len(acc) else None
+                site += min(a, full) if a is not None else full
+            b += site
+        kinds = defaultdict(float, c.coll_by_kind)
+        for callee, kind in c.calls:
+            if kind.startswith("cond:"):
+                continue
+            cf, cby, ccb, ck = total(callee, depth + 1)
+            mult = trips.get(callee, 1) if kind == "while" else 1
+            f += mult * cf
+            if kind != "fusion":
+                # fusion internals don't touch memory separately — the call
+                # site's operand/result bytes already cover them
+                b += mult * cby
+            cb += mult * ccb
+            for k, v in ck.items():
+                kinds[k] += mult * v
+        memo[name] = (f, b, cb, kinds)
+        return memo[name]
+
+    f, b, cb, kinds = total(entry)
+    return {"flops": f, "bytes": b, "collective_bytes": cb,
+            "collective_by_kind": dict(kinds),
+            "num_computations": len(comps),
+            "while_trips": trips}
+
+
+def analyze_file(path: str) -> dict:
+    import zstandard
+    with open(path, "rb") as fh:
+        text = zstandard.ZstdDecompressor().decompress(fh.read()).decode()
+    return analyze(text)

@@ -1,0 +1,154 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run artifacts (results/dryrun), runs the trip-count-corrected
+HLO analyzer over each compiled module, and derives per-device:
+
+  compute term    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+  memory term     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective term = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+(the compiled module is the per-device SPMD program, so no further /chips).
+Also reports MODEL_FLOPS = 6*N(_active)*tokens (analytic) and the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, the dominant term, and a one-line
+"what would move it" note.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dryrun results/dryrun]
+       [--out results/roofline.json] [--md results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic useful FLOPs for the whole cell (all devices)."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    pc = cfg.param_counts()
+    n_attn = sum(1 for k in cfg.layer_kinds() if k["mixer"] == "attn")
+    hq, hd = cfg.num_heads, cfg.head_dim_
+    if cfg.is_mla:
+        dk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        dv = cfg.v_head_dim
+    else:
+        dk = dv = hd
+    V, D = cfg.padded_vocab, cfg.d_model
+
+    if sh.kind == "train":
+        T = sh.global_batch * sh.seq_len
+        body = 6 * pc["body_active"] * T
+        attn = 3 * 2 * T * sh.seq_len * hq * (dk + dv) * 0.5 * n_attn
+        head = 3 * 2 * T * D * V * (2 if not cfg.tie_embeddings else 1) / 2
+        if cfg.is_encoder_decoder:
+            attn *= 2  # enc self + dec cross (coarse)
+        return body + attn + head
+    if sh.kind == "prefill":
+        T = sh.global_batch * sh.seq_len
+        body = 2 * pc["body_active"] * T
+        attn = 2 * T * sh.seq_len * hq * (dk + dv) * 0.5 * n_attn
+        head = 2 * sh.global_batch * D * V
+        return body + attn + head
+    # decode: one token per request against a seq_len KV
+    T = sh.global_batch
+    body = 2 * pc["body_active"] * T
+    attn = 2 * T * sh.seq_len * hq * (dk + dv) * n_attn
+    head = 2 * T * D * V
+    return body + attn + head
+
+
+def bound_note(dom: str, kind: str) -> str:
+    if dom == "memory" and kind == "decode":
+        return ("KV/weight streaming bound: raise per-instance batch or "
+                "quantise KV (fp8) to cut sweep bytes")
+    if dom == "memory":
+        return "HBM bound: fuse/remat to cut activation traffic"
+    if dom == "collective":
+        return ("ICI bound: cut rotation rounds (rounds_used), widen per-hop "
+                "payload, or overlap routing with local attention")
+    return "MXU bound: raise arithmetic intensity (batch) or cut remat recompute"
+
+
+def analyze_cell(rec: dict, dryrun_dir: str) -> dict | None:
+    from . import hlo_analysis
+    if not rec.get("ok") or "hlo" not in rec:
+        return None
+    res = hlo_analysis.analyze_file(os.path.join(dryrun_dir, rec["hlo"]))
+    chips = CHIPS[rec["mesh"]]
+    t_c = res["flops"] / PEAK_FLOPS
+    t_m = res["bytes"] / HBM_BW
+    t_x = res["collective_bytes"] / LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind", "?"),
+        "hlo_flops_per_dev": res["flops"],
+        "hlo_bytes_per_dev": res["bytes"],
+        "coll_bytes_per_dev": res["collective_bytes"],
+        "coll_by_kind": {k: round(v) for k, v in
+                         res["collective_by_kind"].items()},
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops_total": mf,
+        "useful_ratio": mf / chips / max(res["flops"], 1.0),
+        "bytes_per_device_hbm": rec.get("bytes_per_device", 0),
+        "note": bound_note(dom, rec.get("kind", "?")),
+    }
+    return out
+
+
+def fmt_us(x: float) -> str:
+    return f"{x*1e6:10.1f}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--md", default="results/roofline.md")
+    ap.add_argument("--mesh", default="16x16",
+                    help="mesh for the table (single-pod per the brief)")
+    args = ap.parse_args()
+
+    recs = json.load(open(os.path.join(args.dryrun, "dryrun.json")))
+    rows = []
+    for rec in recs:
+        if rec["mesh"] != args.mesh:
+            continue
+        row = analyze_cell(rec, args.dryrun)
+        if row:
+            rows.append(row)
+            print(f"{row['arch']:24s} {row['shape']:12s} "
+                  f"C={row['t_compute_s']*1e6:9.1f}us "
+                  f"M={row['t_memory_s']*1e6:9.1f}us "
+                  f"X={row['t_collective_s']*1e6:9.1f}us "
+                  f"dom={row['dominant']:10s} "
+                  f"useful={row['useful_ratio']:.2f}", flush=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    with open(args.md, "w") as f:
+        f.write("| arch | shape | kind | compute | memory | collective | "
+                "dominant | MODEL/HLO | HBM GiB/dev | note |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['kind']} "
+                f"| {r['t_compute_s']*1e6:.0f}us | {r['t_memory_s']*1e6:.0f}us "
+                f"| {r['t_collective_s']*1e6:.0f}us | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} "
+                f"| {r['bytes_per_device_hbm']/2**30:.2f} | {r['note']} |\n")
+    print(f"\nwrote {args.out} and {args.md} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

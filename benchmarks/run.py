@@ -1,0 +1,46 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure (DESIGN.md §5).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig12,fig14,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings (e.g. fig12,table1)")
+    args = ap.parse_args()
+
+    from . import paper_figures as pf
+    benches = [
+        ("table1", pf.bench_table1_workloads),
+        ("fig3", pf.bench_fig3_micro),
+        ("fig5", pf.bench_fig5_imbalance),
+        ("fig6", pf.bench_fig6_helix),
+        ("fig12", pf.bench_fig12_e2e),
+        ("fig13", pf.bench_fig13_micro),
+        ("fig14", pf.bench_fig14_balance),
+        ("fig15", pf.bench_fig15_layer),
+        ("fig16", pf.bench_fig16_overhead),
+        ("fig17", pf.bench_fig17_backend),
+        ("fig18", pf.bench_fig18_cpmix),
+        ("table2", pf.bench_table2_aot),
+    ]
+    only = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        rows = fn()
+        rows.emit()
+        print(f"# {name}: ok ({time.time()-t0:.1f}s)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: train a tiny llama-family model with the full training stack
+(AdamW, microbatch accumulation, async checkpointing) on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CONFIGS, reduced
+from repro.models import init_params
+from repro.training import checkpoint, data, optimizer, train_step
+
+
+def main() -> None:
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2)
+    print(f"config: {cfg.name} ({cfg.num_layers}L, d={cfg.d_model})")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = optimizer.AdamWConfig(lr=1e-2, warmup_steps=10, total_steps=200)
+    opt = optimizer.init_opt_state(params)
+    ds = data.SyntheticTokens(cfg, batch=8, seq_len=64)
+    step_fn = jax.jit(train_step.make_train_step(cfg, opt_cfg, num_micro=2))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ck = checkpoint.AsyncCheckpointer(ckpt_dir)
+        for step in range(60):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+            params, opt, stats = step_fn(params, opt, batch)
+            if step % 10 == 0:
+                ck.submit(step, {"params": params, "opt": opt})
+                print(f"step {step:3d}  loss {float(stats['loss']):.3f}  "
+                      f"lr {float(stats['lr']):.2e}  "
+                      f"|g| {float(stats['grad_norm']):.2f}")
+        ck.close()
+        print(f"latest checkpoint: step {checkpoint.latest_step(ckpt_dir)}")
+    print("done — loss should have descended from ~6.0 toward ~4.0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""END-TO-END DRIVER (the paper's kind is serving): serve a small MoE model
+with batched, variable-length requests through the FULL NanoCP stack —
+dual-balanced scheduler, global page table, WaterFill splits, routing
+tables, AOT executable cache, and the 4-phase DCP decode step executing on
+an 8-device mesh.  Every generated token is verified against the
+single-device reference decode.
+
+  PYTHONPATH=src python examples/serve_dcp.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+
+def main() -> None:
+    cfg = reduced(CONFIGS["phi3.5-moe-42b-a6.6b"], vocab_size=256,
+                  capacity_factor=8.0)
+    print(f"model: reduced {cfg.name} — {cfg.num_layers}L MoE "
+          f"{cfg.num_experts}e top-{cfg.num_experts_per_tok}")
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          init_params(jax.random.PRNGKey(0), cfg))
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    engine = NanoCPEngine(
+        cfg, params, mesh, num_instances=4, instances_per_node=4,
+        kv_capacity_tokens=2048, page_size=16,
+        buckets=CPBuckets(edges=(100, 256), degrees=(1, 2, 3)),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4),
+                                   s_buckets=(0, 1, 2, 4), window=4))
+
+    rng = np.random.default_rng(0)
+    lengths = [50, 300, 120, 40, 200, 64]
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)) for L in lengths]
+    for p in prompts:
+        engine.add_request(p, max_new_tokens=6)
+    print(f"enqueued {len(prompts)} requests, lengths {lengths}")
+
+    results = engine.run(max_iters=40)
+    print(f"decode iterations: {engine.iterations}, "
+          f"AOT stats: {engine.aot.stats.as_dict()}")
+    for rid, res in results.items():
+        req_bind = {r.rid: (r.moe_binding, r.kv_binding)
+                    for r in engine.finished}
+        # verify against single-device greedy reference
+        seq = list(prompts[rid])
+        for _ in range(len(res.tokens)):
+            logits, _ = transformer.forward(cfg, params,
+                                            jnp.asarray(seq)[None])
+            seq.append(int(jnp.argmax(logits[0, -1])))
+        ref = seq[len(prompts[rid]):]
+        ok = ref == res.tokens
+        print(f"  rid {rid} (len {lengths[rid]:3d}) -> {res.tokens} "
+              f"{'== reference OK' if ok else f'MISMATCH ref={ref}'}")
+        assert ok
+    print("all generations match the reference — full stack verified")
+
+
+if __name__ == "__main__":
+    main()

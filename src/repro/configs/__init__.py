@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config(arch_id)`` + the shape cells."""
+from __future__ import annotations
+
+from .base import ModelConfig, ShapeCfg, reduced
+from .shapes import SHAPES, applicable_shapes, skipped_shapes
+
+from .whisper_base import CONFIG as whisper_base
+from .qwen2_5_14b import CONFIG as qwen2_5_14b
+from .minicpm3_4b import CONFIG as minicpm3_4b
+from .tinyllama_1_1b import CONFIG as tinyllama_1_1b
+from .qwen1_5_0_5b import CONFIG as qwen1_5_0_5b
+from .phi3_5_moe import CONFIG as phi3_5_moe
+from .llama4_scout import CONFIG as llama4_scout
+from .chameleon_34b import CONFIG as chameleon_34b
+from .mamba2_370m import CONFIG as mamba2_370m
+from .jamba_v0_1 import CONFIG as jamba_v0_1
+from .deepseek_v3 import CONFIG as deepseek_v3
+
+# The ten assigned architectures (+ the paper's own backbone, deepseek-v3).
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        whisper_base, qwen2_5_14b, minicpm3_4b, tinyllama_1_1b, qwen1_5_0_5b,
+        phi3_5_moe, llama4_scout, chameleon_34b, mamba2_370m, jamba_v0_1,
+        deepseek_v3,
+    ]
+}
+
+ASSIGNED = [n for n in CONFIGS if n != "deepseek-v3"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in CONFIGS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(CONFIGS)}")
+    return CONFIGS[arch]
+
+
+__all__ = [
+    "ModelConfig", "ShapeCfg", "SHAPES", "CONFIGS", "ASSIGNED",
+    "get_config", "reduced", "applicable_shapes", "skipped_shapes",
+]

@@ -1,0 +1,35 @@
+"""The assigned input-shape sets (LM-family: seq_len x global_batch).
+
+``decode_*`` / ``long_*`` cells lower ``serve_step`` (one new token against a
+KV cache of ``seq_len``), NOT ``train_step``.  ``long_500k`` is run only for
+sub-quadratic (SSM / hybrid) architectures per the assignment brief; the skip
+for pure full-attention archs is recorded in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from .base import ModelConfig, ShapeCfg
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k":    ShapeCfg("train_4k",    "train",   4_096,   256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32_768,  32),
+    "decode_32k":  ShapeCfg("decode_32k",  "decode",  32_768,  128),
+    "long_500k":   ShapeCfg("long_500k",   "decode",  524_288, 1),
+}
+
+# Families allowed to run the 500k long-context decode cell.
+_SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Shape cells defined for an architecture (skips recorded in DESIGN.md)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in _SUBQUADRATIC_FAMILIES:
+        names.append("long_500k")
+    return names
+
+
+def skipped_shapes(cfg: ModelConfig) -> dict[str, str]:
+    out = {}
+    if cfg.family not in _SUBQUADRATIC_FAMILIES:
+        out["long_500k"] = "pure full-attention arch: 500k context requires sub-quadratic attention (DESIGN.md §6)"
+    return out

@@ -1,0 +1,16 @@
+"""NanoCP core: request-level dynamic context parallelism for DP-EP decoding.
+
+Control plane: ``state`` (global state manager), ``scheduler`` (dual-balanced
+scheduling, Alg. 1), ``page_table`` (global logical->physical KV mapping),
+``waterfill``, ``bucketing``, ``routing`` (Q-Route/Res-Route derivation),
+``aot`` (AOT graph engine, Alg. 2).
+
+Data plane: ``dcp`` (4-phase decode step under shard_map), ``comm`` (routed /
+dense communication backends), ``moe_parallel`` (wide-EP dispatch/combine),
+``migrate`` (prefill KV -> DCP placement transfer).
+"""
+from . import (aot, bucketing, comm, dcp, migrate, moe_parallel, page_table,
+               routing, scheduler, state, waterfill)
+
+__all__ = ["aot", "bucketing", "comm", "dcp", "migrate", "moe_parallel",
+           "page_table", "routing", "scheduler", "state", "waterfill"]

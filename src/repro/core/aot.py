@@ -1,0 +1,97 @@
+"""AOT graph engine (Alg. 2): bounded family of pre-compiled executables.
+
+CUDA-Graph capture/replay maps onto XLA AOT compilation: both demand static
+shapes, both pay per-shape capture cost once, both replay with near-zero
+host orchestration.  The engine keys executables by the routing-table shape
+bucket (M_hat, S_hat, MB_hat, W) and pre-compiles ("captures") the family
+offline; the online path is a dict lookup + execute.
+
+A ``step_builder(key) -> (fn, arg_specs)`` callback supplies the step
+function and its ShapeDtypeStruct signature for each bucket; the engine owns
+lowering, compilation, the executable cache, and Table-2-style accounting
+(graph count, buffer-pool bytes).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+def _round_pow2(x: int, lo: int = 1) -> int:
+    v = lo
+    while v < x:
+        v *= 2
+    return v
+
+
+@dataclass
+class AOTStats:
+    captured: int = 0
+    capture_seconds: float = 0.0
+    lookups: int = 0
+    hits: int = 0
+    online_compiles: int = 0
+    buffer_bytes: int = 0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("captured", "capture_seconds", "lookups", "hits",
+                 "online_compiles", "buffer_bytes")}
+
+
+class AOTGraphEngine:
+    """Offline capture + online replay of bucketed step executables."""
+
+    def __init__(self, step_builder, mb_grid=(8, 16, 32, 64, 128, 256, 512,
+                                              1024, 2048, 4096, 8192)):
+        self._builder = step_builder
+        self._mb_grid = mb_grid
+        self._cache: dict = {}
+        self.stats = AOTStats()
+
+    # ---------------- bucket resolution (Alg. 2 l.19) ----------------
+    def quantise(self, M: int, S: int, MB: int, W: int) -> tuple:
+        from .routing import _quantize_dim
+        return (M, S, _quantize_dim(MB), W)
+
+    # ---------------- offline capture (Alg. 2 l.7-17) ----------------
+    def capture(self, keys) -> None:
+        for key in keys:
+            self._compile(key)
+
+    def _compile(self, key):
+        if key in self._cache:
+            return self._cache[key]
+        t0 = time.perf_counter()
+        fn, arg_specs = self._builder(key)
+        lowered = fn.lower(*arg_specs) if not isinstance(arg_specs, dict) \
+            else fn.lower(**arg_specs)
+        compiled = lowered.compile()
+        self.stats.capture_seconds += time.perf_counter() - t0
+        self.stats.captured += 1
+        self.stats.buffer_bytes += _spec_bytes(arg_specs)
+        self._cache[key] = compiled
+        return compiled
+
+    # ---------------- online replay (Alg. 2 l.19-24) ----------------
+    def lookup(self, M: int, S: int, MB: int, W: int):
+        key = self.quantise(M, S, MB, W)
+        self.stats.lookups += 1
+        if key in self._cache:
+            self.stats.hits += 1
+            return self._cache[key]
+        self.stats.online_compiles += 1
+        return self._compile(key)
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self._cache)
+
+
+def _spec_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs)
+    return int(sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                   for l in leaves if hasattr(l, "shape")))

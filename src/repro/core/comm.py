@@ -1,0 +1,65 @@
+"""Routing-based communication backend (§5.3) — TPU adaptation.
+
+NVSHMEM-style direct puts don't exist on TPU; the native equivalent of
+"sparse transfers steered by an a-priori routing table" is a short sequence
+of *intra-node ring rotations* (`lax.ppermute` with node-local cyclic pairs)
+carrying small bucketed payloads: round d moves a [S_hat, ...] buffer from
+every instance to the instance d steps ahead in its node ring.  Short
+requests never enter a send buffer; a step whose bucket has S_hat == 0
+compiles with NO collectives at all.
+
+The dense baseline (`allgather_backend`) reproduces the NCCL-collective
+behaviour the paper compares against (Fig. 17): every instance gathers every
+peer's full [M_hat, ...] buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def node_rotation_pairs(axis_size: int, node: int, delta: int) -> list:
+    """Cyclic rotation by ``delta`` within each ``node``-sized segment."""
+    return [(a, (a // node) * node + ((a % node) + delta) % node)
+            for a in range(axis_size)]
+
+
+def route_rounds(payload_fn, send_idx, num_rounds: int, *, axis: str,
+                 axis_size: int, node: int, reverse: bool = False):
+    """Run the (W-1) rotation rounds of the routing backend.
+
+    payload_fn(d, idx) -> the [S, ...] buffer this instance emits in round d
+      (idx = send_idx[d-1], entries -1 are padding and must produce zeros).
+    Returns list of received buffers, one per round (round d's buffer came
+    from the instance d steps behind / ahead if ``reverse``).
+    """
+    recvs = []
+    for d in range(1, num_rounds + 1):
+        buf = payload_fn(d, send_idx[d - 1])
+        delta = -d if reverse else d
+        pairs = node_rotation_pairs(axis_size, node, delta)
+        recvs.append(jax.lax.ppermute(buf, axis, pairs))
+    return recvs
+
+
+def gather_rows(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """pool [R, ...] gathered at idx [S] with -1 -> zero rows."""
+    safe = jnp.maximum(idx, 0)
+    rows = pool[safe]
+    mask = (idx >= 0)
+    return jnp.where(mask.reshape(mask.shape + (1,) * (rows.ndim - 1)), rows, 0)
+
+
+def allgather_backend(buf: jax.Array, axis: str) -> jax.Array:
+    """Dense NCCL-style baseline: gather every instance's buffer."""
+    return jax.lax.all_gather(buf, axis, axis=0)
+
+
+def routed_bytes(num_rounds: int, s_rows: int, row_bytes: int) -> int:
+    """Per-instance traffic of the routed backend (one direction)."""
+    return num_rounds * s_rows * row_bytes
+
+
+def dense_bytes(axis_size: int, m_rows: int, row_bytes: int) -> int:
+    """Per-instance traffic of the dense all-gather baseline."""
+    return (axis_size - 1) * m_rows * row_bytes

@@ -1,0 +1,138 @@
+"""KV-cache migration: prefill output -> DCP-placed pool frames (§3 (2)-(3)).
+
+After external prefill, the control plane allocates target KV space per the
+WaterFill split and triggers the physical transfer into each KV-binding
+instance's pool.  Token->shard assignment is contiguous ranges in sorted
+binding order (decode attention + LSE merge are order-agnostic over the
+prefix, so any partition is exact).
+
+Host-side (numpy) writes into the global pool arrays; the engine uploads the
+pools once, then the data plane appends in place.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .dcp import DecodeDims, attn_tp_geometry
+from .state import ClusterState
+
+
+def attn_layer_index(cfg: ModelConfig, attn_ordinal: int) -> tuple[int, int]:
+    """ordinal among attention layers -> (block index, position within block)."""
+    pattern = cfg.block_pattern()
+    per_block = sum(1 for k in pattern if k["mixer"] == "attn")
+    return attn_ordinal // per_block, attn_ordinal % per_block
+
+
+def shard_ranges(cluster: ClusterState, rid: int) -> list[tuple[int, int, int]]:
+    """[(instance, start_token, num_tokens)] contiguous split of the prefix."""
+    shards = cluster.page_table.shard_tokens(rid)
+    out, start = [], 0
+    for s in sorted(shards):
+        t = shards[s]
+        if t > 0:
+            out.append((s, start, t))
+            start += t
+    return out
+
+
+def load_prefill_kv(cfg: ModelConfig, cluster: ClusterState, dims: DecodeDims,
+                    state_np: dict, rid: int, kv_layers) -> None:
+    """Write one request's prefill KV into the (numpy) pool arrays.
+
+    kv_layers: per attention layer, (k [len, Hkv, hd], v [len, Hkv, hd]) or
+    (c_kv [len, kvr], k_rope [len, dr]) for MLA.
+    """
+    page = dims.page
+    pt = cluster.page_table
+    ranges = shard_ranges(cluster, rid)
+    _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+
+    # hybrid sub-pool addressing: frame f of kv head h lives in sub-pool
+    # chunk c = (f % ps)*khs + h at local frame f // ps (core/dcp.py)
+    for a, kv in enumerate(kv_layers):
+        bi, pos = attn_layer_index(cfg, a)
+        if cfg.is_mla:
+            c_kv, k_rope = kv
+            lat = np.concatenate([np.asarray(c_kv, np.float32),
+                                  np.asarray(k_rope, np.float32)], axis=-1)
+            pool = state_np["kv_pool"]            # [nb, na, I, tp, F', page, dk]
+            for s, start, t in ranges:
+                frames = pt.shard_frames(rid, s)
+                for j in range(t):
+                    f, o = frames[j // page], j % page
+                    pool[bi, pos, s, (f % ps) * khs, f // ps, o] = lat[start + j]
+        else:
+            k, v = kv
+            k = np.asarray(k, np.float32)
+            v = np.asarray(v, np.float32)
+            kp, vp = state_np["k_pool"], state_np["v_pool"]
+            for s, start, t in ranges:
+                frames = pt.shard_frames(rid, s)
+                for j in range(t):
+                    f, o = frames[j // page], j % page
+                    for h in range(khs):
+                        c = (f % ps) * khs + h
+                        kp[bi, pos, s, c, f // ps, o] = k[start + j, h]
+                        vp[bi, pos, s, c, f // ps, o] = v[start + j, h]
+
+
+def load_prefill_ssm(cfg: ModelConfig, state_np: dict, instance: int,
+                     slot: int, ssm_layers) -> None:
+    """Write one request's final prefill SSM states into its decode slot.
+
+    ssm_layers: per SSM layer, (conv_state [cw-1, conv_dim], h [nh, hd, ns]).
+    """
+    din, ns = cfg.ssm_d_inner, cfg.ssm_state
+    pattern = cfg.block_pattern()
+    per_block = sum(1 for k in pattern if k["mixer"] == "ssm")
+    for si, (conv, h) in enumerate(ssm_layers):
+        bi, pos = si // per_block, si % per_block
+        conv = np.asarray(conv, np.float32)
+        state_np["conv_x"][bi, pos, instance, slot] = conv[:, :din]
+        state_np["conv_B"][bi, pos, instance, slot] = conv[:, din:din + ns]
+        state_np["conv_C"][bi, pos, instance, slot] = conv[:, din + ns:]
+        state_np["ssm_state"][bi, pos, instance, slot] = np.asarray(h, np.float32)
+
+
+def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,
+                          dims: DecodeDims, state_np: dict, rid: int,
+                          cross_layers) -> None:
+    """Whisper: write per-decoder-layer cross-attn KV (the encoder states'
+    projections) into the paged cross pools per the DCP placement.
+
+    cross_layers: per decoder layer, (k [S_enc, Hkv, hd], v [S_enc, Hkv, hd]).
+    """
+    page = dims.page
+    pt = cluster.page_table
+    ranges = shard_ranges(cluster, rid)
+    _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    for l, (k, v) in enumerate(cross_layers):
+        k = np.asarray(k, np.float32)
+        v = np.asarray(v, np.float32)
+        for s, start, t in ranges:
+            frames = pt.shard_frames(rid, s)
+            for j in range(t):
+                f, o = frames[j // page], j % page
+                for h in range(khs):
+                    c = (f % ps) * khs + h
+                    state_np["cross_k_pool"][l, s, c, f // ps, o] = k[start + j, h]
+                    state_np["cross_v_pool"][l, s, c, f // ps, o] = v[start + j, h]
+
+
+def load_prefill_self_kv(cfg: ModelConfig, dims: DecodeDims, state_np: dict,
+                         instance: int, slot: int, self_layers) -> None:
+    """Whisper: decoder-prefix self-attn KV into the per-slot contiguous cache.
+
+    self_layers: per decoder layer, (k [T0, Hkv, hd], v [T0, Hkv, hd]).
+    """
+    _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    for l, (k, v) in enumerate(self_layers):
+        t0 = k.shape[0]
+        k = np.asarray(k, np.float32)
+        v = np.asarray(v, np.float32)
+        for c in range(khs * ps):
+            h = c % khs
+            state_np["self_k"][l, instance, c, slot, :t0] = k[:, h]
+            state_np["self_v"][l, instance, c, slot, :t0] = v[:, h]

@@ -1,0 +1,172 @@
+"""Global page table: logical KV page -> (instance, frame)  (§4.1).
+
+vLLM-style shared-per-CP-group page tables assume one fixed parallelism
+degree; under DCP requests in one batch have different CP sizes, so NanoCP
+keeps a single cluster-wide mapping: each request owns a list of *logical*
+pages, each resolving to a physical (instance_id, frame_id) tuple.  Frames
+are per-instance fixed-size slots in that instance's KV pool.
+
+The table is pure host-side data (numpy/int dicts); the control plane lowers
+it into per-instance block-table tensors each iteration (core/routing.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class FramePool:
+    """Per-instance physical frame allocator.
+
+    ``stripes``: hybrid-KV page striping factor (core/dcp.py) — frame f
+    belongs to device stripe f % stripes.  The allocator keeps one LIFO
+    free-list per stripe and draws from the fullest stripe so a request's
+    pages spread evenly across stripes (bounds the per-device block-table
+    width MBT).  LIFO reuse order stays deliberately fragmentation-prone
+    (the HoL experiments rely on realistic occupancy).
+    """
+    instance: int
+    num_frames: int
+    stripes: int = 1
+    _free: list = field(default_factory=list)     # per-stripe free lists
+
+    def __post_init__(self):
+        self._free = [[] for _ in range(self.stripes)]
+        for f in range(self.num_frames - 1, -1, -1):
+            self._free[f % self.stripes].append(f)
+
+    @property
+    def free_frames(self) -> int:
+        return sum(len(fl) for fl in self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > self.free_frames:
+            raise MemoryError(
+                f"instance {self.instance}: want {n} frames, have {self.free_frames}")
+        out = []
+        for _ in range(n):
+            fl = max(self._free, key=len)
+            out.append(fl.pop())
+        return out
+
+    def free(self, frames) -> None:
+        for f in frames:
+            assert 0 <= f < self.num_frames
+            self._free[f % self.stripes].append(f)
+
+    def drain(self) -> None:
+        self._free = [[] for _ in range(self.stripes)]
+
+
+@dataclass
+class GlobalPageTable:
+    """Unified logical-page mapping for the whole cluster."""
+    num_instances: int
+    frames_per_instance: int
+    page_size: int
+    stripes: int = 1
+    pools: list = field(default_factory=list)
+    # rid -> list of (instance, frame) in token order
+    _pages: dict = field(default_factory=dict)
+    # rid -> tokens used in the last (partially filled) page
+    _last_fill: dict = field(default_factory=dict)
+    # incremental per-instance used-token counters (hot path for the
+    # scheduler's KV-load queries)
+    _used: list = field(default_factory=list)
+    # rid -> {instance: [frames]} cache (hot path for routing lowering)
+    _frames_by_shard: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.pools = [FramePool(i, self.frames_per_instance, self.stripes)
+                      for i in range(self.num_instances)]
+        self._used = [0] * self.num_instances
+
+    # ---------------- allocation ----------------
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def can_allocate(self, split: dict[int, int]) -> bool:
+        return all(self.pools[s].free_frames >= self.pages_needed(t)
+                   for s, t in split.items() if t > 0)
+
+    def allocate(self, rid: int, split: dict[int, int]) -> None:
+        """Allocate a request's KV pages per the WaterFill split."""
+        assert rid not in self._pages, f"request {rid} already allocated"
+        if not self.can_allocate(split):
+            raise MemoryError(f"request {rid}: split {split} does not fit")
+        pages = []
+        shard_fill = {}
+        for s, t in split.items():
+            if t <= 0:
+                continue
+            frames = self.pools[s].alloc(self.pages_needed(t))
+            pages.extend((s, f) for f in frames)
+            shard_fill[s] = t
+        self._pages[rid] = pages
+        self._last_fill[rid] = shard_fill
+        by_shard = {}
+        for s_, f in pages:
+            by_shard.setdefault(s_, []).append(f)
+        self._frames_by_shard[rid] = by_shard
+        for s_, t in shard_fill.items():
+            self._used[s_] += t
+
+    def append_token(self, rid: int, instance: int) -> tuple[int, int]:
+        """Append one decoded token's KV on ``instance``; grows a page if
+        needed.  Returns (frame, offset) of the new token."""
+        shard_fill = self._last_fill[rid]
+        used = shard_fill.get(instance, 0)
+        my_frames = self._frames_by_shard.setdefault(rid, {}).setdefault(
+            instance, [])
+        cap = len(my_frames) * self.page_size
+        if used >= cap:
+            frame = self.pools[instance].alloc(1)[0]
+            self._pages[rid].append((instance, frame))
+            my_frames.append(frame)
+        frame = my_frames[used // self.page_size]
+        offset = used % self.page_size
+        shard_fill[instance] = used + 1
+        self._used[instance] += 1
+        return frame, offset
+
+    def free_request(self, rid: int) -> None:
+        for s, f in self._pages.pop(rid, []):
+            self.pools[s].free([f])
+        for s, t in self._last_fill.pop(rid, {}).items():
+            self._used[s] -= t
+        self._frames_by_shard.pop(rid, None)
+
+    # ---------------- queries ----------------
+    def shard_tokens(self, rid: int) -> dict[int, int]:
+        """instance -> valid tokens of this request's KV on that instance."""
+        return dict(self._last_fill.get(rid, {}))
+
+    def shard_frames(self, rid: int, instance: int) -> list[int]:
+        return self._frames_by_shard.get(rid, {}).get(instance, [])
+
+    def instance_used_tokens(self, instance: int) -> int:
+        return self._used[instance]
+
+    def free_frames(self, instance: int) -> int:
+        return self.pools[instance].free_frames
+
+    def total_free_frames(self) -> int:
+        return sum(p.free_frames for p in self.pools)
+
+    def drop_instance(self, instance: int) -> list[int]:
+        """Instance failure: drop its frames; returns affected request ids
+        (their KV is incomplete and they must be re-prefetched/re-prefilled)."""
+        affected = [rid for rid, pages in self._pages.items()
+                    if any(s == instance for s, _ in pages)]
+        for rid in affected:
+            self.free_request(rid)
+        self._used[instance] = 0
+        self.pools[instance] = FramePool(instance, self.frames_per_instance,
+                                         self.stripes)
+        # mark the dead instance's pool as empty so nothing allocates there
+        self.pools[instance].drain()
+        return affected
+
+    def restore_instance(self, instance: int) -> None:
+        self.pools[instance] = FramePool(instance, self.frames_per_instance,
+                                         self.stripes)

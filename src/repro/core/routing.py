@@ -1,0 +1,255 @@
+"""Routing-table derivation (§4.2.4, Fig. 9): plan -> static device tensors.
+
+The control plane lowers each iteration's placement into compact int32
+tensors that fully drive the data plane — Q-Route (which slots each MoE
+binding sends in each intra-node rotation round), work lists (which rows each
+instance computes attention for, over which local frames), Res-Route (which
+partial rows return in each reverse round) and merge tables (how each MoE
+binding reassembles its slots' partials).  All shapes are AOT-bucketed
+(M_hat slots, S_hat send rows/round, N_hat work rows, MB page blocks, W
+window = instances per node), so one pre-compiled executable per bucket can
+replay any placement (CUDA-Graph-analogue; DESIGN.md §2).
+
+Send-buffer coordination: in round delta, instance j receives ONLY from
+instance (j - delta) within its node ring, so sender list position p maps
+deterministically to receiver buffer slot p — no handshake needed (the
+paper's "a-priori-known topology" observation, §5.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+import numpy as np
+
+from .bucketing import ShapeBuckets
+from .state import ClusterState, IterationPlan
+
+
+@dataclass
+class RoutingTables:
+    """Global [I, ...] int32 tensors, shard over the `data` mesh axis."""
+    # static bucket dims
+    W: int          # intra-node window (ring rotation rounds = W-1)
+    M: int          # slots per instance (M_hat)
+    S: int          # cross-send rows per round (S_hat)
+    N: int          # attention work rows (N_hat)
+    MB: int         # page blocks per work row
+    MBT: int        # page blocks per work row PER KV STRIPE (hybrid sharding)
+    R: int          # effective rotation rounds used (max CP offset this step)
+    # per-slot (requests whose MoE binding is this instance)
+    slot_rid: np.ndarray        # [I, M] (-1 pad)
+    slot_token: np.ndarray      # [I, M] next input token id
+    slot_pos: np.ndarray        # [I, M] absolute position of the new token
+    slot_active: np.ndarray     # [I, M] 0/1
+    append_frame: np.ndarray    # [I, M] local frame for the new token's KV
+    append_off: np.ndarray      # [I, M] offset within that frame
+    # Q-Route: local slot index sent in rotation round d (1..W-1)
+    q_send_idx: np.ndarray      # [I, W-1, S] (-1 pad)
+    # receiver-side mirror: sender's slot id per (round, position) — used by
+    # the dense (all-gather) baseline backend only
+    q_recv_slot: np.ndarray     # [I, W-1, S] (-1 pad)
+    # work rows (partial attention on the local KV shard)
+    work_src: np.ndarray        # [I, N] idx into concat(slots[M], recv[(W-1)*S])
+    work_bt: np.ndarray         # [I, N, MB] local frame ids
+    work_len: np.ndarray        # [I, N] kv tokens for the row (0 = inactive)
+    # Res-Route: work-row index returned in reverse round d
+    ret_send_idx: np.ndarray    # [I, W-1, S] (-1 pad)
+    # merge: per slot, sources into concat(work rows[N], ret recv[(W-1)*S])
+    merge_src: np.ndarray       # [I, M, W] (-1 = unused)
+    # dense-backend merge mirror: owner round + owner work-row per source
+    merge_round: np.ndarray     # [I, M, W] rotation round of source (0=local)
+    merge_peer_row: np.ndarray  # [I, M, W] work-row index on the owner (-1 pad)
+
+    def stats(self) -> dict:
+        act = self.slot_active.sum(axis=1)
+        cross = (self.q_send_idx >= 0).sum(axis=(1, 2))
+        rows = (self.work_len > 0).sum(axis=1)
+        return {
+            "batch_per_instance": act,
+            "cross_sends_per_instance": cross,
+            "work_rows_per_instance": rows,
+            "bucket": (self.M, self.S, self.N, self.MB, self.W),
+        }
+
+
+def lower_plan(cluster: ClusterState, plan: IterationPlan,
+               buckets: ShapeBuckets | None = None,
+               append_tokens: bool = True,
+               next_tokens: dict | None = None) -> RoutingTables:
+    """Lower one iteration plan to routing tensors.
+
+    ``append_tokens``: allocate+record this step's new KV token on each MoE
+    binding's shard (mutates the page table — one call per decode step).
+    ``next_tokens``: rid -> input token id (defaults to 0; the engine feeds
+    sampled ids).
+    """
+    buckets = buckets or ShapeBuckets(window=cluster.instances_per_node)
+    I = cluster.num_instances
+    W = cluster.instances_per_node
+    page = cluster.page_table.page_size
+    pt = cluster.page_table
+
+    # --- observed shape -> bucket -----------------------------------------
+    max_batch = cluster.max_slots()
+    # per-(sender, round) send counts decide S
+    send_count = np.zeros((I, W), dtype=np.int64)
+    for req in cluster.active.values():
+        m = req.moe_binding
+        for s in req.kv_binding:
+            d = _round_of(cluster, m, s)
+            if d > 0:
+                send_count[m, d] += 1
+    M, S, N = buckets.bucket(max(max_batch, 1), int(send_count.max(initial=0)))
+    # effective rounds: the largest intra-node offset any request uses this
+    # step — steps with only low CP degrees skip the high rotation rounds
+    # entirely (smaller collective term; part of the AOT bucket key)
+    used = np.nonzero(send_count.sum(axis=0))[0]
+    R = int(used.max()) if used.size else 0
+
+    # --- append this step's token on each MoE binding ----------------------
+    append = {}
+    if append_tokens:
+        for req in cluster.active.values():
+            append[req.rid] = pt.append_token(req.rid, req.moe_binding)
+
+    # page blocks per work row (post-append shard lengths), quantised to a
+    # power of two so the AOT executable family stays bounded
+    max_shard = 1
+    for req in cluster.active.values():
+        for s, t in pt.shard_tokens(req.rid).items():
+            max_shard = max(max_shard, t)
+    MB = _quantize_dim(-(-max_shard // page))
+    # per-stripe block-table width: exact max per-(row, stripe) page count
+    ps = cluster.kv_stripes
+    mbt = 1
+    if ps > 1:
+        for req in cluster.active.values():
+            for s_ in req.kv_binding:
+                frames = pt.shard_frames(req.rid, s_)
+                counts = [0] * ps
+                for f in frames:
+                    counts[f % ps] += 1
+                mbt = max(mbt, max(counts))
+        MBT = min(_quantize_dim(mbt), MB)
+    else:
+        MBT = MB
+
+    tbl = RoutingTables(
+        W=W, M=M, S=S, N=N, MB=MB, MBT=MBT, R=R,
+        slot_rid=-np.ones((I, M), np.int32),
+        slot_token=np.zeros((I, M), np.int32),
+        slot_pos=np.zeros((I, M), np.int32),
+        slot_active=np.zeros((I, M), np.int32),
+        append_frame=np.zeros((I, M), np.int32),
+        append_off=np.zeros((I, M), np.int32),
+        q_send_idx=-np.ones((I, W - 1, S), np.int32),
+        q_recv_slot=-np.ones((I, W - 1, S), np.int32),
+        work_src=-np.ones((I, N), np.int32),
+        work_bt=np.zeros((I, N, MB), np.int32),
+        work_len=np.zeros((I, N), np.int32),
+        ret_send_idx=-np.ones((I, W - 1, S), np.int32),
+        merge_src=-np.ones((I, M, W), np.int32),
+        merge_round=np.zeros((I, M, W), np.int32),
+        merge_peer_row=-np.ones((I, M, W), np.int32),
+    )
+
+    slot_of = {}           # rid -> (instance, slot), stable across iterations
+    for rid in sorted(cluster.active):
+            req = cluster.active[rid]
+            i, b = cluster.slot_map[rid]
+            assert i == req.moe_binding, (rid, i, req.moe_binding)
+            assert b < M, f"slot {b} exceeds bucket M={M}"
+            slot_of[rid] = (i, b)
+            tbl.slot_rid[i, b] = rid
+            tbl.slot_active[i, b] = 1
+            tbl.slot_token[i, b] = 0 if next_tokens is None else \
+                next_tokens.get(rid, 0)
+            # decoder-only: absolute position = context length; enc-dec:
+            # decoder position = decoder prefix + generated so far
+            tbl.slot_pos[i, b] = (req.dec_prefix_len + req.generated
+                                  if req.dec_prefix_len >= 0 else req.length)
+            if append_tokens:
+                f, o = append[rid]
+                tbl.append_frame[i, b] = f
+                tbl.append_off[i, b] = o
+
+    # --- work rows, Q-route, Res-route, merge -------------------------------
+    n_rows = np.zeros(I, np.int64)          # next work row per instance
+    n_send = np.zeros((I, W), np.int64)     # next q-send pos per (sender, round)
+    n_ret = np.zeros((I, W), np.int64)      # next ret-send pos per (owner, round)
+    merge_w = np.zeros((I, M), np.int64)    # next merge source per slot
+
+    for rid in sorted(cluster.active):
+        req = cluster.active[rid]
+        m, b = slot_of[rid]
+        shards = pt.shard_tokens(rid)
+        for s in sorted(req.kv_binding, key=lambda s: _round_of(cluster, m, s)):
+            toks = shards.get(s, 0)
+            if toks <= 0 and s != m:
+                continue
+            d = _round_of(cluster, m, s)
+            row = int(n_rows[s])
+            assert row < N, f"work rows exceed bucket N={N} on instance {s}"
+            n_rows[s] += 1
+            frames = pt.shard_frames(rid, s)
+            nb = -(-toks // page) if toks else 0
+            assert nb <= MB
+            tbl.work_bt[s, row, :nb] = frames[:nb]
+            tbl.work_len[s, row] = toks
+            if d == 0:                       # local shard of the MoE binding
+                tbl.work_src[s, row] = b
+                tbl.merge_src[m, b, merge_w[m, b]] = row
+                tbl.merge_round[m, b, merge_w[m, b]] = 0
+                tbl.merge_peer_row[m, b, merge_w[m, b]] = row
+                merge_w[m, b] += 1
+            else:
+                # sender m emits slot b in rotation round d at position p
+                p = int(n_send[m, d])
+                assert p < S, f"send rows exceed bucket S={S}"
+                n_send[m, d] += 1
+                tbl.q_send_idx[m, d - 1, p] = b
+                tbl.q_recv_slot[s, d - 1, p] = b
+                tbl.work_src[s, row] = M + (d - 1) * S + p
+                # owner s returns this row in reverse round d at position p2
+                p2 = int(n_ret[s, d])
+                n_ret[s, d] += 1
+                tbl.ret_send_idx[s, d - 1, p2] = row
+                tbl.merge_src[m, b, merge_w[m, b]] = N + (d - 1) * S + p2
+                tbl.merge_round[m, b, merge_w[m, b]] = d
+                tbl.merge_peer_row[m, b, merge_w[m, b]] = row
+                merge_w[m, b] += 1
+    return tbl
+
+
+def _quantize_dim(x: int, lo: int = 4) -> int:
+    """Quantise a bucket dim: powers of two up to 8, then 12.5%% steps —
+    bounds the AOT family while capping padded-page waste at ~12.5%%."""
+    v = lo
+    while v < x and v < 8:
+        v *= 2
+    if v >= x:
+        return v
+    step = max(v // 8, 1)
+    while True:
+        if v >= x:
+            return v
+        step = max(v // 8, 1)
+        v += step
+
+
+def _round_of(cluster: ClusterState, m: int, s: int) -> int:
+    """Intra-node ring rotation round that moves data from m to s (0 if s==m)."""
+    w = cluster.instances_per_node
+    assert cluster.node_of(m) == cluster.node_of(s), (m, s)
+    return (s - m) % w
+
+
+def as_device_arrays(tbl: RoutingTables):
+    """numpy -> jnp dict (int32), ready to shard over the data axis."""
+    import jax.numpy as jnp
+    out = {}
+    for f in fields(tbl):
+        v = getattr(tbl, f.name)
+        if isinstance(v, np.ndarray):
+            out[f.name] = jnp.asarray(v, jnp.int32)
+    return out

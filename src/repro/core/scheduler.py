@@ -1,0 +1,243 @@
+"""Dual-balanced scheduling (Alg. 1) + the paper's baseline policies.
+
+All schedulers share one interface:  ``schedule(cluster, now) -> IterationPlan``.
+They admit waiting requests (allocating KV pages through the global page
+table) and (re)assign MoE bindings, producing the per-instance plan that the
+routing lowering / simulator / data plane consume.
+
+Policies:
+  * DualBalancedScheduler — NanoCP (decoupled MoE/KV bindings, per-request CP
+    degree from length buckets, WaterFill splits, MoE rebalancing).
+  * LeastBatchScheduler   — vLLM default (batch-balanced, KV colocated).
+  * LeastCacheScheduler   — KV-balanced, batch-oblivious.
+  * UniformCPScheduler    — Helix-style fixed CP groups of size c.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bucketing import CPBuckets, DEFAULT_BUCKETS
+from .state import ClusterState, InstancePlan, IterationPlan, Request
+from .waterfill import waterfill
+
+
+def _mk_plan(cluster: ClusterState) -> IterationPlan:
+    return IterationPlan([InstancePlan(i) for i in range(cluster.num_instances)])
+
+
+def _fill_plan(cluster: ClusterState, plan: IterationPlan) -> IterationPlan:
+    """Populate slots/work from the active set + page table."""
+    for req in cluster.active.values():
+        plan.instances[req.moe_binding].slots.append(req.rid)
+        for s, toks in cluster.page_table.shard_tokens(req.rid).items():
+            if toks > 0:
+                plan.instances[s].work.append((req.rid, req.moe_binding, toks))
+    return plan
+
+
+class BaseScheduler:
+    """Common admission loop; subclasses implement placement."""
+
+    name = "base"
+    hol_blocking = False          # stop admitting at the first non-fitting req
+
+    def __init__(self, max_batch_per_instance: int = 256):
+        self.max_batch = max_batch_per_instance
+
+    # -- subclass hooks ---------------------------------------------------
+    def place(self, cluster: ClusterState, req: Request, B=None):
+        """Return (moe_binding, kv_binding list, split dict) or None.
+        ``B``: per-instance MoE-binding counts (maintained by the caller)."""
+        raise NotImplementedError
+
+    def rebalance(self, cluster: ClusterState) -> None:
+        """Optionally reassign MoE bindings of active requests."""
+
+    # -- main entry ---------------------------------------------------------
+    def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
+        self.rebalance(cluster)
+        plan = _mk_plan(cluster)
+        admitted, still_waiting = [], []
+        batch_counts = np.bincount(
+            [r.moe_binding for r in cluster.active.values()],
+            minlength=cluster.num_instances)
+        while cluster.waiting:
+            req = cluster.waiting.popleft()
+            placement = self.place(cluster, req, batch_counts)
+            ok = placement is not None
+            if ok:
+                m, binding, split = placement
+                ok = (batch_counts[m] < self.max_batch
+                      and cluster.page_table.can_allocate(split))
+            if ok:
+                cluster.page_table.allocate(req.rid, split)
+                req.moe_binding, req.kv_binding = m, sorted(binding)
+                req.node = cluster.node_of(m)
+                req.status = "running"
+                req.start_time = now
+                cluster.active[req.rid] = req
+                cluster.assign_slot(req.rid, m)
+                batch_counts[m] += 1
+                admitted.append(req)
+            else:
+                still_waiting.append(req)
+                if self.hol_blocking:
+                    break
+        for req in reversed(still_waiting):
+            cluster.waiting.appendleft(req)
+        plan = _fill_plan(cluster, plan)
+        plan.admitted = admitted
+        plan.deferred = len(still_waiting)
+        cluster.moe_batch = plan.batch_sizes()
+        return plan
+
+
+# --------------------------------------------------------------------------- #
+# NanoCP: dual-balanced scheduling with DCP (Algorithm 1)
+# --------------------------------------------------------------------------- #
+class DualBalancedScheduler(BaseScheduler):
+    name = "nanocp"
+    hol_blocking = False
+
+    def __init__(self, buckets: CPBuckets = DEFAULT_BUCKETS,
+                 max_batch_per_instance: int = 256, kv_reserve: int = 0,
+                 allow_rebalance: bool = True, has_kv: bool = True):
+        super().__init__(max_batch_per_instance)
+        self.buckets = buckets
+        self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
+        # SSM/hybrid archs pin recurrent state to the decode slot, so their
+        # MoE binding cannot be reassigned without a state migration
+        # (DESIGN.md §6); the engine disables rebalancing for them.
+        self.allow_rebalance = allow_rebalance
+        # attention-free archs (mamba2) have no KV cache: DCP is inapplicable
+        # (DESIGN.md §6) and placement degenerates to batch balancing.
+        self.has_kv = has_kv
+
+    # Alg. 1, lines 1-5: rebalance MoE bindings of active requests
+    def rebalance(self, cluster: ClusterState) -> None:
+        if not self.allow_rebalance:
+            return
+        B = np.zeros(cluster.num_instances, dtype=np.int64)
+        # ascending participant count: fewest feasible choices first
+        for req in sorted(cluster.active.values(), key=lambda r: r.cp_degree):
+            alive = [s for s in req.kv_binding if s not in cluster.dead_instances]
+            if not alive:
+                continue
+            m = min(alive, key=lambda s: (B[s], s))
+            if m != req.moe_binding:
+                req.moe_binding = int(m)
+                cluster.move_slot(req.rid, int(m))
+            B[m] += 1
+
+    # Alg. 1, lines 6-18
+    def place(self, cluster: ClusterState, req: Request, B=None):
+        if B is None:
+            B = np.bincount([r.moe_binding for r in cluster.active.values()],
+                            minlength=cluster.num_instances)
+        # node selection: fewest total MoE-bound requests (line 7)
+        nodes = [n for n in range(cluster.num_nodes) if cluster.node_instances(n)]
+        if not nodes:
+            return None
+        n_star = min(nodes, key=lambda n: (sum(B[s] for s in cluster.node_instances(n)), n))
+        members = cluster.node_instances(n_star)
+        # CP degree from length buckets (line 8)
+        k = min(self.buckets.cp_degree(req.length), len(members))
+        # intra-node placement (lines 9-11)
+        m = min(members, key=lambda s: (B[s], s))
+        if not self.has_kv:                 # attention-free: batch balance only
+            return int(m), [m], {m: 0}
+        others = sorted((s for s in members if s != m),
+                        key=lambda s: (cluster.kv_load(s), s))
+        binding = [m] + others[: k - 1]
+        # WaterFill token split (line 12); reserve growth room on the MoE
+        # binding so appended tokens don't immediately spill
+        loads = np.array([cluster.kv_load(s) for s in binding], dtype=np.float64)
+        caps = np.array([cluster.kv_headroom(s) for s in binding], dtype=np.float64)
+        if caps.sum() < req.length + self.kv_reserve:   # keep growth headroom
+            return None
+        split_arr = waterfill(loads, req.length, capacities=caps)
+        split = {s: int(t) for s, t in zip(binding, split_arr)}
+        # the MoE binding must be able to take appended tokens: ensure it is
+        # in the split map even at 0 so the page table tracks it
+        split.setdefault(m, 0)
+        return int(m), binding, split
+
+
+# --------------------------------------------------------------------------- #
+# request-level baselines (vLLM policies)
+# --------------------------------------------------------------------------- #
+class LeastBatchScheduler(BaseScheduler):
+    """vLLM default: route to the instance with the smallest running batch."""
+    name = "least_batch"
+    hol_blocking = True
+
+    def place(self, cluster: ClusterState, req: Request, B=None):
+        if B is None:
+            B = np.bincount([r.moe_binding for r in cluster.active.values()],
+                            minlength=cluster.num_instances)
+        cands = [i for i in range(cluster.num_instances)
+                 if i not in cluster.dead_instances]
+        if not cands:
+            return None
+        m = min(cands, key=lambda s: (B[s], s))
+        if cluster.kv_headroom(m) < req.length:
+            return None
+        return m, [m], {m: req.length}
+
+
+class LeastCacheScheduler(BaseScheduler):
+    """Route to the instance with the most free KV blocks (least cache)."""
+    name = "least_cache"
+    hol_blocking = True
+
+    def place(self, cluster: ClusterState, req: Request, B=None):
+        cands = [i for i in range(cluster.num_instances)
+                 if i not in cluster.dead_instances]
+        if not cands:
+            return None
+        m = min(cands, key=lambda s: (cluster.kv_load(s), s))
+        if cluster.kv_headroom(m) < req.length:
+            return None
+        return m, [m], {m: req.length}
+
+
+class UniformCPScheduler(BaseScheduler):
+    """Helix-style: fixed CP groups of size ``cp``; every request's KV binding
+    is its whole group (uniform degree), MoE binding = least-batch member."""
+    name = "uniform_cp"
+    hol_blocking = True
+
+    def __init__(self, cp: int, max_batch_per_instance: int = 256):
+        super().__init__(max_batch_per_instance)
+        self.cp = cp
+
+    def place(self, cluster: ClusterState, req: Request, B=None):
+        ni, c = cluster.num_instances, self.cp
+        assert ni % c == 0
+        if B is None:
+            B = np.bincount([r.moe_binding for r in cluster.active.values()],
+                            minlength=ni)
+        groups = [list(range(g * c, (g + 1) * c)) for g in range(ni // c)]
+        groups = [[i for i in g if i not in cluster.dead_instances] for g in groups]
+        groups = [g for g in groups if g]
+        if not groups:
+            return None
+        g = min(groups, key=lambda g: (sum(B[s] for s in g), g[0]))
+        m = min(g, key=lambda s: (B[s], s))
+        # uniform split over the whole group
+        per = req.length // len(g)
+        split = {s: per for s in g}
+        split[g[0]] += req.length - per * len(g)
+        if any(cluster.kv_headroom(s) < t for s, t in split.items()):
+            return None
+        return m, list(g), split
+
+
+SCHEDULERS = {
+    "nanocp": DualBalancedScheduler,
+    "least_batch": LeastBatchScheduler,
+    "least_cache": LeastCacheScheduler,
+    "uniform_cp": UniformCPScheduler,
+}

@@ -1,0 +1,205 @@
+"""Global state management (§4.1): requests, instances, unified cluster view.
+
+The centralized scheduler owns ONE of these per cluster; local schedulers
+cannot jointly balance KV load and batch size, hence the global pool
+(paper §4.1).  All state is host-side; the data plane only ever sees the
+compact routing tensors lowered from it.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .page_table import GlobalPageTable
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival: float = 0.0
+    # encoder-decoder only: decoder prefix length (text tokens consumed at
+    # prefill); the request's ``prompt_len`` then counts ENCODER positions
+    # (the DCP-managed cross-attention KV).  -1 for decoder-only archs.
+    dec_prefix_len: int = -1
+    # --- dynamic ---
+    generated: int = 0
+    status: str = "waiting"          # waiting | running | finished | preempted
+    kv_binding: list = field(default_factory=list)   # P_r (instance ids)
+    moe_binding: int = -1            # m_r (always in kv_binding)
+    node: int = -1
+    # --- metrics (filled by simulator / engine) ---
+    enqueue_time: float = 0.0
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    token_times: list = field(default_factory=list)
+
+    @property
+    def length(self) -> int:
+        """Current context length (prompt + generated)."""
+        return self.prompt_len + self.generated
+
+    @property
+    def cp_degree(self) -> int:
+        return max(len(self.kv_binding), 1)
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+
+@dataclass
+class ClusterState:
+    """Unified view over instances, requests, and the global page table."""
+    num_instances: int
+    instances_per_node: int
+    kv_capacity_tokens: int          # per-instance KV pool size in tokens
+    page_size: int = 64
+    kv_stripes: int = 1              # hybrid-KV page striping (core/dcp.py)
+
+    page_table: GlobalPageTable = None
+    active: dict = field(default_factory=dict)       # rid -> Request
+    waiting: deque = field(default_factory=deque)    # FIFO of Request
+    finished: list = field(default_factory=list)
+    dead_instances: set = field(default_factory=set)
+    moe_batch: np.ndarray = None                     # B_s, per current iteration
+    # stable decode-slot pinning: rid -> (instance, slot).  Slots persist for
+    # a request's lifetime so per-slot device state (SSM states) stays put.
+    slot_map: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.num_instances % self.instances_per_node == 0
+        self.page_table = GlobalPageTable(
+            self.num_instances,
+            frames_per_instance=self.kv_capacity_tokens // self.page_size,
+            page_size=self.page_size, stripes=self.kv_stripes)
+        self.moe_batch = np.zeros(self.num_instances, dtype=np.int64)
+
+    # ---------------- topology ----------------
+    @property
+    def num_nodes(self) -> int:
+        return self.num_instances // self.instances_per_node
+
+    def node_of(self, instance: int) -> int:
+        return instance // self.instances_per_node
+
+    def node_instances(self, node: int) -> list[int]:
+        w = self.instances_per_node
+        return [i for i in range(node * w, (node + 1) * w)
+                if i not in self.dead_instances]
+
+    # ---------------- loads ----------------
+    def kv_load(self, instance: int) -> int:
+        return self.page_table.instance_used_tokens(instance)
+
+    def kv_loads(self) -> np.ndarray:
+        return np.array([self.kv_load(i) for i in range(self.num_instances)])
+
+    def kv_headroom(self, instance: int) -> int:
+        if instance in self.dead_instances:
+            return 0
+        return self.page_table.free_frames(instance) * self.page_size
+
+    # ---------------- decode-slot pinning ----------------
+    def assign_slot(self, rid: int, instance: int) -> int:
+        used = {b for (i, b) in self.slot_map.values() if i == instance}
+        b = 0
+        while b in used:
+            b += 1
+        self.slot_map[rid] = (instance, b)
+        return b
+
+    def move_slot(self, rid: int, instance: int) -> int:
+        if rid in self.slot_map and self.slot_map[rid][0] == instance:
+            return self.slot_map[rid][1]
+        self.slot_map.pop(rid, None)
+        return self.assign_slot(rid, instance)
+
+    def free_slot(self, rid: int) -> None:
+        self.slot_map.pop(rid, None)
+
+    def max_slots(self) -> int:
+        return max((b + 1 for (_, b) in self.slot_map.values()), default=0)
+
+    # ---------------- lifecycle ----------------
+    def enqueue(self, req: Request, now: float = 0.0) -> None:
+        req.status = "waiting"
+        req.enqueue_time = now
+        self.waiting.append(req)
+
+    def finish(self, req: Request, now: float = 0.0) -> None:
+        req.status = "finished"
+        req.finish_time = now
+        self.page_table.free_request(req.rid)
+        self.free_slot(req.rid)
+        self.active.pop(req.rid, None)
+        self.finished.append(req)
+
+    def fail_instance(self, instance: int) -> list:
+        """Node-failure event: drop the instance, re-enqueue affected requests
+        (their KV shards are gone; they need re-prefill/migration).  Returns
+        the affected requests (now at the FRONT of the waiting queue)."""
+        self.dead_instances.add(instance)
+        affected_ids = self.page_table.drop_instance(instance)
+        affected = []
+        for rid in affected_ids:
+            req = self.active.pop(rid, None)
+            self.free_slot(rid)
+            if req is None:
+                continue
+            req.status = "waiting"
+            req.kv_binding, req.moe_binding, req.node = [], -1, -1
+            affected.append(req)
+        for req in reversed(affected):
+            self.waiting.appendleft(req)
+        return affected
+
+    def recover_instance(self, instance: int) -> None:
+        self.dead_instances.discard(instance)
+        self.page_table.restore_instance(instance)
+
+
+@dataclass
+class InstancePlan:
+    """Per-instance slice of one iteration's execution plan."""
+    instance: int
+    slots: list = field(default_factory=list)    # rids with MoE binding here
+    # attention work rows on this instance: (rid, moe_binding, shard_tokens)
+    work: list = field(default_factory=list)
+
+    @property
+    def batch(self) -> int:
+        return len(self.slots)
+
+    @property
+    def kv_tokens(self) -> int:
+        return sum(w[2] for w in self.work)
+
+
+@dataclass
+class IterationPlan:
+    instances: list
+    admitted: list = field(default_factory=list)
+    deferred: int = 0
+
+    def plan_of(self, instance: int) -> InstancePlan:
+        return self.instances[instance]
+
+    def batch_sizes(self) -> np.ndarray:
+        return np.array([p.batch for p in self.instances])
+
+    def kv_tokens(self) -> np.ndarray:
+        return np.array([p.kv_tokens for p in self.instances])
+
+    def cross_sends(self, instance: int) -> int:
+        """Rows instance must send Q for (CP shards on other instances)."""
+        p = self.instances[instance]
+        n = 0
+        for peer in self.instances:
+            if peer.instance == instance:
+                continue
+            n += sum(1 for (_, m, _) in peer.work if m == instance)
+        return n

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + jnp oracles.
+
+NanoCP's decode data path is built on:
+  * ``paged_attention.py`` — paged decode attention with LSE output
+    (the FlashMLA analogue; DCP partial-attention producer).
+  * ``flash_attention.py`` — causal blockwise prefill/training attention.
+  * ``ref.py``             — pure-jnp oracles incl. the Phase-4 LSE merge.
+  * ``ops.py``             — platform-dispatch entry points (TPU->Pallas,
+    CPU->oracle; the dry-run and smoke tests lower the oracle path).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,79 @@
+"""Public kernel entry points with platform dispatch.
+
+TPU  -> Pallas kernels (``paged_attention.py`` / ``flash_attention.py``).
+CPU  -> the jnp oracles in ``ref.py`` (this is what the dry-run lowers and
+        what smoke tests execute; kernels themselves are validated against the
+        oracles in interpret mode by ``tests/test_kernels_*.py``).
+
+Set ``repro.kernels.ops.FORCE_IMPL`` to "ref" / "pallas" / "pallas_interpret"
+to override (used by kernel tests and benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+FORCE_IMPL: str | None = None
+
+
+def _backend() -> str:
+    if FORCE_IMPL is not None:
+        return FORCE_IMPL
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "ref"
+
+
+# --------------------------------------------------------------------------- #
+# flash attention (prefill / training)
+# --------------------------------------------------------------------------- #
+# kv lengths above this use the blockwise (flash-class memory) ref path
+BLOCKWISE_THRESHOLD = 2048
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, kv_len=None):
+    """Differentiable attention. See ``ref.flash_attention`` for semantics."""
+    impl = _backend()
+    if impl == "ref":
+        if k.shape[1] >= BLOCKWISE_THRESHOLD and k.shape[1] % 512 == 0:
+            return ref.flash_attention_blockwise(
+                q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+                kv_len=kv_len)
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   q_offset=q_offset, kv_len=kv_len)
+    from . import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                              q_offset=q_offset, kv_len=kv_len,
+                              interpret=(impl == "pallas_interpret"))
+
+
+def attention(q, k, v, **kw):
+    """Attention without the LSE output (most call sites)."""
+    return flash_attention(q, k, v, **kw)[0]
+
+
+# --------------------------------------------------------------------------- #
+# paged decode attention
+# --------------------------------------------------------------------------- #
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           scale: float | None = None):
+    impl = _backend()
+    if impl == "ref":
+        return ref.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                          lengths, scale=scale)
+    from . import paged_attention as pa
+    return pa.paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                                     scale=scale,
+                                     interpret=(impl == "pallas_interpret"))
+
+
+def merge_lse(partial_out, partial_lse, mask=None):
+    return ref.merge_lse(partial_out, partial_lse, mask)
+
+
+__all__ = ["flash_attention", "attention", "paged_decode_attention", "merge_lse",
+           "FORCE_IMPL"]

@@ -1,0 +1,146 @@
+"""Pallas TPU paged decode-attention kernel with LSE output (FlashMLA analogue).
+
+One query token per work row attends over its paged KV shard; emits the
+partial output AND its log-sum-exp so NanoCP's Phase-4 merge can combine
+CP shards (kernels/ref.py::merge_lse).
+
+TPU mapping (DESIGN.md §7):
+  * grid = (rows N, kv heads Hkv, page blocks MB); pages stream HBM->VMEM via
+    BlockSpec index maps driven by the scalar-prefetched block table (SMEM).
+  * GQA: the G = Hq/Hkv query heads of a kv head form the sublane dim of the
+    q block; MXU matmuls are [G, Dk] x [Dk, page] and [page] x [page, Dv].
+  * online softmax: running (m, l, acc) in f32 VMEM scratch; rows with
+    length 0 (CP padding) produce out=0, lse=-inf without touching pages.
+  * pages past a row's length are masked; their FLOPs are skipped via
+    @pl.when (the DMA for at most one excess page block is tolerated).
+
+Alignment: Dk/Dv should be multiples of 128 and page a multiple of 8 for
+MXU/vreg efficiency; ``ops.paged_decode_attention`` pads the head dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+
+def _kernel(
+    # scalar prefetch
+    block_tables_ref,   # [N, MB] int32 (SMEM)
+    lengths_ref,        # [N]     int32 (SMEM)
+    # inputs
+    q_ref,              # [1, 1, G, Dk]   (VMEM block)
+    k_ref,              # [1, page, 1, Dk]
+    v_ref,              # [1, page, 1, Dv]
+    # outputs
+    o_ref,              # [1, 1, G, Dv]
+    lse_ref,            # [1, 1, G]
+    # scratch
+    m_scr,              # [G, 128] f32
+    l_scr,              # [G, 128] f32
+    acc_scr,            # [G, Dv]  f32
+    *,
+    scale: float,
+    page: int,
+    num_page_blocks: int,
+):
+    n = pl.program_id(0)
+    b = pl.program_id(2)
+    length = lengths_ref[n]
+
+    @pl.when(b == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(b * page < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, Dk]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dk]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, page]
+        pos = b * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                              # [G, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # [G, page]
+        corr = jnp.exp(m_prev - m_new)                     # [G, 1]
+        l_new = corr * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(b == num_page_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        m = m_scr[:, :1]
+        safe_l = jnp.maximum(l, 1e-30)
+        active = length > 0
+        o = jnp.where(active, acc_scr[...] / safe_l, 0.0)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+        lse = jnp.where(active, m + jnp.log(safe_l), NEG_INF)
+        lse_ref[0, 0] = lse[:, 0].astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           scale: float | None = None, interpret: bool = False):
+    """See ``ref.paged_decode_attention`` for exact semantics.
+
+    q [N, Hq, Dk]; k_pages [P, page, Hkv, Dk]; v_pages [P, page, Hkv, Dv];
+    block_tables [N, MB] int32; lengths [N] int32.
+    """
+    N, Hq, Dk = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    MB = block_tables.shape[1]
+    G = Hq // Hkv
+    assert Hq % Hkv == 0
+    scale = scale if scale is not None else Dk ** -0.5
+
+    q3 = q.reshape(N, Hkv, G, Dk)  # group q heads by kv head
+
+    grid = (N, Hkv, MB)
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               num_page_blocks=MB)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dk), lambda n, h, b, bt, ln: (n, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, Dk), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, Dv), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dv), lambda n, h, b, bt, ln: (n, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda n, h, b, bt, ln: (n, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((N, Hkv, G, Dv), q.dtype),
+            jax.ShapeDtypeStruct((N, Hkv, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, lengths, q3, k_pages, v_pages)
+
+    return out.reshape(N, Hq, Dv), lse.reshape(N, Hq)

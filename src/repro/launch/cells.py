@@ -1,0 +1,257 @@
+"""Cell builders: (architecture x input-shape x mesh) -> lowerable callables.
+
+Every assigned cell resolves here to a jitted step function plus
+ShapeDtypeStruct arguments (NO device allocation — dry-run safe):
+
+  train_4k    -> GSPMD ``train_step``   (loss + grads + AdamW, remat, micro)
+  prefill_32k -> GSPMD ``prefill_step`` (forward + KV collection)
+  decode_*    -> shard_map ``serve_step`` (NanoCP DCP data plane), with the
+                 routing tables produced by the REAL control plane placing
+                 the cell's request population.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ModelConfig, ShapeCfg
+from ..core import dcp, routing
+from ..core.bucketing import CPBuckets, ShapeBuckets, derive_buckets
+from ..core.scheduler import DualBalancedScheduler
+from ..core.state import ClusterState, Request
+from ..models import encdec, init_params, transformer
+from ..serving.latency_model import LatencyModel
+from ..training.optimizer import AdamWConfig, init_opt_state
+from ..training.train_step import make_train_step
+from . import sharding
+
+PAGE = 64
+INSTANCES_PER_POD = 16
+INSTANCES_PER_NODE = 8          # paper: 8-accelerator NVLink node -> ICI window
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: object                   # jitted callable
+    args: tuple                  # ShapeDtypeStruct pytrees
+    meta: dict                   # control-plane facts (dims, capacity, ...)
+
+
+def _dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# --------------------------------------------------------------------------- #
+# train / prefill cells (GSPMD)
+# --------------------------------------------------------------------------- #
+def build_train_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+                     multi_pod: bool = False, num_micro: int = 4,
+                     remat: str = "full", fsdp: bool = True,
+                     hybrid_reduce: bool = False,
+                     compress: str | None = "bf16") -> Cell:
+    dp_axes = _dp_axes(multi_pod)
+    params_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_sds = jax.eval_shape(lambda: init_opt_state(params_sds))
+    pspecs = sharding.train_param_specs(cfg, params_sds, fsdp=fsdp)
+    ospecs = sharding.zero_opt_specs(pspecs, params_sds, 16, dp_axes=("data",))
+    bspecs = sharding.batch_specs(cfg, dp_axes)
+    B, S = shape.global_batch, shape.seq_len
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        tgt = min(S, cfg.max_target_positions)
+        batch_sds["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)
+        batch_sds["tokens"] = jax.ShapeDtypeStruct((B, tgt), jnp.int32)
+        batch_sds["targets"] = jax.ShapeDtypeStruct((B, tgt), jnp.int32)
+    shard_fn = sharding.make_shard_fn(mesh, dp_axes)
+    if hybrid_reduce:
+        from ..training.train_step import make_hybrid_train_step
+        # inside the data-manual shard_map, constraints may only use the
+        # auto (model) axis — batch is already a local shard
+        step = make_hybrid_train_step(cfg, AdamWConfig(), mesh,
+                                      shard=sharding.make_shard_fn(mesh, ()),
+                                      dp_axes=dp_axes,
+                                      remat=remat, num_micro=num_micro,
+                                      compress=compress)
+    else:
+        step = make_train_step(cfg, AdamWConfig(), shard=shard_fn,
+                               remat=remat, num_micro=num_micro)
+    fn = jax.jit(step, in_shardings=(
+        sharding.to_named(mesh, pspecs), sharding.to_named(mesh, ospecs),
+        sharding.to_named(mesh, bspecs)),
+        donate_argnums=(0, 1))
+    return Cell(cfg.name, shape.name, "train", fn,
+                (params_sds, opt_sds, batch_sds),
+                {"num_micro": num_micro, "remat": remat})
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+                       multi_pod: bool = False) -> Cell:
+    dp_axes = _dp_axes(multi_pod)
+    params_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = sharding.train_param_specs(cfg, params_sds)
+    shard_fn = sharding.make_shard_fn(mesh, dp_axes)
+    B, S = shape.global_batch, shape.seq_len
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    if cfg.is_encoder_decoder:
+        tgt = min(256, cfg.max_target_positions)
+
+        def prefill(params, batch):
+            enc = encdec.encode(cfg, params, batch["frames"], shard=shard_fn)
+            logits, caches = encdec.decode_forward(cfg, params,
+                                                   batch["tokens"], enc,
+                                                   collect_kv=True,
+                                                   shard=shard_fn)
+            return logits[:, -1], caches
+        batch_sds = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    jnp.bfloat16),
+                     "tokens": jax.ShapeDtypeStruct((B, tgt), jnp.int32)}
+        bspecs = {"frames": P(dp, None, None), "tokens": P(dp, None)}
+    else:
+        def prefill(params, batch):
+            logits, caches = transformer.forward(cfg, params, batch["tokens"],
+                                                 collect_kv=True,
+                                                 shard=shard_fn)
+            return logits[:, -1], caches
+        batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bspecs = {"tokens": P(dp, None)}
+
+    fn = jax.jit(prefill, in_shardings=(sharding.to_named(mesh, pspecs),
+                                        sharding.to_named(mesh, bspecs)))
+    return Cell(cfg.name, shape.name, "prefill", fn, (params_sds, batch_sds), {})
+
+
+# --------------------------------------------------------------------------- #
+# decode cells (NanoCP DCP serve step, tables from the real control plane)
+# --------------------------------------------------------------------------- #
+def plan_decode_cell(cfg: ModelConfig, shape: ShapeCfg, *,
+                     num_instances: int, tp: int = 16,
+                     instances_per_node: int = INSTANCES_PER_NODE,
+                     page: int = PAGE):
+    """Run the control plane for this cell's request population."""
+    gb, seq = shape.global_batch, shape.seq_len
+    I, W = num_instances, instances_per_node
+    _, khs, ps = dcp.attn_tp_geometry(cfg, tp)
+    cap = int(max(np.ceil(gb * seq / I * 1.15),
+                  np.ceil(seq / W * 1.25), 16 * page))
+    cap = -(-cap // page) * page
+    buckets = derive_buckets(LatencyModel(cfg), max_degree=W)
+    is_ssm_family = cfg.family in ("ssm", "hybrid")
+    cluster = ClusterState(num_instances=I, instances_per_node=W,
+                           kv_capacity_tokens=cap, page_size=page,
+                           kv_stripes=ps)
+    m_fixed = max(1, -(-gb // I))
+    sched = DualBalancedScheduler(buckets=buckets,
+                                  allow_rebalance=not is_ssm_family,
+                                  has_kv=cfg.has_attention)
+    for rid in range(gb):
+        cluster.enqueue(Request(
+            rid=rid, prompt_len=seq, max_new_tokens=64,
+            dec_prefix_len=(min(255, cfg.max_target_positions - 1)
+                            if cfg.is_encoder_decoder else -1)))
+    plan = sched.schedule(cluster)
+    assert not plan.deferred, (
+        f"{cfg.name}/{shape.name}: {plan.deferred} requests did not fit "
+        f"(cap={cap} tokens/instance)")
+    sb = ShapeBuckets(m_buckets=(m_fixed,) if is_ssm_family
+                      else (1, 2, 4, 8, 16, 32, 64, 128, 256),
+                      s_buckets=(0, 1, 2, 4, 8, 16, 32), window=W)
+    tbl = routing.lower_plan(cluster, plan, buckets=sb,
+                             append_tokens=cfg.has_attention,
+                             next_tokens={r: 1 for r in cluster.active})
+    dims = dcp.DecodeDims(M=tbl.M, S=tbl.S, N=tbl.N, MB=tbl.MB, MBT=tbl.MBT,
+                          W=W, num_frames=cap // page + 1, page=page,
+                          data_size=INSTANCES_PER_POD,
+                          tp=tp, rounds_used=tbl.R)
+    return cluster, tbl, dims
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+                      multi_pod: bool = False, backend: str = "routed",
+                      rounds_used: int | None = None,
+                      kv_dtype=None, weight_dtype=None) -> Cell:
+    import jax.numpy as jnp
+    tp = mesh.shape["model"]
+    pods = mesh.shape.get("pod", 1)
+    I_total = INSTANCES_PER_POD * pods
+    extra = ("pod",) if multi_pod else ()
+    cluster, tbl, dims = plan_decode_cell(cfg, shape, num_instances=I_total,
+                                          tp=tp)
+    over = {"backend": backend}
+    if rounds_used is not None:
+        over["rounds_used"] = rounds_used
+    dims = dcp.DecodeDims(**{**dims.__dict__, **over})
+    tbl_dev = {k: jax.ShapeDtypeStruct(v.shape, jnp.int32)
+               for k, v in routing.as_device_arrays(tbl).items()}
+    params_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+    kvd = kv_dtype or jnp.bfloat16
+    if cfg.is_encoder_decoder:
+        dparams_sds = jax.eval_shape(
+            lambda p: dcp.to_encdec_decode_params(cfg, p, tp), params_sds)
+        state_sds = jax.eval_shape(
+            lambda: dcp.init_encdec_serve_state(cfg, dims, I_total, dtype=kvd))
+        fn = dcp.make_encdec_serve_step(cfg, dims, mesh, dparams_sds,
+                                        state_sds, tbl_dev,
+                                        extra_data_axes=extra)
+    else:
+        def mk_params(p):
+            dp = dcp.to_decode_params(cfg, p, tp)
+            if weight_dtype is not None:
+                dp = dcp.quantize_decode_weights(dp, weight_dtype)
+            return dp
+        dparams_sds = jax.eval_shape(mk_params, params_sds)
+        state_sds = jax.eval_shape(
+            lambda: dcp.init_serve_state(cfg, dims, I_total, dtype=kvd))
+        fn = dcp.make_serve_step(cfg, dims, mesh, dparams_sds, state_sds,
+                                 tbl_dev, extra_data_axes=extra)
+    meta = {"dims": {k: getattr(dims, k) for k in
+                     ("M", "S", "N", "MB", "MBT", "W", "num_frames", "page",
+                      "tp", "backend", "rounds_used")},
+            "kv_capacity_tokens": (dims.num_frames - 1) * dims.page,
+            "cp_histogram": _cp_hist(cluster)}
+    return Cell(cfg.name, shape.name, "decode", fn,
+                (dparams_sds, state_sds, tbl_dev), meta)
+
+
+def _cp_hist(cluster) -> dict:
+    h = {}
+    for r in cluster.active.values():
+        h[r.cp_degree] = h.get(r.cp_degree, 0) + 1
+    return h
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool = False,
+               **kw) -> Cell:
+    import dataclasses
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        kw.setdefault("num_micro", 8 if cfg.is_moe else 4)
+        kw2 = {k: v for k, v in kw.items()
+               if k in ("num_micro", "remat", "fsdp", "hybrid_reduce",
+                        "compress")}
+        kw.clear(); kw.update(kw2)
+        if cfg.family == "hybrid":
+            # SSD backward is the train-memory bottleneck on wide-head
+            # hybrids: deepest microbatching + half-size SSD chunks
+            # (EXPERIMENTS.md §Dry-run notes the remaining gap)
+            kw.setdefault("num_micro", 16)
+            cfg = dataclasses.replace(cfg, ssm_chunk=64)
+        return build_train_cell(cfg, shape, mesh, multi_pod=multi_pod, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, multi_pod=multi_pod)
+    return build_decode_cell(cfg, shape, mesh, multi_pod=multi_pod,
+                             **{k: v for k, v in kw.items()
+                                if k in ("backend", "rounds_used", "kv_dtype",
+                                         "weight_dtype")})

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent on the production meshes without
+hardware: per cell we ``.lower().compile()`` the step, record
+``memory_analysis()`` (fits per device?), ``cost_analysis()`` and the
+compiled HLO's collective inventory, and persist everything under
+``--out`` for the roofline analysis (benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape decode_32k --multi-pod both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ASSIGNED, SHAPES, applicable_shapes, get_config
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             save_hlo: bool = True, **kw) -> dict:
+    from .cells import build_cell
+    from .mesh import make_production_mesh
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape_name, mesh, multi_pod=multi_pod, **kw)
+        lowered = cell.fn.lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        rec.update(
+            ok=True, kind=cell.kind, meta=cell.meta,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory={k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")},
+            cost={k: float(v) for k, v in ca.items()
+                  if k in ("flops", "bytes accessed")},
+        )
+        rec["bytes_per_device"] = (
+            rec["memory"]["argument_size_in_bytes"]
+            + rec["memory"]["temp_size_in_bytes"]
+            + rec["memory"]["output_size_in_bytes"]
+            - rec["memory"]["alias_size_in_bytes"])
+        if save_hlo:
+            import zstandard
+            txt = compiled.as_text().encode()
+            hlo_path = os.path.join(
+                out_dir, f"{arch}__{shape_name}__{rec['mesh']}.hlo.zst")
+            with open(hlo_path, "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=3).compress(txt))
+            rec["hlo"] = os.path.basename(hlo_path)
+            rec["hlo_bytes"] = len(txt)
+    except Exception as e:  # noqa: BLE001 — dry-run reports per-cell failures
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None,
+                    help="arch ids (default: all assigned)")
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"), default="no")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = args.arch or ASSIGNED
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = args.shape or applicable_shapes(cfg)
+        for shape in shapes:
+            for mp in pods:
+                print(f"=== {arch} x {shape} x "
+                      f"{'2x16x16' if mp else '16x16'}", flush=True)
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                               save_hlo=not args.no_hlo)
+                status = "OK" if rec["ok"] else f"FAIL ({rec.get('error')})"
+                extra = ""
+                if rec["ok"]:
+                    extra = (f" mem/dev={rec['bytes_per_device']/2**30:.2f}GiB"
+                             f" lower={rec['lower_s']}s"
+                             f" compile={rec['compile_s']}s")
+                print(f"    {status}{extra}", flush=True)
+                results.append(rec)
+                with open(os.path.join(args.out, "dryrun.json"), "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells passed")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

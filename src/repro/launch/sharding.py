@@ -1,0 +1,125 @@
+"""Sharding rules for the GSPMD train/prefill paths + ZeRO-1 optimizer specs.
+
+Decode-path specs live in ``core/dcp.py`` (fully explicit shard_map); the
+train/prefill paths use GSPMD with the per-leaf PartitionSpecs below plus
+activation constraints (sequence parallelism over `model`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# leaf-name -> rule kind for the TRAINING parameter tree
+_COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+        "wi", "wi_gate", "wi_up", "in_proj", "conv_w",
+        "bq", "bk", "bv", "bi", "conv_b"}
+_ROW = {"wo", "out_proj"}
+_REPL = {"scale", "bias", "bo", "q_norm", "k_norm", "kv_norm", "router",
+         "pos_dec"}
+_VEC_COL = {"A_log", "D", "dt_bias", "norm"}   # per-head/channel SSM vectors
+
+
+def train_param_specs(cfg: ModelConfig, params, *, fsdp: bool = True,
+                      fsdp_size: int = 16, min_fsdp_bytes: int = 2 ** 20):
+    """PartitionSpec tree for ``models.init_params`` output (TP over model;
+    MoE experts are TP-sharded on d_ff for training — EP is a decode-side
+    concern, DESIGN.md §4).  With ``fsdp`` every large weight additionally
+    shards one free dim over `data` (weights gather per layer in fwd/bwd)."""
+
+    def add_fsdp(spec, leaf):
+        if not fsdp or leaf.size * 2 < min_fsdp_bytes:
+            return spec
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        cand = [d for d in range(leaf.ndim)
+                if dims[d] is None and leaf.shape[d] % fsdp_size == 0
+                and leaf.shape[d] >= fsdp_size]
+        if not cand:
+            return spec
+        d = max(cand, key=lambda d: leaf.shape[d])
+        dims[d] = "data"
+        return P(*dims)
+
+    def spec_of(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        if name == "tok":
+            return P("model", None)
+        if name == "w" and "head" in names:
+            return P(None, "model")
+        if name in _REPL:
+            return P()
+        if name in _ROW:
+            if "ffn" in names and nd == 4:          # MoE wo [nb, E, F, D]
+                return P(None, None, "model", None)
+            return P(*([None] * (nd - 2)), "model", None)
+        if name in _COL:
+            if "ffn" in names and nd == 4:          # MoE wi [nb, E, D, F]
+                return P(None, None, None, "model")
+            return P(*([None] * (nd - 1)), "model")
+        if name in _VEC_COL:
+            return P(*([None] * (nd - 1)), "model")
+        raise KeyError(f"no train sharding rule for {'/'.join(names)}")
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p_, l: add_fsdp(spec_of(p_, l), l), params)
+
+
+def zero_opt_specs(param_specs, params, data_size: int, dp_axes=("data",)):
+    """ZeRO-1: shard each moment leaf additionally over the data axis on its
+    largest dim that is still unsharded and divisible; small leaves stay as
+    the param spec."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def z(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        flat = [a for d in dims if d for a in (d if isinstance(d, tuple) else (d,))]
+        if "data" in flat:              # already FSDP-sharded over data
+            return P(*dims)
+        cand = [(d, leaf.shape[d]) for d in range(leaf.ndim)
+                if dims[d] is None and leaf.shape[d] % data_size == 0
+                and leaf.shape[d] >= data_size]
+        if not cand or leaf.size < 65_536:
+            return P(*dims)
+        d = max(cand, key=lambda t: t[1])[0]
+        dims[d] = dp
+        return P(*dims)
+
+    moments = jax.tree.map(z, param_specs, params)
+    return {"mu": moments, "nu": moments, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, dp_axes=("data",)) -> dict:
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    out = {"tokens": P(dp, None), "targets": P(dp, None)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = P(dp, None, None)
+    return out
+
+
+def make_shard_fn(mesh, dp_axes=("data",)):
+    """Activation constraint callback for ``models.*.forward`` —
+    hidden states [B, S, D] are (batch over data)x(sequence over model)
+    sharded between layers (Megatron-SP analogue)."""
+    dp = (None if not dp_axes
+          else dp_axes if len(dp_axes) > 1 else dp_axes[0])
+
+    def shard(x, name):
+        if name == "hidden" and x.ndim == 3:
+            spec = P(dp, "model", None)
+        elif name == "logits" and x.ndim == 3:
+            spec = P(dp, None, "model")
+        elif name == "ssm_chunk":
+            spec = P(dp, "model", *([None] * (x.ndim - 2)))
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return shard
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

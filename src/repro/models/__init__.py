@@ -1,0 +1,33 @@
+"""Model substrate: architecture-generic init/forward dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention, encdec, layers, mla, moe, ssm, transformer
+
+
+def init_params(rng, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.init_params(rng, cfg)
+    return transformer.init_params(rng, cfg)
+
+
+def forward(cfg: ModelConfig, params, batch: dict, **kw):
+    """batch: {"tokens": [B,S]} (+ "frames" for enc-dec) -> logits."""
+    if cfg.is_encoder_decoder:
+        return encdec.forward(cfg, params, batch["frames"], batch["tokens"], **kw)
+    logits, _ = transformer.forward(cfg, params, batch["tokens"], **kw)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, **kw):
+    if cfg.is_encoder_decoder:
+        return encdec.loss_fn(cfg, params, batch["frames"], batch["tokens"],
+                              batch["targets"], **kw)
+    return transformer.loss_fn(cfg, params, batch["tokens"], batch["targets"], **kw)
+
+
+__all__ = ["init_params", "forward", "loss_fn", "attention", "encdec", "layers",
+           "mla", "moe", "ssm", "transformer"]

@@ -1,0 +1,131 @@
+"""Encoder-decoder trunk (whisper-base backbone; conv/mel frontend stubbed).
+
+The encoder consumes precomputed frame embeddings [B, S_enc, D] (stub for the
+conv1d+mel frontend, positions assumed baked in); the decoder is a standard
+pre-LN transformer with self- + cross-attention and learned positions.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import layers
+
+
+def _identity_shard(x, name):
+    return x
+
+
+def make_enc_layer(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": layers.make_norm_params(cfg, cfg.d_model),
+        "attn": attn_mod.make_attn_params(ks[0], cfg),
+        "ln2": layers.make_norm_params(cfg, cfg.d_model),
+        "mlp": layers.make_mlp_params(ks[1], cfg),
+    }
+
+
+def make_dec_layer(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": layers.make_norm_params(cfg, cfg.d_model),
+        "self_attn": attn_mod.make_attn_params(ks[0], cfg),
+        "ln_x": layers.make_norm_params(cfg, cfg.d_model),
+        "cross_attn": attn_mod.make_attn_params(ks[1], cfg),
+        "ln2": layers.make_norm_params(cfg, cfg.d_model),
+        "mlp": layers.make_mlp_params(ks[2], cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": layers.make_embed_params(ks[2], cfg),
+        "enc_blocks": jax.vmap(lambda k: make_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": layers.make_norm_params(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: make_dec_layer(k, cfg))(dec_keys),
+        "final_norm": layers.make_norm_params(cfg, cfg.d_model),
+        "head": layers.make_head_params(ks[3], cfg),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array, *,
+           shard: Callable = _identity_shard) -> jax.Array:
+    """frames: [B, S_enc, D] stub embeddings -> encoder states [B, S_enc, D]."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = shard(frames, "hidden")
+
+    def block_fn(x, bp):
+        h = layers.apply_norm(cfg, bp["ln1"], x)
+        x = x + attn_mod.self_attention(cfg, bp["attn"], h, positions,
+                                        causal=False)
+        h = layers.apply_norm(cfg, bp["ln2"], x)
+        x = shard(x + layers.apply_mlp(cfg, bp["mlp"], h), "hidden")
+        return x, None
+
+    x, _ = jax.lax.scan(block_fn, x, params["enc_blocks"])
+    return layers.apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   enc_states: jax.Array, *, collect_kv: bool = False,
+                   shard: Callable = _identity_shard):
+    """Teacher-forced decoder pass. tokens [B, S_dec] -> logits.
+
+    With ``collect_kv`` also returns per-layer (self_kv, cross_kv) caches.
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = layers.embed_tokens(params["embed"], tokens)
+    x = x + params["embed"]["pos_dec"][:S][None, :, :].astype(x.dtype)
+    x = shard(x, "hidden")
+
+    def block_fn(x, bp):
+        aux = {}
+        h = layers.apply_norm(cfg, bp["ln1"], x)
+        q, k, v = attn_mod.qkv_proj(cfg, bp["self_attn"], h, positions)
+        if collect_kv:
+            aux["self_kv"] = (k, v)
+        from ..kernels import ops
+        o = ops.attention(q, k, v, causal=True)
+        x = x + o.reshape(B, S, -1) @ bp["self_attn"]["wo"]
+        h = layers.apply_norm(cfg, bp["ln_x"], x)
+        mem_k, mem_v = attn_mod.encoder_kv(cfg, bp["cross_attn"], enc_states)
+        if collect_kv:
+            aux["cross_kv"] = (mem_k, mem_v)
+        x = x + attn_mod.cross_attention(cfg, bp["cross_attn"], h, mem_k, mem_v)
+        h = layers.apply_norm(cfg, bp["ln2"], x)
+        x = shard(x + layers.apply_mlp(cfg, bp["mlp"], h), "hidden")
+        return x, (aux if collect_kv else None)
+
+    x, caches = jax.lax.scan(block_fn, x, params["dec_blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.apply_head(cfg, params["head"], params["embed"], x)
+    return shard(logits, "logits"), caches
+
+
+def forward(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, *, shard: Callable = _identity_shard,
+            remat: str = "none"):
+    """Full enc-dec pass -> logits [B, S_dec, Vp]."""
+    enc = encode(cfg, params, frames, shard=shard)
+    logits, _ = decode_forward(cfg, params, tokens, enc, shard=shard)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, targets: jax.Array, *,
+            shard: Callable = _identity_shard, remat: str = "none") -> jax.Array:
+    logits = forward(cfg, params, frames, tokens, shard=shard, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,185 @@
+"""Mamba-2 / SSD (state-space duality) blocks.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060 §6) in pure JAX:
+intra-chunk quadratic (attention-like, MXU-friendly matmuls) + inter-chunk
+linear recurrence over chunk states via ``lax.scan``.  Decode is the exact
+single-step recurrence over (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+
+def make_ssm_params(rng, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    conv_dim = din + 2 * ns
+    ks = jax.random.split(rng, 4)
+    return {
+        # order: [z(din) | x(din) | B(ns) | C(ns) | dt(nh)]
+        "in_proj": layers.dense_init(ks[0], (D, 2 * din + 2 * ns + nh)),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),     # small initial dt
+        "norm": jnp.ones((din,), jnp.float32),
+        "out_proj": layers.dense_init(ks[3], (din, D)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z = proj[..., :din]
+    xin = proj[..., din:2 * din]
+    B = proj[..., 2 * din:2 * din + ns]
+    C = proj[..., 2 * din + ns:2 * din + 2 * ns]
+    dt = proj[..., 2 * din + 2 * ns:]
+    return z, xin, B, C, dt
+
+
+def _causal_conv(cfg: ModelConfig, p: dict, u: jax.Array) -> jax.Array:
+    """u: [B, S, conv_dim] depthwise causal conv, width ssm_conv_width."""
+    W = cfg.ssm_conv_width
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * p["conv_w"][i].astype(u.dtype)
+              for i in range(W))
+    return jax.nn.silu(out + p["conv_b"].astype(u.dtype))
+
+
+def ssd_chunked(cfg: ModelConfig, xh, dt, A, Bm, Cm, init_state=None,
+                shard=lambda x, name: x):
+    """Chunked SSD scan.
+
+    xh: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus); A: [nh] (negative);
+    Bm/Cm: [B, S, ns].  Returns y [B, S, nh, hd], final_state [B, nh, hd, ns].
+    """
+    Bsz, S, nh, hd = xh.shape
+    ns = Bm.shape[-1]
+    cs = min(cfg.ssm_chunk, S)
+    S_pad = ((S + cs - 1) // cs) * cs
+    nc = S_pad // cs
+
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    if S_pad != S:
+        # dt=0 padding steps are identity for the recurrence (decay=1, upd=0)
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        xf = jnp.pad(xf, pad + ((0, 0),))
+        dtf = jnp.pad(dtf, pad)
+        Bf = jnp.pad(Bf, pad)
+        Cf = jnp.pad(Cf, pad)
+
+    # reshape into chunks; constrain the chunk dim across `model`
+    # (sequence-parallel SSD: the quadratic intra-chunk tensors dominate
+    # prefill memory on wide-head hybrids)
+    xc = shard(xf.reshape(Bsz, nc, cs, nh, hd), "ssm_chunk")
+    dtc = shard(dtf.reshape(Bsz, nc, cs, nh), "ssm_chunk")
+    Bc = shard(Bf.reshape(Bsz, nc, cs, ns), "ssm_chunk")
+    Cc = shard(Cf.reshape(Bsz, nc, cs, ns), "ssm_chunk")
+
+    da = dtc * A                                           # [B, nc, cs, nh]
+    a_cum = jnp.cumsum(da, axis=2)                          # within-chunk cumsum
+    a_tot = a_cum[:, :, -1, :]                              # [B, nc, nh]
+
+    # intra-chunk quadratic term: L[i,j] = exp(a_i - a_j) for i >= j
+    li = a_cum[:, :, :, None, :]                            # [B,nc,cs,1,nh] (i)
+    lj = a_cum[:, :, None, :, :]                            # [B,nc,1,cs,nh] (j)
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    CB = shard(jnp.einsum("bnis,bnjs->bnij", Cc, Bc), "ssm_chunk")
+    scores = shard(CB[..., None] * L, "ssm_chunk")          # [B,nc,cs,cs,nh]
+    xdt = xc * dtc[..., None]                               # [B,nc,cs,nh,hd]
+    y_intra = shard(jnp.einsum("bnijh,bnjhd->bnihd", scores, xdt), "ssm_chunk")
+
+    # chunk boundary states: S_n = sum_j exp(a_tot - a_j) dt_j B_j (x_j)^T
+    decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)    # [B,nc,cs,nh]
+    states = jnp.einsum("bnjs,bnjh,bnjhd->bnhds",
+                        Bc, dtc * decay_to_end, xc)         # [B,nc,nh,hd,ns]
+
+    # inter-chunk recurrence over nc (cheap scan)
+    h0 = (jnp.zeros((Bsz, nh, hd, ns), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(h, inp):
+        st, at = inp                                        # [B,nh,hd,ns], [B,nh]
+        h_next = h * jnp.exp(at)[:, :, None, None] + st
+        return h_next, h                                    # emit state BEFORE chunk
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_tot, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # [B,nc,nh,hd,ns]
+
+    # inter-chunk contribution: y_i += C_i . (exp(a_cum_i) * h_prev)
+    y_inter = jnp.einsum("bnis,bnih,bnhds->bnihd", Cc, jnp.exp(a_cum), h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, nh, hd)[:, :S]
+    return y.astype(xh.dtype), h_final
+
+
+def ssm_block(cfg: ModelConfig, p: dict, x: jax.Array, init=None,
+              shard=lambda x, name: x):
+    """Full Mamba-2 block: x [B, S, D] -> (y [B, S, D], (conv_state, ssm_state))."""
+    B, S, D = x.shape
+    din, ns, nh, hd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                       cfg.ssm_head_dim)
+    proj = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = _split_proj(cfg, proj)
+    u = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = u[:, -(cfg.ssm_conv_width - 1):, :]        # for decode continuation
+    u = _causal_conv(cfg, p, u)
+    xin, Bm, Cm = (u[..., :din], u[..., din:din + ns], u[..., din + ns:])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, S, nh, hd)
+    y, h_final = ssd_chunked(cfg, xh, dtp, A, Bm, Cm, init_state=init,
+                             shard=shard)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * jnp.reshape(
+        p["D"], (1, 1, nh, 1)).astype(y.dtype)
+    y = y.reshape(B, S, din)
+    y = layers.rms_norm_vec(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], (conv_state, h_final)
+
+
+def ssm_decode_step(cfg: ModelConfig, p: dict, x: jax.Array, conv_state, ssm_state):
+    """Single-token decode. x: [B, D]; conv_state [B, W-1, conv_dim];
+    ssm_state [B, nh, hd, ns].  Returns (y [B, D], new_conv, new_ssm)."""
+    B, D = x.shape
+    din, ns, nh, hd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                       cfg.ssm_head_dim)
+    W = cfg.ssm_conv_width
+    proj = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = _split_proj(cfg, proj)
+    u_new = jnp.concatenate([xin, Bm, Cm], axis=-1)          # [B, conv_dim]
+    window = jnp.concatenate([conv_state, u_new[:, None, :]], axis=1)  # [B, W, cd]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"]).astype(x.dtype)
+    xin = conv_out[..., :din]
+    Bm = conv_out[..., din:din + ns].astype(jnp.float32)
+    Cm = conv_out[..., din + ns:].astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dtp * A)                                 # [B, nh]
+    upd = jnp.einsum("bs,bh,bhd->bhds", Bm, dtp, xh)         # [B,nh,hd,ns]
+    new_state = ssm_state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bs,bhds->bhd", Cm, new_state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, din).astype(x.dtype)
+    y = layers.rms_norm_vec(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], window[:, 1:, :], new_state.astype(ssm_state.dtype)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                      cfg.ssm_d_inner + 2 * cfg.ssm_state), jnp.bfloat16)
+    state = jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), dtype)
+    return conv, state

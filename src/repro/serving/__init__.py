@@ -1,0 +1,4 @@
+"""Serving substrate: workloads, latency model, simulator, metrics, engine."""
+from . import latency_model, metrics, simulator, workload
+
+__all__ = ["latency_model", "metrics", "simulator", "workload"]

@@ -1,0 +1,204 @@
+"""NanoCP real-execution decode engine (§3 lifecycle, on an actual JAX mesh).
+
+Drives the full stack end to end: ENQUEUE -> dual-balanced scheduling ->
+MIGRATE/TRANSFER (prefill KV -> DCP placement) -> DISPATCH (routing-table
+lowering) -> LOOKUP/REPLAY (AOT executable cache) -> the 4-phase DCP decode
+step -> sampling -> finish.  Used by examples and integration tests with
+tiny models on CPU host-device meshes; the same code lowers for the
+production mesh in the dry-run.
+
+Prefill executes on the reference forward path (``models.transformer``) —
+the paper assumes prefill-decode disaggregation with external prefill (§3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import dcp, migrate, routing
+from ..core.aot import AOTGraphEngine
+from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
+from ..core.scheduler import BaseScheduler, DualBalancedScheduler
+from ..core.state import ClusterState, Request
+from ..models import transformer
+
+
+@dataclass
+class GenResult:
+    rid: int
+    prompt: list
+    tokens: list = field(default_factory=list)
+
+
+class NanoCPEngine:
+    def __init__(self, cfg: ModelConfig, params, mesh, *,
+                 num_instances: int, instances_per_node: int,
+                 kv_capacity_tokens: int, page_size: int = 16,
+                 tp: int | None = None, backend: str = "routed",
+                 scheduler: BaseScheduler | None = None,
+                 buckets: CPBuckets = DEFAULT_BUCKETS,
+                 shape_buckets: ShapeBuckets | None = None,
+                 eos_token: int | None = None,
+                 max_slots_per_instance: int = 16):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = tp or mesh.shape["model"]
+        self.backend = backend
+        self.eos = eos_token
+        self.cluster = ClusterState(num_instances=num_instances,
+                                    instances_per_node=instances_per_node,
+                                    kv_capacity_tokens=kv_capacity_tokens,
+                                    page_size=page_size)
+        is_ssm_family = cfg.family in ("ssm", "hybrid")
+        self.scheduler = scheduler or DualBalancedScheduler(
+            buckets=buckets, allow_rebalance=not is_ssm_family,
+            max_batch_per_instance=max_slots_per_instance,
+            has_kv=cfg.has_attention)
+        # per-slot recurrent state (SSM/hybrid) pins the slot dimension of
+        # the serve state, so those archs use ONE fixed M bucket
+        if shape_buckets is None and is_ssm_family:
+            shape_buckets = ShapeBuckets(m_buckets=(max_slots_per_instance,),
+                                         window=instances_per_node)
+        self.shape_buckets = shape_buckets or ShapeBuckets(
+            window=instances_per_node)
+        self.params = params
+        self.decode_params = jax.jit(
+            lambda p: dcp.to_decode_params(cfg, p, self.tp))(params)
+        self._dims0 = dcp.DecodeDims(
+            M=max_slots_per_instance, S=0, N=1, MB=4, W=instances_per_node,
+            num_frames=self.cluster.page_table.frames_per_instance + 1,
+            page=page_size, data_size=num_instances, tp=self.tp,
+            backend=backend)
+        self.state = dcp.init_serve_state(cfg, self._dims0, num_instances,
+                                          dtype=jnp.float32)
+        self.aot = AOTGraphEngine(self._build_step)
+        self.next_tok: dict = {}
+        self.results: dict = {}
+        self._prompts: dict = {}
+        self._pending_prefill: list = []
+        self.finished: list = []
+        self.iterations = 0
+
+    # ------------------------------------------------------------------ #
+    def add_request(self, prompt_tokens, max_new_tokens: int,
+                    now: float = 0.0) -> int:
+        rid = len(self._prompts)
+        self._prompts[rid] = list(map(int, prompt_tokens))
+        self.cluster.enqueue(Request(rid=rid, prompt_len=len(prompt_tokens),
+                                     max_new_tokens=max_new_tokens,
+                                     arrival=now), now)
+        self.results[rid] = GenResult(rid, self._prompts[rid])
+        return rid
+
+    # ------------------------------------------------------------------ #
+    def _build_step(self, key):
+        M, S, MB, W = key
+        N = M + (W - 1) * S
+        d = dcp.DecodeDims(M=M, S=S, N=N, MB=MB, W=W,
+                           num_frames=self._dims0.num_frames,
+                           page=self._dims0.page,
+                           data_size=self.cluster.num_instances, tp=self.tp,
+                           backend=self.backend)
+        I = self.cluster.num_instances
+        tbl_spec = {
+            "slot_rid": (I, M), "slot_token": (I, M), "slot_pos": (I, M),
+            "slot_active": (I, M), "append_frame": (I, M),
+            "append_off": (I, M), "q_send_idx": (I, W - 1, S),
+            "q_recv_slot": (I, W - 1, S), "work_src": (I, N),
+            "work_bt": (I, N, MB), "work_len": (I, N),
+            "ret_send_idx": (I, W - 1, S), "merge_src": (I, M, W),
+            "merge_round": (I, M, W), "merge_peer_row": (I, M, W),
+        }
+        tbl_sds = {k: jax.ShapeDtypeStruct(v, jnp.int32)
+                   for k, v in tbl_spec.items()}
+        p_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.decode_params)
+        s_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        fn = dcp.make_serve_step(self.cfg, d, self.mesh, p_sds, s_sds,
+                                 tbl_sds, donate=False)
+        return fn, (p_sds, s_sds, tbl_sds)
+
+    # ------------------------------------------------------------------ #
+    def _prefill(self, req: Request) -> None:
+        toks = jnp.asarray(self._prompts[req.rid])[None, :]
+        logits, caches = transformer.forward(self.cfg, self.params, toks,
+                                             collect_kv=True)
+        first = int(jnp.argmax(logits[0, -1]))
+        self.next_tok[req.rid] = first
+        # the FIRST generated token is sampled from the prefill logits; the
+        # decode loop then extends from it
+        self.results[req.rid].tokens.append(first)
+        state_np = {k: np.array(v) for k, v in self.state.items()}
+        kv_layers, ssm_layers = [], []
+        for bi in range(self.cfg.num_blocks):
+            for li, kind in enumerate(self.cfg.block_pattern()):
+                aux = caches[li]
+                if kind["mixer"] == "attn":
+                    a, b = aux["kv"]
+                    kv_layers.append((np.asarray(a[bi, 0]),
+                                      np.asarray(b[bi, 0])))
+                else:
+                    cs, hs = aux["ssm"]
+                    ssm_layers.append((np.asarray(cs[bi, 0]),
+                                       np.asarray(hs[bi, 0])))
+        if kv_layers:
+            migrate.load_prefill_kv(self.cfg, self.cluster, self._dims0,
+                                    state_np, req.rid, kv_layers)
+        if ssm_layers:
+            inst, slot = self.cluster.slot_map[req.rid]
+            migrate.load_prefill_ssm(self.cfg, state_np, inst, slot,
+                                     ssm_layers)
+        self.state = {k: jnp.asarray(v) for k, v in state_np.items()}
+        kv_layers.clear()
+
+    # ------------------------------------------------------------------ #
+    def step(self, now: float = 0.0) -> list:
+        """One scheduling+decode iteration; returns requests finished now."""
+        plan = self.scheduler.schedule(self.cluster, now)
+        for req in plan.admitted:                      # MIGRATE + TRANSFER
+            self._prefill(req)
+        if not self.cluster.active:
+            return []
+        tbl = routing.lower_plan(self.cluster, plan,
+                                 buckets=self.shape_buckets,
+                                 append_tokens=self.cfg.has_attention,
+                                 next_tokens=self.next_tok)
+        key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
+        # re-pad block tables to the quantised MB bucket
+        if key[2] != tbl.MB:
+            pad = key[2] - tbl.MB
+            tbl.work_bt = np.pad(tbl.work_bt, ((0, 0), (0, 0), (0, pad)))
+        fn = self.aot.lookup(tbl.M, tbl.S, tbl.MB, tbl.W)
+        tbl_dev = routing.as_device_arrays(tbl)
+        self.state, toks, _ = fn(self.decode_params, self.state, tbl_dev)
+        toks = np.asarray(toks)
+        self.iterations += 1
+
+        done = []
+        for rid in list(self.cluster.active):
+            req = self.cluster.active[rid]
+            i, b = self.cluster.slot_map[rid]
+            t = int(toks[i, b])
+            self.results[rid].tokens.append(t)
+            self.next_tok[rid] = t
+            req.generated += 1
+            req.token_times.append(now)
+            if (len(self.results[rid].tokens) >= req.max_new_tokens
+                    or (self.eos is not None and t == self.eos)):
+                done.append(req)
+        for req in done:
+            self.cluster.finish(req, now)
+            self.finished.append(req)
+        return done
+
+    def run(self, max_iters: int = 1000) -> dict:
+        it = 0
+        while (self.cluster.active or self.cluster.waiting) and it < max_iters:
+            self.step(float(it))
+            it += 1
+        return self.results

@@ -1,0 +1,167 @@
+"""Analytic per-phase decode latency model (TPU v5e targets).
+
+The cluster simulator and the Bucket(len) offline-profiling sweep both run on
+this model.  It is calibrated to the same hardware constants the roofline
+analysis uses (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per chip)
+and to the per-phase structure of the paper's Figure 4/13 decomposition:
+
+  attention  — memory-bound KV sweep + per-row fixed overhead (Fig. 3a)
+  dispatch/combine — per-rank all-to-all scaling with batch (Fig. 3b)
+  DCP Q/Res routing — (W-1) rotation hops of bucketed small buffers
+  expert FFN / dense FFN — compute-bound
+
+All times are SECONDS for ONE decode layer unless noted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # B/s / chip
+    link_bw: float = 50e9             # B/s / ICI link
+    chips_per_instance: int = 16      # `model` axis within a DP instance
+    hop_latency: float = 2e-6         # per collective hop (alpha)
+    per_row_overhead: float = 1.5e-6  # decode attention fixed cost per row
+    kernel_base: float = 4e-6         # kernel launch / fusion base cost
+
+
+@dataclass
+class LatencyModel:
+    cfg: ModelConfig
+    hw: HardwareModel = HardwareModel()
+    ep_size: int = 32                 # instances sharing the expert pool
+
+    # ---------------- per-layer weight footprints (bf16 bytes) ----------
+    @property
+    def attn_weight_bytes(self) -> float:
+        c = self.cfg
+        if not c.has_attention:
+            return 0.0
+        if c.is_mla:
+            p = (c.d_model * (c.q_lora_rank or 0)
+                 + (c.q_lora_rank or c.d_model) * c.num_heads
+                 * (c.qk_nope_head_dim + c.qk_rope_head_dim)
+                 + c.d_model * (c.kv_lora_rank + c.qk_rope_head_dim)
+                 + c.kv_lora_rank * c.num_heads
+                 * (c.qk_nope_head_dim + c.v_head_dim)
+                 + c.num_heads * c.v_head_dim * c.d_model)
+        else:
+            p = c.d_model * (c.num_heads + 2 * c.num_kv_heads) * c.head_dim_ \
+                + c.num_heads * c.head_dim_ * c.d_model
+        return 2.0 * p
+
+    @property
+    def expert_weight_bytes(self) -> float:
+        return 2.0 * 3 * self.cfg.d_model * self.cfg.moe_d_ff_
+
+    @property
+    def dense_ffn_weight_bytes(self) -> float:
+        mult = 3 if self.cfg.act == "silu" else 2
+        return 2.0 * mult * self.cfg.d_model * self.cfg.d_ff
+
+    def _sweep(self, nbytes: float) -> float:
+        """HBM time to stream ``nbytes`` across the instance's chips."""
+        return nbytes / (self.hw.hbm_bw * self.hw.chips_per_instance)
+
+    # ---------------- per-token constants ----------------
+    @property
+    def kv_bytes_per_token(self) -> float:
+        """KV bytes per token per attention layer (bf16)."""
+        c = self.cfg
+        if c.is_mla:
+            return 2.0 * (c.kv_lora_rank + c.qk_rope_head_dim)
+        return 2.0 * 2 * c.num_kv_heads * c.head_dim_
+
+    @property
+    def q_row_bytes(self) -> float:
+        c = self.cfg
+        if c.is_mla:
+            return 2.0 * c.num_heads * (c.kv_lora_rank + c.qk_rope_head_dim)
+        return 2.0 * c.num_heads * c.head_dim_
+
+    # ---------------- phases (one layer) ----------------
+    def attention_time(self, kv_tokens: float, rows: float) -> float:
+        """Paged decode attention over ``kv_tokens`` resident tokens with
+        ``rows`` work rows on one instance (Fig. 3a shape).  Includes the
+        per-layer attention weight sweep (decode is bandwidth-bound)."""
+        sweep = kv_tokens * self.kv_bytes_per_token / (
+            self.hw.hbm_bw * self.hw.chips_per_instance)
+        return (self.hw.kernel_base + self._sweep(self.attn_weight_bytes)
+                + sweep + rows * self.hw.per_row_overhead)
+
+    @property
+    def inst_link_bw(self) -> float:
+        """Instance-to-instance bandwidth: every chip of the instance moves
+        its own model-shard slice over its own ICI links in parallel."""
+        return self.hw.link_bw * self.hw.chips_per_instance
+
+    def a2a_time(self, batch: float) -> float:
+        """One all-to-all phase (dispatch OR combine) for ``batch`` tokens on
+        the sending instance (Fig. 3b shape)."""
+        if not self.cfg.is_moe or batch <= 0:
+            return 0.0
+        bytes_ = batch * self.cfg.num_experts_per_tok * self.cfg.d_model * 2
+        return self.hw.hop_latency * 2 + bytes_ / self.inst_link_bw
+
+    def cp_route_time(self, rounds: int, rows: float) -> float:
+        """Q-routing or Res-routing: ``rounds`` rotation hops carrying
+        ``rows`` bucketed rows each."""
+        if rounds <= 0 or rows <= 0:
+            return 0.0
+        return rounds * (self.hw.hop_latency
+                         + rows * self.q_row_bytes / self.inst_link_bw)
+
+    def dense_cp_route_time(self, group: int, batch: float) -> float:
+        """Helix/NCCL-style uniform CP: all-gather the full batch to the
+        group (both directions)."""
+        if group <= 1:
+            return 0.0
+        bytes_ = (group - 1) * batch * self.q_row_bytes
+        return (group - 1) * self.hw.hop_latency + bytes_ / self.inst_link_bw
+
+    def ffn_time(self, tokens: float) -> float:
+        """Dense FFN or per-instance expert compute for ``tokens`` tokens
+        (``tokens`` = expert-tokens received on the instance for MoE).
+        max(compute, weight sweep): decode batches are weight-BW-bound."""
+        c = self.cfg
+        if c.is_moe:
+            flops = tokens * 6 * c.d_model * c.moe_d_ff_
+            e_local = max(1, c.num_experts // self.ep_size)
+            touched = min(e_local, max(tokens, 1.0))
+            wbytes = touched * self.expert_weight_bytes
+            if c.num_shared_experts:
+                flops += tokens * 6 * c.d_model * c.moe_d_ff_ * c.num_shared_experts
+                wbytes += c.num_shared_experts * self.expert_weight_bytes
+        else:
+            flops = tokens * 6 * c.d_model * c.d_ff
+            wbytes = self.dense_ffn_weight_bytes
+        return self.hw.kernel_base + max(
+            flops / (self.hw.peak_flops * self.hw.chips_per_instance),
+            self._sweep(wbytes))
+
+    def qkv_time(self, tokens: float) -> float:
+        c = self.cfg
+        if c.is_mla:
+            per_tok = 2 * (c.d_model * (c.q_lora_rank or c.d_model)
+                           + c.kv_lora_rank * c.num_heads
+                           * (c.qk_nope_head_dim + c.v_head_dim))
+        else:
+            per_tok = 2 * c.d_model * (c.num_heads + 2 * c.num_kv_heads) \
+                * c.head_dim_
+        return self.hw.kernel_base + tokens * per_tok / (
+            self.hw.peak_flops * self.hw.chips_per_instance)
+
+    # ---------------- composite: DCP attention for one request ----------
+    def dcp_attention_latency(self, length: int, cp: int) -> float:
+        """Offline-profiling objective for Bucket(len) derivation: one
+        request's attention latency at CP degree ``cp`` (shard sweep +
+        Q/Res routing + merge)."""
+        shard = self.attention_time(length / cp, 1.0)
+        route = 2 * self.cp_route_time(cp - 1, 1.0)     # Q out + results back
+        merge = cp * 0.2e-6
+        return shard + route + merge

@@ -1,0 +1,56 @@
+"""Serving metrics: TPOT, SLO attainment, tail latency, imbalance (§6)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def tpot(req) -> float:
+    """Normalized time-per-output-token: (finish - decode-ready arrival) /
+    tokens.  Includes queueing delay, so head-of-line blocking shows up in
+    the SLO attainment exactly as in the paper's Fig. 12/14."""
+    if req.generated <= 0 or req.finish_time < 0:
+        return float("inf")
+    return (req.finish_time - req.arrival) / req.generated
+
+
+def slo_attainment(requests, slo: float = 0.05) -> float:
+    ts = [tpot(r) for r in requests]
+    if not ts:
+        return 0.0
+    return float(np.mean([t <= slo for t in ts]))
+
+
+def p99_tpot(requests) -> float:
+    ts = [tpot(r) for r in requests if np.isfinite(tpot(r))]
+    return float(np.percentile(ts, 99)) if ts else float("inf")
+
+
+def mean_tpot(requests) -> float:
+    ts = [tpot(r) for r in requests if np.isfinite(tpot(r))]
+    return float(np.mean(ts)) if ts else float("inf")
+
+
+def imbalance_pct(values) -> float:
+    """(max/mean - 1) * 100; the paper's per-instance imbalance metric."""
+    v = np.asarray(values, dtype=np.float64)
+    if v.size == 0 or v.mean() <= 0:
+        return 0.0
+    return float((v.max() / v.mean() - 1.0) * 100.0)
+
+
+def max_sustainable_rate(run_fn, rates, slo: float = 0.05,
+                         target: float = 0.99) -> tuple[float, dict]:
+    """Scan ``rates`` (ascending); return the largest rate whose run meets
+    ``target`` SLO attainment, plus per-rate stats.  ``run_fn(rate)`` must
+    return a list of finished requests."""
+    best, stats = 0.0, {}
+    for rate in rates:
+        reqs = run_fn(rate)
+        att = slo_attainment(reqs, slo)
+        stats[rate] = {"attainment": att, "p99_tpot": p99_tpot(reqs),
+                       "mean_tpot": mean_tpot(reqs), "finished": len(reqs)}
+        if att >= target:
+            best = rate
+        else:
+            break
+    return best, stats

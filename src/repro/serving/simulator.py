@@ -1,0 +1,197 @@
+"""Discrete-event cluster simulator for decode serving (§6 reproduction).
+
+The CONTROL PLANE is the real NanoCP code (scheduler, page table, WaterFill,
+bucketing); only the data plane's per-iteration latency is analytic
+(``latency_model``, roofline-calibrated).  This is how the paper's
+end-to-end figures (12-18) are reproduced without 32xH200.
+
+Lock-step DP-EP semantics: within each decode layer every instance must
+finish its attention path before the dispatch all-to-all completes, and the
+combine blocks on the slowest expert rank — so each phase contributes its
+per-instance MAX (the straggler effect of Fig. 4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.bucketing import ShapeBuckets
+from ..core.scheduler import BaseScheduler, UniformCPScheduler
+from ..core.state import ClusterState, Request
+from .latency_model import LatencyModel
+from .workload import Workload
+
+
+@dataclass
+class PhaseBreakdown:
+    """Per-iteration, per-layer phase maxima (seconds)."""
+    attention: float = 0.0
+    cp_comm: float = 0.0
+    dispatch_combine: float = 0.0
+    ffn: float = 0.0
+    other: float = 0.0
+
+    @property
+    def layer_total(self) -> float:
+        return (self.attention + self.cp_comm + self.dispatch_combine
+                + self.ffn + self.other)
+
+
+@dataclass
+class SimResult:
+    finished: list = field(default_factory=list)
+    iterations: int = 0
+    sim_time: float = 0.0
+    # time series for the balance / HoL analyses
+    batch_series: list = field(default_factory=list)       # [iters, I]
+    kv_series: list = field(default_factory=list)          # [iters, I]
+    attn_lat_series: list = field(default_factory=list)    # [iters, I] per-layer
+    a2a_lat_series: list = field(default_factory=list)     # [iters, I]
+    free_mem_series: list = field(default_factory=list)    # [iters] frames free
+    hol_demand_series: list = field(default_factory=list)  # [iters] frames wanted
+    phase: list = field(default_factory=list)              # [iters] PhaseBreakdown
+    cp_degree_hist: dict = field(default_factory=dict)     # degree -> req-iters
+    sched_wall: float = 0.0                                # real control-plane s
+
+
+class ClusterSimulator:
+    def __init__(self, cfg: ModelConfig, scheduler: BaseScheduler,
+                 num_instances: int = 32, instances_per_node: int = 8,
+                 kv_capacity_tokens: int = 1_000_000, page_size: int = 64,
+                 latency: LatencyModel | None = None, multi_step: int = 1,
+                 sched_overhead: float = 150e-6):
+        self.cfg = cfg
+        self.scheduler = scheduler
+        self.latency = latency or LatencyModel(cfg)
+        self.multi_step = multi_step
+        self.sched_overhead = sched_overhead
+        self.cluster = ClusterState(num_instances=num_instances,
+                                    instances_per_node=instances_per_node,
+                                    kv_capacity_tokens=kv_capacity_tokens,
+                                    page_size=page_size)
+        self.buckets = ShapeBuckets(
+            m_buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512),
+            s_buckets=(0, 1, 2, 4, 8, 16, 32, 64),
+            window=instances_per_node)
+        self._uniform_cp = isinstance(scheduler, UniformCPScheduler)
+
+    # ------------------------------------------------------------------ #
+    def _iteration_time(self, plan) -> tuple[float, PhaseBreakdown,
+                                             np.ndarray, np.ndarray]:
+        lm, cl = self.latency, self.cluster
+        I = cl.num_instances
+        W = cl.instances_per_node
+        batch = plan.batch_sizes().astype(float)
+        rows = np.array([len(p.work) for p in plan.instances], float)
+        kv = plan.kv_tokens().astype(float)
+
+        # per-instance cross-CP traffic (rounds used x bucketed rows),
+        # counted in ONE pass over the work lists
+        sends = np.zeros(I)
+        for p_ in plan.instances:
+            for (_rid, m, _toks) in p_.work:
+                if m != p_.instance:
+                    sends[m] += 1
+        attn_t = np.zeros(I)
+        cp_t = np.zeros(I)
+        for s in range(I):
+            if self._uniform_cp:
+                group = self.scheduler.cp
+                cp_t[s] = 2 * lm.dense_cp_route_time(group, batch[s])
+            elif sends[s] > 0:
+                sh = self.buckets.round_s(
+                    max(1, int(np.ceil(sends[s] / max(W - 1, 1)))))
+                cp_t[s] = 2 * lm.cp_route_time(W - 1, sh)
+            attn_t[s] = lm.qkv_time(batch[s]) + lm.attention_time(kv[s], rows[s])
+
+        a2a_t = np.array([lm.a2a_time(b) for b in batch])
+        # balanced-expert assumption: each instance's experts see the global
+        # token share (expert-level imbalance is orthogonal, §2.2)
+        tokens_per_inst = batch.sum() * max(self.cfg.num_experts_per_tok, 1) / I
+        ffn_t = lm.ffn_time(tokens_per_inst if self.cfg.is_moe else batch.max())
+
+        ph = PhaseBreakdown(
+            attention=float(attn_t.max(initial=0.0)),
+            cp_comm=float(cp_t.max(initial=0.0)),
+            dispatch_combine=float(2 * a2a_t.max(initial=0.0)),
+            ffn=float(ffn_t),
+            other=float(lm.hw.kernel_base * 4),
+        )
+        n_layers = self.cfg.num_layers
+        t_iter = n_layers * ph.layer_total + self.sched_overhead / self.multi_step
+        return t_iter, ph, attn_t + cp_t, 2 * a2a_t
+
+    # ------------------------------------------------------------------ #
+    def run(self, workload: Workload, horizon: float | None = None,
+            failure_events: list | None = None) -> SimResult:
+        """failure_events: optional [(time, instance), ...] — fault injection."""
+        import time as _time
+        res = SimResult()
+        cl = self.cluster
+        arrivals = sorted(workload.requests, key=lambda r: r.arrival)
+        ai = 0
+        failures = sorted(failure_events or [])
+        fi = 0
+        now = 0.0
+        horizon = horizon or float("inf")
+
+        while now < horizon:
+            # fault injection
+            while fi < len(failures) and failures[fi][0] <= now:
+                cl.fail_instance(failures[fi][1])
+                fi += 1
+            # admit arrivals whose (post-prefill) ready time has passed
+            while ai < len(arrivals) and arrivals[ai].arrival <= now:
+                tr = arrivals[ai]
+                cl.enqueue(Request(rid=tr.rid, prompt_len=tr.prompt_len,
+                                   max_new_tokens=tr.max_new_tokens,
+                                   arrival=tr.arrival), now)
+                ai += 1
+            t0 = _time.perf_counter()
+            plan = self.scheduler.schedule(cl, now)
+            res.sched_wall += _time.perf_counter() - t0
+            if not cl.active:
+                if ai < len(arrivals):
+                    now = max(now, arrivals[ai].arrival)
+                    continue
+                break
+
+            t_iter, ph, attn_lat, a2a_lat = self._iteration_time(plan)
+            # head-of-line bookkeeping
+            res.free_mem_series.append(cl.page_table.total_free_frames())
+            if cl.waiting:
+                head = cl.waiting[0]
+                res.hol_demand_series.append(
+                    cl.page_table.pages_needed(head.length))
+            else:
+                res.hol_demand_series.append(0)
+            res.batch_series.append(plan.batch_sizes())
+            res.kv_series.append(plan.kv_tokens())
+            res.attn_lat_series.append(attn_lat)
+            res.a2a_lat_series.append(a2a_lat)
+            res.phase.append(ph)
+            for r in cl.active.values():
+                d = r.cp_degree
+                res.cp_degree_hist[d] = res.cp_degree_hist.get(d, 0) + 1
+
+            # run ``multi_step`` decode iterations under this plan
+            for _ in range(self.multi_step):
+                now += t_iter
+                res.iterations += 1
+                done = []
+                for r in cl.active.values():
+                    r.generated += 1
+                    r.token_times.append(now)
+                    if r.done:
+                        done.append(r)
+                for r in done:
+                    cl.finish(r, now)
+                    res.finished.append(r)
+                if not cl.active:
+                    break
+            if ai >= len(arrivals) and not cl.active and not cl.waiting:
+                break
+        res.sim_time = now
+        return res

@@ -1,0 +1,80 @@
+"""Synthetic variable-length workload traces (§2.1, Table 1).
+
+Reproduces the paper's evaluation mix: ShareGPT-4o-like short conversational
+requests blended with GitHub-Issue-like long-context requests at a given
+long-request ratio (1% / 5% in the paper), with Poisson arrivals.  Interval
+shares follow Table 1; lengths inside an interval are log-uniform.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Table 1 interval shares: (lo, hi, probability)
+SHAREGPT_4O = [(64, 1_000, 0.857), (1_000, 10_000, 0.107),
+               (10_000, 100_000, 0.035)]
+GITHUB_ISSUE = [(100_000, 500_000, 0.6506), (500_000, 1_000_000, 0.3494)]
+OPENROUTER = [(64, 1_000, 0.3182), (1_000, 10_000, 0.5008),
+              (10_000, 100_000, 0.1642), (100_000, 500_000, 0.0167)]
+
+DATASETS = {"sharegpt4o": SHAREGPT_4O, "github_issue": GITHUB_ISSUE,
+            "openrouter": OPENROUTER}
+
+
+def _sample_interval(rng: np.random.Generator, table) -> int:
+    ps = np.array([p for _, _, p in table])
+    ps = ps / ps.sum()
+    i = rng.choice(len(table), p=ps)
+    lo, hi, _ = table[i]
+    return int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+
+
+@dataclass
+class TraceRequest:
+    rid: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+
+
+@dataclass
+class Workload:
+    """A reproducible request trace."""
+    name: str
+    requests: list = field(default_factory=list)
+
+    def interval_shares(self, edges=(1_000, 10_000, 100_000, 500_000)) -> dict:
+        lens = np.array([r.prompt_len for r in self.requests])
+        out, lo = {}, 0
+        for e in (*edges, np.inf):
+            key = f"{lo}-{e}"
+            out[key] = float(((lens >= lo) & (lens < e)).mean())
+            lo = e
+        return out
+
+
+def make_workload(kind: str, *, rate: float, duration: float,
+                  long_ratio: float = 0.0, seed: int = 0,
+                  decode_lo: int = 64, decode_hi: int = 512) -> Workload:
+    """kind: sharegpt4o | github_issue | mixed | openrouter.
+
+    ``rate`` requests/s Poisson for ``duration`` seconds.  ``long_ratio``
+    only applies to kind="mixed" (paper: 0.01 / 0.05).
+    """
+    rng = np.random.default_rng(seed)
+    reqs, t, rid = [], 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            break
+        if kind == "mixed":
+            table = GITHUB_ISSUE if rng.random() < long_ratio else SHAREGPT_4O
+        else:
+            table = DATASETS[kind]
+        plen = _sample_interval(rng, table)
+        dlen = int(rng.integers(decode_lo, decode_hi + 1))
+        reqs.append(TraceRequest(rid, t, plen, dlen))
+        rid += 1
+    label = kind if kind != "mixed" else f"mixed_{long_ratio:.0%}"
+    return Workload(label, reqs)

@@ -1,0 +1,158 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, elastic-restorable.
+
+Layout:  <dir>/step_<N>/
+            manifest.json        (tree structure, shapes, dtypes, step)
+            <leaf-id>.npy        (one file per leaf, host-gathered)
+         <dir>/LATEST            (atomic pointer file)
+
+Writes are atomic (tmp dir + rename) so a crash mid-write never corrupts the
+latest checkpoint; ``AsyncCheckpointer`` moves serialization off the training
+thread.  ``restore`` accepts a different mesh/sharding than the save
+(elastic resharding: leaves are device_put with the NEW sharding).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue as queue_mod
+
+import jax
+import numpy as np
+
+_NUMPY_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+                 "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+_UINT_OF_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_names(treedef) -> list[str]:
+    return [f"leaf_{i:05d}" for i in range(treedef.num_leaves)]
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Blocking atomic save. Returns the checkpoint path."""
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    names = _leaf_names(treedef)
+    manifest = {"step": step, "treedef": str(treedef),
+                "leaves": []}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical not in _NUMPY_NATIVE:
+            # exotic dtypes (bfloat16, fp8): store the raw bits
+            arr = np.ascontiguousarray(arr).view(
+                _UINT_OF_SIZE[arr.dtype.itemsize])
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"].append({"name": name, "shape": list(arr.shape),
+                                   "dtype": logical})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like, step: int | None = None, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays/SDS).
+
+    ``shardings``: optional pytree of Sharding/NamedSharding — the ELASTIC
+    path: leaves are placed with the new sharding regardless of how the
+    checkpoint was produced."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint in {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    leaves, treedef = _flatten(like)
+    names = _leaf_names(treedef)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    dtype_of = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for name, leaf, shd in zip(names, leaves, shard_leaves):
+        arr = np.load(os.path.join(path, name + ".npy"))
+        logical = dtype_of[name]
+        if str(arr.dtype) != logical:        # raw-bits roundtrip (bf16/fp8)
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, logical)))
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        if str(arr.dtype) != str(want_dtype):
+            arr = jax.numpy.asarray(arr).astype(want_dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (training never blocks on I/O).
+
+    Serialises device->host transfer on submit (cheap) and file I/O in the
+    worker.  ``wait()`` drains the queue; at most one write is in flight —
+    a newer snapshot submitted while writing replaces the queued one."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._q: queue_mod.Queue = queue_mod.Queue(maxsize=1)
+        self._err = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save(self.ckpt_dir, step, host_tree)
+            except Exception as e:          # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree) -> None:
+        if self._err:
+            raise self._err
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        try:                                 # drop a stale queued snapshot
+            self._q.get_nowait()
+            self._q.task_done()
+        except queue_mod.Empty:
+            pass
+        self._q.put((step, host))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._t.join(timeout=10)

@@ -1,0 +1,36 @@
+"""Validate the deferred-single-reduction train step vs exact GSPMD grads."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import CONFIGS, reduced
+from repro.models import init_params
+from repro.training import data, optimizer, train_step
+
+cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2)
+params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                      init_params(jax.random.PRNGKey(0), cfg))
+opt_cfg = optimizer.AdamWConfig(lr=1e-3)
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+ds = data.SyntheticTokens(cfg, batch=8, seq_len=32)
+batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+
+exact = jax.jit(train_step.make_train_step(cfg, opt_cfg, num_micro=2))
+opt = optimizer.init_opt_state(params)
+p_exact, _, s_exact = exact(params, opt, batch)
+
+with jax.set_mesh(mesh):
+    hyb = jax.jit(train_step.make_hybrid_train_step(
+        cfg, opt_cfg, mesh, num_micro=2, compress=None))
+    opt2 = optimizer.init_opt_state(params)
+    p_hyb, _, s_hyb = hyb(params, opt2, batch)
+
+assert abs(float(s_exact["loss"]) - float(s_hyb["loss"])) < 1e-3, \
+    (float(s_exact["loss"]), float(s_hyb["loss"]))
+worst = 0.0
+for a, b in zip(jax.tree.leaves(p_exact), jax.tree.leaves(p_hyb)):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    worst = max(worst, float(np.abs(a - b).max() / (np.abs(a).max() + 1e-6)))
+print(f"max rel param delta after 1 step (bf16-compressed reduce): {worst:.2e}")
+assert worst < 2e-2
+print("hybrid single-reduction train step matches exact grads. PASS")

@@ -1,0 +1,180 @@
+"""Scheduler / page-table / routing invariants (host-side, no devices)."""
+import numpy as np
+import pytest
+
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.page_table import GlobalPageTable
+from repro.core.routing import lower_plan
+from repro.core.scheduler import (DualBalancedScheduler, LeastBatchScheduler,
+                                  LeastCacheScheduler, UniformCPScheduler)
+from repro.core.state import ClusterState, Request
+
+
+def mk_cluster(I=8, W=4, cap=4096, page=16, stripes=1):
+    return ClusterState(num_instances=I, instances_per_node=W,
+                        kv_capacity_tokens=cap, page_size=page,
+                        kv_stripes=stripes)
+
+
+def test_page_table_roundtrip():
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {0: 40, 1: 20})
+    assert pt.shard_tokens(0) == {0: 40, 1: 20}
+    assert pt.instance_used_tokens(0) == 40
+    assert pt.free_frames(0) == 5                  # 3 pages used
+    f, o = pt.append_token(0, 0)
+    assert pt.instance_used_tokens(0) == 41
+    pt.free_request(0)
+    assert pt.total_free_frames() == 16
+    assert pt.instance_used_tokens(0) == 0
+
+
+def test_page_table_capacity_error():
+    pt = GlobalPageTable(1, frames_per_instance=2, page_size=16)
+    with pytest.raises(MemoryError):
+        pt.allocate(0, {0: 100})
+
+
+def test_stripe_balance():
+    pt = GlobalPageTable(1, frames_per_instance=32, page_size=16, stripes=4)
+    frames = pt.pools[0].alloc(16)
+    counts = np.bincount([f % 4 for f in frames], minlength=4)
+    assert counts.max() - counts.min() <= 1        # near-even striping
+
+
+def test_dual_balanced_invariants():
+    cl = mk_cluster()
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,), degrees=(1, 3)))
+    for r in range(12):
+        cl.enqueue(Request(rid=r, prompt_len=50 if r % 3 else 400,
+                           max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 12
+    for req in cl.active.values():
+        assert req.moe_binding in req.kv_binding            # m_r in P_r
+        nodes = {cl.node_of(s) for s in req.kv_binding}
+        assert len(nodes) == 1                              # binding intra-node
+        want = 3 if req.prompt_len > 100 else 1
+        assert req.cp_degree == min(want, cl.instances_per_node)
+        shards = cl.page_table.shard_tokens(req.rid)
+        assert sum(shards.values()) == req.prompt_len       # split conserves
+        # slot pinned on the MoE binding
+        inst, slot = cl.slot_map[req.rid]
+        assert inst == req.moe_binding
+
+
+def test_rebalance_moves_binding_within_kv_binding():
+    cl = mk_cluster()
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(10,), degrees=(1, 4)))
+    for r in range(4):
+        cl.enqueue(Request(rid=r, prompt_len=300, max_new_tokens=4))
+    sched.schedule(cl)
+    # finish requests bound to some instances, then rebalance must keep
+    # m_r inside P_r
+    sched.schedule(cl)
+    for req in cl.active.values():
+        assert req.moe_binding in req.kv_binding
+
+
+def test_hol_blocking_difference():
+    """LeastBatch head-blocks on a too-big request; NanoCP splits it."""
+    cl1 = mk_cluster(I=4, W=4, cap=1024)
+    lb = LeastBatchScheduler()
+    cl1.enqueue(Request(rid=0, prompt_len=2000, max_new_tokens=4))  # > 1 inst
+    cl1.enqueue(Request(rid=1, prompt_len=100, max_new_tokens=4))
+    plan = lb.schedule(cl1)
+    assert len(plan.admitted) == 0 and plan.deferred >= 1   # HoL blocked
+
+    cl2 = mk_cluster(I=4, W=4, cap=1024)
+    nano = DualBalancedScheduler(buckets=CPBuckets(edges=(500,), degrees=(1, 4)))
+    cl2.enqueue(Request(rid=0, prompt_len=2000, max_new_tokens=4))
+    cl2.enqueue(Request(rid=1, prompt_len=100, max_new_tokens=4))
+    plan = nano.schedule(cl2)
+    assert len(plan.admitted) == 2                          # split across 4
+
+
+def test_uniform_cp_splits_everything():
+    cl = mk_cluster()
+    sched = UniformCPScheduler(cp=4)
+    cl.enqueue(Request(rid=0, prompt_len=40, max_new_tokens=2))
+    sched.schedule(cl)
+    assert cl.active[0].cp_degree == 4                      # even short reqs
+
+
+def test_least_cache_picks_min_kv():
+    cl = mk_cluster()
+    sched = LeastCacheScheduler()
+    cl.enqueue(Request(rid=0, prompt_len=500, max_new_tokens=2))
+    sched.schedule(cl)
+    first = cl.active[0].moe_binding
+    cl.enqueue(Request(rid=1, prompt_len=100, max_new_tokens=2))
+    sched.schedule(cl)
+    assert cl.active[1].moe_binding != first
+
+
+def test_instance_failure_requeues():
+    cl = mk_cluster()
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,), degrees=(1, 2)))
+    for r in range(6):
+        cl.enqueue(Request(rid=r, prompt_len=300, max_new_tokens=4))
+    sched.schedule(cl)
+    victim = cl.active[0].moe_binding
+    affected = cl.fail_instance(victim)
+    assert affected                                          # some requeued
+    for req in affected:
+        assert req.status == "waiting" and req.rid not in cl.active
+    plan = sched.schedule(cl)                                # re-place them
+    for req in cl.active.values():
+        assert victim not in req.kv_binding
+    assert not plan.deferred
+
+
+def test_routing_tables_consistency():
+    cl = mk_cluster(I=4, W=4, cap=2048, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100, 256),
+                                                    degrees=(1, 2, 3)))
+    for r, L in enumerate([50, 300, 120, 40, 200]):
+        cl.enqueue(Request(rid=r, prompt_len=L, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    tbl = lower_plan(cl, plan, buckets=ShapeBuckets(
+        m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4), window=4))
+    M, S, N, W = tbl.M, tbl.S, tbl.N, tbl.W
+    # every active request occupies exactly one active slot
+    assert tbl.slot_active.sum() == len(cl.active)
+    for rid, req in cl.active.items():
+        i, b = cl.slot_map[rid]
+        assert tbl.slot_rid[i, b] == rid
+        # work rows across instances cover the kv binding (post-append)
+        shards = cl.page_table.shard_tokens(rid)
+        rows = 0
+        for s in req.kv_binding:
+            hit = [n for n in range(N)
+                   if tbl.work_len[s, n] == shards.get(s, 0)
+                   and tbl.work_len[s, n] > 0]
+            rows += bool(hit)
+        assert rows == sum(1 for t in shards.values() if t > 0)
+        # merge sources == participating shards
+        assert (tbl.merge_src[i, b] >= 0).sum() == \
+            sum(1 for t in shards.values() if t > 0)
+    # send/recv position symmetry
+    for i in range(4):
+        for d in range(W - 1):
+            for p in range(S):
+                b = tbl.q_send_idx[i, d, p]
+                if b < 0:
+                    continue
+                dest = (i // W) * W + (i % W + d + 1) % W
+                assert tbl.q_recv_slot[dest, d, p] == b
+                src = M + d * S + p
+                assert (tbl.work_src[dest] == src).sum() == 1
+
+
+def test_lower_plan_appends_advance_page_table():
+    cl = mk_cluster(I=2, W=2, cap=1024, page=16)
+    sched = DualBalancedScheduler()
+    cl.enqueue(Request(rid=0, prompt_len=31, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    before = cl.page_table.shard_tokens(0)
+    lower_plan(cl, plan)
+    after = cl.page_table.shard_tokens(0)
+    assert sum(after.values()) == sum(before.values()) + 1

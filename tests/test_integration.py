@@ -1,0 +1,30 @@
+"""Multi-device integration: full NanoCP stack vs single-device reference.
+
+Each case runs in a subprocess with 8 forced host devices (XLA_FLAGS must
+not leak into the main pytest process — smoke tests see 1 device)."""
+import pytest
+
+from conftest import run_integration
+
+
+@pytest.mark.parametrize("arch,I,TP", [
+    ("tinyllama-1.1b", 4, 2),       # dense GQA, no striping
+    ("tinyllama-1.1b", 2, 4),       # GQA kv=2 @ tp4 -> page striping ps=2
+    ("minicpm3-4b", 2, 4),          # MLA -> latent striped over all 4
+    ("phi3.5-moe-42b-a6.6b", 4, 2), # wide-EP MoE dispatch/combine
+    ("jamba-v0.1-52b", 2, 4),       # hybrid SSM+attn+MoE
+    ("mamba2-370m", 4, 2),          # attention-free (DCP inapplicable)
+])
+def test_dcp_decode_equals_reference(arch, I, TP):
+    out = run_integration("dcp_equivalence.py", arch, str(I), str(TP))
+    assert "PASS" in out
+
+
+def test_whisper_encdec_equivalence():
+    out = run_integration("whisper_equivalence.py")
+    assert "PASS" in out
+
+
+def test_engine_generation_matches_reference():
+    out = run_integration("engine_generation.py")
+    assert "PASS" in out

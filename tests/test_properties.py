@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.waterfill import waterfill
+from repro.kernels import ref
+
+SET = settings(max_examples=30, deadline=None)
+
+
+# --------------------------------------------------------------------------- #
+# LSE merge: merging a length-split attention == the unsplit attention
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(2, 64),
+       st.integers(0, 2 ** 31 - 1))
+def test_merge_lse_split_invariance(w, h, L, seed):
+    rng = np.random.default_rng(seed)
+    D = 16
+    q = jnp.asarray(rng.standard_normal((1, h, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, L, h, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, L, h, D)), jnp.float32)
+    full, _ = ref.decode_attention_dense(q, k, v, jnp.array([L]))
+    # split the kv tokens into w contiguous shards
+    cuts = sorted(rng.integers(0, L + 1, (w - 1,)).tolist())
+    bounds = [0] + cuts + [L]
+    parts, lses, mask = [], [], []
+    for i in range(w):
+        lo, hi = bounds[i], bounds[i + 1]
+        kk = jnp.zeros_like(k).at[:, :hi - lo].set(k[:, lo:hi])
+        vv = jnp.zeros_like(v).at[:, :hi - lo].set(v[:, lo:hi])
+        o, l = ref.decode_attention_dense(q, kk, vv, jnp.array([hi - lo]))
+        parts.append(o)
+        lses.append(l)
+        mask.append(hi > lo)
+    merged, _ = ref.merge_lse(jnp.stack(parts), jnp.stack(lses),
+                              mask=jnp.asarray(mask)[:, None])
+    np.testing.assert_allclose(np.asarray(merged[0]), np.asarray(full[0]),
+                               atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_merge_lse_permutation_invariance(w, seed):
+    rng = np.random.default_rng(seed)
+    o = jnp.asarray(rng.standard_normal((w, 3, 2, 8)), jnp.float32)
+    l = jnp.asarray(rng.standard_normal((w, 3, 2)), jnp.float32)
+    m1, _ = ref.merge_lse(o, l)
+    perm = rng.permutation(w)
+    m2, _ = ref.merge_lse(o[perm], l[perm])
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# WaterFill
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=8),
+       st.integers(0, 50_000))
+def test_waterfill_conserves_and_minimaxes(loads, total):
+    split = waterfill(loads, total)
+    assert split.sum() == total
+    assert (split >= 0).all()
+    peak = np.max(np.asarray(loads) + split)
+    # minimax optimality: no single-token move can lower the peak
+    loads = np.asarray(loads)
+    for i in range(len(loads)):
+        for j in range(len(loads)):
+            if i == j or split[i] == 0:
+                continue
+            moved = split.copy()
+            moved[i] -= 1
+            moved[j] += 1
+            assert np.max(loads + moved) >= peak - 1e-9
+
+
+@SET
+@given(st.lists(st.tuples(st.integers(0, 100), st.integers(0, 200)),
+                min_size=1, max_size=6), st.integers(0, 300))
+def test_waterfill_respects_caps(pairs, total):
+    loads = [p[0] for p in pairs]
+    caps = [p[1] for p in pairs]
+    if sum(caps) < total:
+        return                              # CanAllocate rejects this case
+    split = waterfill(loads, total, capacities=caps)
+    assert split.sum() == total
+    assert all(split[i] <= caps[i] for i in range(len(caps)))
+
+
+# --------------------------------------------------------------------------- #
+# bucketing
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.integers(0, 2_000_000), st.integers(0, 2_000_000))
+def test_cp_degree_monotone(a, b):
+    bk = CPBuckets()
+    lo, hi = min(a, b), max(a, b)
+    assert bk.cp_degree(lo) <= bk.cp_degree(hi)
+
+
+@SET
+@given(st.integers(1, 256), st.integers(0, 32))
+def test_shape_bucket_bounds(m, s):
+    sb = ShapeBuckets()
+    mh, sh, nh = sb.bucket(m, s)
+    assert mh >= m and sh >= s
+    assert nh == mh + (sb.window - 1) * sh
+
+
+# --------------------------------------------------------------------------- #
+# MoE grouping
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.integers(1, 32), st.integers(1, 4), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_group_by_expert_invariants(T, k, E, seed):
+    from repro.models.moe import group_by_expert
+    rng = np.random.default_rng(seed)
+    k = min(k, E)
+    idx = jnp.asarray(rng.integers(0, E, (T, k)), jnp.int32)
+    C = max(1, int(np.ceil(T * k / E * 1.25)))
+    src_token, slot_of = map(np.asarray, group_by_expert(idx, E, C))
+    # every kept assignment routes to the right expert bin
+    for t in range(T):
+        for j in range(k):
+            slot = slot_of[t, j]
+            if slot < E * C:
+                assert slot // C == idx[t, j]
+                assert src_token[slot] == t
+    # no slot double-filled
+    used = slot_of[slot_of < E * C]
+    assert len(np.unique(used)) == len(used)

@@ -1,0 +1,89 @@
+"""Cluster simulator: paper-qualitative behaviour + fault tolerance."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.bucketing import derive_buckets
+from repro.core.scheduler import (DualBalancedScheduler, LeastBatchScheduler,
+                                  LeastCacheScheduler, UniformCPScheduler)
+from repro.serving import metrics
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.workload import make_workload
+
+CFG = get_config("deepseek-v3")
+LM = LatencyModel(CFG)
+BUCKETS = derive_buckets(LM)
+
+
+def run(sched, rate=150, ratio=0.05, seed=0, **kw):
+    wl = make_workload("mixed", rate=rate, duration=10.0, long_ratio=ratio,
+                       seed=seed)
+    sim = ClusterSimulator(CFG, sched, num_instances=32, instances_per_node=8,
+                           kv_capacity_tokens=1_000_000, multi_step=4, **kw)
+    return sim.run(wl, horizon=60.0)
+
+
+def test_deterministic():
+    r1 = run(DualBalancedScheduler(buckets=BUCKETS))
+    r2 = run(DualBalancedScheduler(buckets=BUCKETS))
+    assert metrics.mean_tpot(r1.finished) == metrics.mean_tpot(r2.finished)
+    assert r1.iterations == r2.iterations
+
+
+def test_nanocp_balances_better_than_request_level():
+    nano = run(DualBalancedScheduler(buckets=BUCKETS))
+    lb = run(LeastBatchScheduler())
+    lc = run(LeastCacheScheduler())
+    kv = lambda r: np.mean([metrics.imbalance_pct(k) for k in r.kv_series])
+    bb = lambda r: np.mean([metrics.imbalance_pct(b) for b in r.batch_series])
+    assert kv(nano) < kv(lb)                     # Fig. 14a (KV balance)
+    assert bb(nano) < bb(lc)                     # Fig. 14a (batch balance)
+    # everyone finishes; nanocp P99 no worse than either baseline
+    assert metrics.p99_tpot(nano.finished) <= min(
+        metrics.p99_tpot(lb.finished), metrics.p99_tpot(lc.finished)) + 1e-9
+
+
+def test_uniform_cp_overhead():
+    """Fig. 6: uniform CP buys KV balance at a large comm overhead."""
+    nano = run(DualBalancedScheduler(buckets=BUCKETS))
+    ucp = run(UniformCPScheduler(cp=8))
+    cp_cost = lambda r: np.mean([p.cp_comm for p in r.phase])
+    kv = lambda r: np.mean([metrics.imbalance_pct(k) for k in r.kv_series])
+    assert cp_cost(ucp) > 1.5 * cp_cost(nano)
+    assert kv(ucp) < kv(nano)
+    assert metrics.mean_tpot(ucp.finished) > metrics.mean_tpot(nano.finished)
+
+
+def test_failure_injection_recovers():
+    sched = DualBalancedScheduler(buckets=BUCKETS)
+    wl = make_workload("mixed", rate=80, duration=8.0, long_ratio=0.01, seed=1)
+    sim = ClusterSimulator(CFG, sched, num_instances=32, instances_per_node=8,
+                           kv_capacity_tokens=1_000_000, multi_step=4)
+    res = sim.run(wl, horizon=90.0, failure_events=[(1.0, 3), (2.0, 17)])
+    assert 3 in sim.cluster.dead_instances
+    # all requests still complete despite two dead instances
+    assert len(res.finished) == len(wl.requests)
+    for req in res.finished:
+        # requests finished AFTER a failure never touch the dead instance
+        if req.finish_time > 1.0:
+            assert 3 not in req.kv_binding
+        if req.finish_time > 2.0:
+            assert 17 not in req.kv_binding
+
+
+def test_cp_usage_is_sparse():
+    """Fig. 18: only a small fraction of requests use cross-instance CP."""
+    res = run(DualBalancedScheduler(buckets=BUCKETS), ratio=0.01)
+    total = sum(res.cp_degree_hist.values())
+    multi = sum(v for k, v in res.cp_degree_hist.items() if k > 1)
+    assert multi / total < 0.2
+
+
+def test_workload_interval_shares():
+    wl = make_workload("sharegpt4o", rate=200, duration=30, seed=0)
+    shares = wl.interval_shares()
+    assert abs(shares["0-1000"] - 0.857) < 0.05
+    wl2 = make_workload("github_issue", rate=50, duration=30, seed=0)
+    shares2 = wl2.interval_shares()
+    assert shares2["100000-500000"] > 0.5
