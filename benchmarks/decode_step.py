@@ -1,0 +1,185 @@
+"""Decode hot-path benchmark: per-iteration HOST overhead of the engine.
+
+Measures, per decode iteration and per AOT bucket (M, S, MB, W):
+  * lower_us     — routing-table lowering (``routing.lower_plan``)
+  * tables_us    — host->device table upload (``routing.as_device_arrays``)
+  * dispatch_us  — engine-reported async dispatch time (0 on engines that
+                   don't instrument; the seed engine blocks inside step)
+  * harvest_us   — engine-reported token readback/bookkeeping time
+  * step_us      — full ``engine.step`` wall time (host + device)
+
+Admission iterations (prefill + KV migration) are reported separately from
+steady-state iterations — the tentpole target is the steady-state numbers.
+
+Works against both the pre- and post-refactor engine: lowering/table upload
+are timed by wrapping the ``repro.core.routing`` entry points, so the same
+script produces the before/after comparison.  Emits ``BENCH_decode_step.json``
+at the repo root (or ``--out``).
+
+  PYTHONPATH=src python benchmarks/decode_step.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import statistics
+import time
+
+
+def _wrap_timed(module, name, sink):
+    """Patch ``module.name`` with a wall-clock-accumulating wrapper."""
+    orig = getattr(module, name)
+
+    def wrapped(*a, **kw):
+        t0 = time.perf_counter()
+        out = orig(*a, **kw)
+        sink.append((time.perf_counter() - t0) * 1e6)
+        return out
+
+    setattr(module, name, wrapped)
+    return orig
+
+
+def _summ(xs):
+    if not xs:
+        return {"mean_us": 0.0, "p50_us": 0.0, "p99_us": 0.0, "n": 0}
+    xs = sorted(xs)
+    return {
+        "mean_us": statistics.fmean(xs),
+        "p50_us": xs[len(xs) // 2],
+        "p99_us": xs[min(len(xs) - 1, int(len(xs) * 0.99))],
+        "n": len(xs),
+    }
+
+
+def run_bench(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import CONFIGS, reduced
+    from repro.core import routing
+    from repro.core.bucketing import CPBuckets, ShapeBuckets
+    from repro.models import init_params
+    from repro.serving.engine import NanoCPEngine
+
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2, vocab_size=256)
+    rng = jax.random.PRNGKey(0)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          init_params(rng, cfg))
+    from repro import compat
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=4, instances_per_node=4,
+        kv_capacity_tokens=16384, page_size=16,
+        buckets=CPBuckets(edges=(100, 256), degrees=(1, 2, 3)),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4, 8, 16),
+                                   s_buckets=(0, 1, 2, 4, 8, 16, 32),
+                                   window=4))
+
+    # mixed short/long prompts -> several (M, S) buckets get exercised;
+    # the non-smoke run fills all 4 instances to a realistic decode batch
+    rng_np = np.random.default_rng(0)
+    if smoke:
+        lengths = [50, 300, 120]
+        max_new = 8
+    else:
+        lengths = [int(rng_np.integers(40, 320)) for _ in range(48)]
+        max_new = 48
+    for L in lengths:
+        eng.add_request(rng_np.integers(0, 256, (L,)), max_new_tokens=max_new)
+
+    lower_sink, tables_sink = [], []
+    _wrap_timed(routing, "lower_plan", lower_sink)
+    _wrap_timed(routing, "as_device_arrays", tables_sink)
+
+    per_iter = []
+    it = 0
+    max_iters = 20 if smoke else 120
+    while (eng.cluster.active or eng.cluster.waiting
+           or getattr(eng, "_inflight", None)) and it < max_iters:
+        waiting_before = len(eng.cluster.waiting)
+        l0, t0 = len(lower_sink), len(tables_sink)
+        w0 = time.perf_counter()
+        eng.step()
+        step_us = (time.perf_counter() - w0) * 1e6
+        timings = getattr(eng, "timings", None)
+        rec = {
+            "iter": it,
+            "admission": waiting_before > len(eng.cluster.waiting),
+            "step_us": step_us,
+            "lower_us": sum(lower_sink[l0:]),
+            "tables_us": sum(tables_sink[t0:]),
+            "bucket": getattr(eng, "last_bucket", None),
+        }
+        if timings:
+            for k in ("dispatch_us", "harvest_us", "prefill_us"):
+                if timings.get(k) is not None:
+                    rec[k] = timings[k]
+        per_iter.append(rec)
+        it += 1
+
+    steady = [r for r in per_iter if not r["admission"]]
+    admit = [r for r in per_iter if r["admission"]]
+    by_bucket = {}
+    for r in steady:
+        if r["bucket"] is None:
+            continue
+        by_bucket.setdefault(str(tuple(r["bucket"])), []).append(r)
+
+    def agg(rows):
+        out = {}
+        for k in ("step_us", "lower_us", "tables_us", "dispatch_us",
+                  "harvest_us"):
+            xs = [r[k] for r in rows if k in r]
+            if xs:
+                out[k] = _summ(xs)
+        return out
+
+    report = {
+        "bench": "decode_step",
+        "smoke": smoke,
+        "iterations": it,
+        "finished_requests": len(eng.finished),
+        "steady_state": agg(steady),
+        "admission": agg(admit),
+        "per_bucket": {k: agg(v) for k, v in sorted(by_bucket.items())},
+        "aot": eng.aot.stats.as_dict(),
+    }
+    # engine-level donation / transfer accounting (post-refactor engines)
+    for attr in ("donation_stats", "hot_path_stats"):
+        v = getattr(eng, attr, None)
+        if v is not None:
+            report[attr] = dict(v)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (few requests, few iterations)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_decode_step.json)")
+    args = ap.parse_args()
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_decode_step.json")
+    report = run_bench(smoke=args.smoke)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    ss = report["steady_state"]
+    print(f"decode_step: {report['iterations']} iters, "
+          f"{report['finished_requests']} finished")
+    for k, v in ss.items():
+        print(f"  steady {k:12s} mean={v['mean_us']:9.1f}us "
+              f"p99={v['p99_us']:9.1f}us (n={v['n']})")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import CONFIGS, reduced
 from repro.core.bucketing import CPBuckets, ShapeBuckets
 from repro.models import init_params, transformer
@@ -28,8 +29,7 @@ def main() -> None:
           f"{cfg.num_experts}e top-{cfg.num_experts_per_tok}")
     params = jax.tree.map(lambda x: x.astype(jnp.float32),
                           init_params(jax.random.PRNGKey(0), cfg))
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     engine = NanoCPEngine(
         cfg, params, mesh, num_instances=4, instances_per_node=4,
         kv_capacity_tokens=2048, page_size=16,

@@ -35,11 +35,19 @@ class AOTStats:
     hits: int = 0
     online_compiles: int = 0
     buffer_bytes: int = 0
+    # donation accounting: a donated serve-state arg whose output buffers
+    # are NOT the input buffers means XLA silently copied (copy-on-donate) —
+    # the exact host/alloc overhead donation is supposed to eliminate.
+    donation_checks: int = 0
+    donation_reuses: int = 0
+    donation_copies: int = 0
+    donation_unknown: int = 0
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in
                 ("captured", "capture_seconds", "lookups", "hits",
-                 "online_compiles", "buffer_bytes")}
+                 "online_compiles", "buffer_bytes", "donation_checks",
+                 "donation_reuses", "donation_copies", "donation_unknown")}
 
 
 class AOTGraphEngine:
@@ -78,7 +86,11 @@ class AOTGraphEngine:
 
     # ---------------- online replay (Alg. 2 l.19-24) ----------------
     def lookup(self, M: int, S: int, MB: int, W: int):
-        key = self.quantise(M, S, MB, W)
+        return self.lookup_key(self.quantise(M, S, MB, W))
+
+    def lookup_key(self, key: tuple):
+        """Replay lookup for an already-quantised bucket key (the hot path
+        quantises once and reuses the key)."""
         self.stats.lookups += 1
         if key in self._cache:
             self.stats.hits += 1
@@ -89,6 +101,45 @@ class AOTGraphEngine:
     @property
     def num_graphs(self) -> int:
         return len(self._cache)
+
+    # ---------------- donation accounting ----------------
+    @staticmethod
+    def buffer_ptrs(tree) -> list:
+        """Per-leaf device buffer pointers (tuple over addressable shards);
+        None where the runtime doesn't expose them."""
+        out = []
+        for leaf in jax.tree.leaves(tree):
+            try:
+                shards = getattr(leaf, "addressable_shards", None)
+                if shards:
+                    out.append(tuple(s.data.unsafe_buffer_pointer()
+                                     for s in shards))
+                else:
+                    out.append((leaf.unsafe_buffer_pointer(),))
+            except Exception:
+                out.append(None)
+        return out
+
+    def note_donation(self, in_ptrs: list, out_tree) -> bool:
+        """Record whether a donated argument's buffers were actually reused.
+
+        ``in_ptrs``: ``buffer_ptrs`` of the donated arg captured BEFORE the
+        call (donated buffers are unreadable afterwards).  Reads the output
+        pointers, which may synchronize — call sparingly (warmup steps).
+        Returns True when every comparable leaf was reused in place.
+        """
+        out_ptrs = self.buffer_ptrs(out_tree)
+        self.stats.donation_checks += 1
+        reused = True
+        for a, b in zip(in_ptrs, out_ptrs):
+            if a is None or b is None:
+                self.stats.donation_unknown += 1
+            elif a == b:
+                self.stats.donation_reuses += 1
+            else:
+                self.stats.donation_copies += 1
+                reused = False
+        return reused
 
 
 def _spec_bytes(specs) -> int:

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
 from ..configs.base import ModelConfig
 from ..kernels import ops, ref
 from ..models import layers as L
@@ -809,8 +810,8 @@ def make_encdec_serve_step(cfg, dims: DecodeDims, mesh, decode_params, state,
     tspecs = table_specs(tables, data=dims.data,
                          extra_data_axes=extra_data_axes)
     out_specs = (sspecs, P(da, None), P(da, None, dims.model))
-    fn = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, sspecs, tspecs),
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(step, mesh=mesh, in_specs=(pspecs, sspecs, tspecs),
+                    out_specs=out_specs, check_vma=False)
     return jax.jit(fn, donate_argnums=(1,) if donate else ())
 
 
@@ -919,6 +920,6 @@ def make_serve_step(cfg: ModelConfig, dims: DecodeDims, mesh, decode_params,
     tspecs = table_specs(tables, data=dims.data,
                          extra_data_axes=extra_data_axes)
     out_specs = (sspecs, P(da, None), P(da, None, dims.model))
-    fn = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, sspecs, tspecs),
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(step, mesh=mesh, in_specs=(pspecs, sspecs, tspecs),
+                    out_specs=out_specs, check_vma=False)
     return jax.jit(fn, donate_argnums=(1,) if donate else ())

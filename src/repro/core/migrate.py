@@ -6,8 +6,17 @@ instance's pool.  Token->shard assignment is contiguous ranges in sorted
 binding order (decode attention + LSE merge are order-agnostic over the
 prefix, so any partition is exact).
 
-Host-side (numpy) writes into the global pool arrays; the engine uploads the
-pools once, then the data plane appends in place.
+Two implementations:
+
+  * ``load_prefill_*`` — host-side (numpy) writes into the global pool
+    arrays; the caller uploads the pools afterwards.  Reference semantics,
+    used by the equivalence tests and the standalone integration scripts.
+  * ``PrefillScatter`` — jitted on-device scatters.  The serve state never
+    leaves the device: prefill KV (already device-resident from the prefill
+    forward pass) is written into the pools by a donated scatter driven by
+    small int32 coordinate tensors.  All requests admitted in one scheduler
+    step batch into ONE scatter call per state kind.  This is the engine's
+    hot path (no state device->host->device round trip).
 """
 from __future__ import annotations
 
@@ -94,6 +103,142 @@ def load_prefill_ssm(cfg: ModelConfig, state_np: dict, instance: int,
         state_np["conv_B"][bi, pos, instance, slot] = conv[:, din:din + ns]
         state_np["conv_C"][bi, pos, instance, slot] = conv[:, din + ns:]
         state_np["ssm_state"][bi, pos, instance, slot] = np.asarray(h, np.float32)
+
+
+# --------------------------------------------------------------------------- #
+# on-device prefill loading (the engine's host-free hot path)
+# --------------------------------------------------------------------------- #
+def prefill_coords(cluster: ClusterState, rid: int, page: int,
+                   ps: int) -> np.ndarray:
+    """Per-token pool coordinates for one request's prefix, token order.
+
+    Returns int32 [4, T]: (instance, stripe = f %% ps, sub_frame = f // ps,
+    offset) — exactly the hybrid sub-pool addressing of the numpy loaders.
+    """
+    pt = cluster.page_table
+    cols = []
+    for s, start, t in shard_ranges(cluster, rid):
+        frames = np.asarray(pt.shard_frames(rid, s), dtype=np.int64)
+        j = np.arange(t)
+        f = frames[j // page]
+        cols.append(np.stack([np.full(t, s), f % ps, f // ps, j % page]))
+    if not cols:
+        return np.zeros((4, 0), np.int32)
+    return np.concatenate(cols, axis=1).astype(np.int32)
+
+
+class PrefillScatter:
+    """Jitted, donated scatters loading prefill output into the serve state.
+
+    One executable per padded token-count bucket (``_quantize_dim`` ladder,
+    so the family stays bounded); padding rows carry ``instance = I`` and
+    are dropped by the scatter (``mode='drop'``).  The state argument is
+    donated, so steady-state admission reuses the pool buffers in place.
+    """
+
+    def __init__(self, cfg: ModelConfig, dims: DecodeDims,
+                 num_instances: int):
+        self.cfg = cfg
+        self.dims = dims
+        self.I = num_instances
+        _, self.khs, self.ps = attn_tp_geometry(cfg, dims.tp)
+        self._kv_fns: dict = {}
+        self._ssm_fns: dict = {}
+
+    # -- bucketing ---------------------------------------------------------
+    @staticmethod
+    def _bucket(n: int) -> int:
+        from .routing import _quantize_dim
+        return _quantize_dim(max(n, 1))
+
+    def _pad_coords(self, coords: np.ndarray, nb: int):
+        """Pad [k, n] coords to n=nb with out-of-range instance ids."""
+        import jax.numpy as jnp
+        k, n = coords.shape
+        pad = np.full((k, nb - n), 0, np.int32)
+        pad[0] = self.I                               # dropped by the scatter
+        return jnp.asarray(np.concatenate([coords, pad], axis=1))
+
+    # -- attention KV ------------------------------------------------------
+    def _kv_fn(self, tb: int):
+        fn = self._kv_fns.get(tb)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+        khs, mla = self.khs, self.cfg.is_mla
+
+        def scatter(state, k, v, inst, stripe, subf, off):
+            c = stripe[:, None] * khs + jnp.arange(khs, dtype=jnp.int32)
+            ii, ff, oo = inst[:, None], subf[:, None], off[:, None]
+            state = dict(state)
+            if mla:
+                kp = state["kv_pool"]
+                state["kv_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                    k.astype(kp.dtype), mode="drop")
+            else:
+                kp, vp = state["k_pool"], state["v_pool"]
+                state["k_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                    k.astype(kp.dtype), mode="drop")
+                state["v_pool"] = vp.at[:, :, ii, c, ff, oo].set(
+                    v.astype(vp.dtype), mode="drop")
+            return state
+
+        fn = jax.jit(scatter, donate_argnums=(0,))
+        self._kv_fns[tb] = fn
+        return fn
+
+    def scatter_kv(self, state: dict, k, v, coords: np.ndarray) -> dict:
+        """k (and v for non-MLA): [nb, na, T, khs, d] device arrays; coords
+        from ``prefill_coords`` (concatenated over the admitted batch)."""
+        import jax.numpy as jnp
+        T = k.shape[2]
+        tb = self._bucket(T)
+        if tb != T:
+            pad = [(0, 0), (0, 0), (0, tb - T), (0, 0), (0, 0)]
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad) if v is not None else None
+        cs = self._pad_coords(coords, tb)
+        if v is None:
+            v = k                                     # unused by the MLA path
+        return self._kv_fn(tb)(state, k, v, cs[0], cs[1], cs[2], cs[3])
+
+    # -- SSM state ---------------------------------------------------------
+    def _ssm_fn(self, rb: int):
+        fn = self._ssm_fns.get(rb)
+        if fn is not None:
+            return fn
+        import jax
+        din, ns = self.cfg.ssm_d_inner, self.cfg.ssm_state
+
+        def scatter(state, conv, h, inst, slot):
+            state = dict(state)
+            for name, lo, hi in (("conv_x", 0, din),
+                                 ("conv_B", din, din + ns),
+                                 ("conv_C", din + ns, conv.shape[-1])):
+                dst = state[name]
+                state[name] = dst.at[:, :, inst, slot].set(
+                    conv[..., lo:hi].astype(dst.dtype), mode="drop")
+            st = state["ssm_state"]
+            state["ssm_state"] = st.at[:, :, inst, slot].set(
+                h.astype(st.dtype), mode="drop")
+            return state
+
+        fn = jax.jit(scatter, donate_argnums=(0,))
+        self._ssm_fns[rb] = fn
+        return fn
+
+    def scatter_ssm(self, state: dict, conv, h, inst_slot: np.ndarray) -> dict:
+        """conv: [nb, n_ssm, R, cw-1, conv_dim], h: [nb, n_ssm, R, nh, hd, ns]
+        device arrays; inst_slot int32 [2, R] (instance, slot) per request."""
+        import jax.numpy as jnp
+        R = conv.shape[2]
+        rb = self._bucket(R)
+        if rb != R:
+            conv = jnp.pad(conv, [(0, 0), (0, 0), (0, rb - R), (0, 0), (0, 0)])
+            h = jnp.pad(h, [(0, 0), (0, 0), (0, rb - R)] + [(0, 0)] * 3)
+        cs = self._pad_coords(inst_slot, rb)
+        return self._ssm_fn(rb)(state, conv, h, cs[0], cs[1])
 
 
 def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,

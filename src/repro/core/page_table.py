@@ -75,6 +75,12 @@ class GlobalPageTable:
     _used: list = field(default_factory=list)
     # rid -> {instance: [frames]} cache (hot path for routing lowering)
     _frames_by_shard: dict = field(default_factory=dict)
+    # rid -> {instance: np.int32 frame array}; invalidated whenever the
+    # underlying frame list changes (routing lowering reads these every
+    # iteration — bulk ops need ndarray views, not python lists).  Keyed by
+    # rid at the top level so request teardown drops every cached view,
+    # including zero-frame shards that never entered _frames_by_shard.
+    _frames_np: dict = field(default_factory=dict)
 
     def __post_init__(self):
         self.pools = [FramePool(i, self.frames_per_instance, self.stripes)
@@ -94,6 +100,7 @@ class GlobalPageTable:
         assert rid not in self._pages, f"request {rid} already allocated"
         if not self.can_allocate(split):
             raise MemoryError(f"request {rid}: split {split} does not fit")
+        self._frames_np.pop(rid, None)
         pages = []
         shard_fill = {}
         for s, t in split.items():
@@ -123,6 +130,7 @@ class GlobalPageTable:
             frame = self.pools[instance].alloc(1)[0]
             self._pages[rid].append((instance, frame))
             my_frames.append(frame)
+            self._frames_np.get(rid, {}).pop(instance, None)
         frame = my_frames[used // self.page_size]
         offset = used % self.page_size
         shard_fill[instance] = used + 1
@@ -135,6 +143,7 @@ class GlobalPageTable:
         for s, t in self._last_fill.pop(rid, {}).items():
             self._used[s] -= t
         self._frames_by_shard.pop(rid, None)
+        self._frames_np.pop(rid, None)
 
     # ---------------- queries ----------------
     def shard_tokens(self, rid: int) -> dict[int, int]:
@@ -143,6 +152,18 @@ class GlobalPageTable:
 
     def shard_frames(self, rid: int, instance: int) -> list[int]:
         return self._frames_by_shard.get(rid, {}).get(instance, [])
+
+    def shard_frames_np(self, rid: int, instance: int) -> "np.ndarray":
+        """``shard_frames`` as a cached int32 ndarray (do not mutate)."""
+        cache = self._frames_np.setdefault(rid, {})
+        arr = cache.get(instance)
+        if arr is None:
+            import numpy as np
+            arr = np.asarray(
+                self._frames_by_shard.get(rid, {}).get(instance, ()),
+                dtype=np.int32)
+            cache[instance] = arr
+        return arr
 
     def instance_used_tokens(self, instance: int) -> int:
         return self._used[instance]

@@ -72,152 +72,270 @@ class RoutingTables:
         }
 
 
+class TableArena:
+    """Per-bucket reusable host buffers for ``RoutingTables``.
+
+    The decode hot path lowers a table every iteration; allocating ~15 numpy
+    arrays per step churns the allocator and defeats pinned-host reuse.  The
+    arena keeps PING-PONG pairs of table sets per bucket key (depth 2 covers
+    the engine's one-step-lookahead pipeline: the tables of the in-flight
+    iteration are never rewritten while a transfer might still read them).
+    """
+
+    DEPTH = 2
+
+    def __init__(self):
+        self._cache: dict = {}
+        self._turn: dict = {}
+
+    def tables(self, I: int, M: int, S: int, N: int, MB: int,
+               W: int) -> RoutingTables:
+        key = (I, M, S, N, MB, W)
+        pair = self._cache.get(key)
+        if pair is None:
+            pair = [self._fresh(I, M, S, N, MB, W)
+                    for _ in range(self.DEPTH)]
+            self._cache[key] = pair
+            self._turn[key] = 0
+        t = self._turn[key]
+        self._turn[key] = (t + 1) % self.DEPTH
+        tbl = pair[t]
+        self._reset(tbl)
+        return tbl
+
+    @staticmethod
+    def _fresh(I, M, S, N, MB, W) -> RoutingTables:
+        return RoutingTables(
+            W=W, M=M, S=S, N=N, MB=MB, MBT=MB, R=0,
+            slot_rid=np.empty((I, M), np.int32),
+            slot_token=np.empty((I, M), np.int32),
+            slot_pos=np.empty((I, M), np.int32),
+            slot_active=np.empty((I, M), np.int32),
+            append_frame=np.empty((I, M), np.int32),
+            append_off=np.empty((I, M), np.int32),
+            q_send_idx=np.empty((I, W - 1, S), np.int32),
+            q_recv_slot=np.empty((I, W - 1, S), np.int32),
+            work_src=np.empty((I, N), np.int32),
+            work_bt=np.empty((I, N, MB), np.int32),
+            work_len=np.empty((I, N), np.int32),
+            ret_send_idx=np.empty((I, W - 1, S), np.int32),
+            merge_src=np.empty((I, M, W), np.int32),
+            merge_round=np.empty((I, M, W), np.int32),
+            merge_peer_row=np.empty((I, M, W), np.int32),
+        )
+
+    @staticmethod
+    def _reset(tbl: RoutingTables) -> None:
+        for name in ("slot_rid", "q_send_idx", "q_recv_slot", "work_src",
+                     "ret_send_idx", "merge_src", "merge_peer_row"):
+            getattr(tbl, name).fill(-1)
+        for name in ("slot_token", "slot_pos", "slot_active", "append_frame",
+                     "append_off", "work_bt", "work_len", "merge_round"):
+            getattr(tbl, name).fill(0)
+
+
+def _cumcount(keys: np.ndarray) -> np.ndarray:
+    """Number of PRIOR occurrences of keys[i] within keys[:i] (stable)."""
+    n = keys.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int64)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    new_grp = np.empty(n, bool)
+    new_grp[0] = True
+    np.not_equal(sk[1:], sk[:-1], out=new_grp[1:])
+    starts = np.nonzero(new_grp)[0]
+    grp = np.cumsum(new_grp) - 1
+    cc = np.arange(n) - starts[grp]
+    out = np.empty(n, np.int64)
+    out[order] = cc
+    return out
+
+
 def lower_plan(cluster: ClusterState, plan: IterationPlan,
                buckets: ShapeBuckets | None = None,
                append_tokens: bool = True,
-               next_tokens: dict | None = None) -> RoutingTables:
-    """Lower one iteration plan to routing tensors.
+               next_tokens: dict | None = None,
+               arena: TableArena | None = None) -> RoutingTables:
+    """Lower one iteration plan to routing tensors (vectorized).
 
     ``append_tokens``: allocate+record this step's new KV token on each MoE
     binding's shard (mutates the page table — one call per decode step).
     ``next_tokens``: rid -> input token id (defaults to 0; the engine feeds
     sampled ids).
+    ``arena``: optional ``TableArena`` for buffer reuse on the decode hot
+    path (None allocates fresh arrays — safe for callers that hold tables).
+
+    All per-request/per-shard loops are numpy bulk ops over flat pair arrays;
+    the only python-level iteration is the O(requests) collection pass over
+    the host dicts (page table, slot map).
     """
     buckets = buckets or ShapeBuckets(window=cluster.instances_per_node)
     I = cluster.num_instances
     W = cluster.instances_per_node
     page = cluster.page_table.page_size
     pt = cluster.page_table
+    act = cluster.active
+    rids = sorted(act)
+
+    # --- single collection pass over the active set ------------------------
+    # per-slot rows (one per request) and flat per-(request, shard) pair
+    # rows; python only walks the host dicts — every table write below is a
+    # numpy bulk op.  Appends interleave (a request's append only affects
+    # its own shard lengths, read right after).
+    nr = len(rids)
+    r_m = np.empty(nr, np.int64)              # MoE binding / slot instance
+    r_b = np.empty(nr, np.int64)              # slot index
+    r_pos = np.empty(nr, np.int64)            # decode position
+    r_tok = np.empty(nr, np.int64)            # next input token
+    ap_f = np.zeros(nr, np.int64)             # append frame / offset
+    ap_o = np.zeros(nr, np.int64)
+    p_m, p_b, p_s, p_d, p_t = [], [], [], [], []
+    frames_of = []                            # cached np frame views per pair
+    slot_map = cluster.slot_map
+    tok_get = next_tokens.get if next_tokens is not None else None
+
+    for idx, rid in enumerate(rids):
+        req = act[rid]
+        i, b = slot_map[rid]
+        assert i == req.moe_binding, (rid, i, req.moe_binding)
+        r_m[idx], r_b[idx] = i, b
+        r_pos[idx] = (req.dec_prefix_len + req.generated
+                      if req.dec_prefix_len >= 0 else req.length)
+        r_tok[idx] = tok_get(rid, 0) if tok_get is not None else 0
+        if append_tokens:
+            ap_f[idx], ap_o[idx] = pt.append_token(rid, i)
+        shards = pt.shard_tokens(rid)
+        # ring round per shard; distinct shards on one node get distinct
+        # rounds, so the (round, shard) sort equals the round-stable sort
+        for d, s in sorted(((s - i) % W, s) for s in req.kv_binding):
+            p_m.append(i)
+            p_b.append(b)
+            p_s.append(s)
+            p_d.append(d)
+            p_t.append(shards.get(s, 0))
+            frames_of.append(pt.shard_frames_np(rid, s))
+
+    p_m = np.asarray(p_m, np.int64)
+    p_b = np.asarray(p_b, np.int64)
+    p_s = np.asarray(p_s, np.int64)
+    p_d = np.asarray(p_d, np.int64)
+    p_tok = np.asarray(p_t, np.int64)
+    # every CP binding must stay within the sender's node ring
+    assert (p_s // W == p_m // W).all(), "KV binding crosses a node boundary"
 
     # --- observed shape -> bucket -----------------------------------------
     max_batch = cluster.max_slots()
     # per-(sender, round) send counts decide S
-    send_count = np.zeros((I, W), dtype=np.int64)
-    for req in cluster.active.values():
-        m = req.moe_binding
-        for s in req.kv_binding:
-            d = _round_of(cluster, m, s)
-            if d > 0:
-                send_count[m, d] += 1
-    M, S, N = buckets.bucket(max(max_batch, 1), int(send_count.max(initial=0)))
-    # effective rounds: the largest intra-node offset any request uses this
-    # step — steps with only low CP degrees skip the high rotation rounds
-    # entirely (smaller collective term; part of the AOT bucket key)
-    used = np.nonzero(send_count.sum(axis=0))[0]
-    R = int(used.max()) if used.size else 0
-
-    # --- append this step's token on each MoE binding ----------------------
-    append = {}
-    if append_tokens:
-        for req in cluster.active.values():
-            append[req.rid] = pt.append_token(req.rid, req.moe_binding)
+    send_max = 0
+    R = 0
+    if p_d.size:
+        remote = p_d > 0
+        if remote.any():
+            send_max = int(np.bincount(
+                (p_m * W + p_d)[remote]).max())
+            R = int(p_d.max())
+    M, S, N = buckets.bucket(max(max_batch, 1), send_max)
+    assert nr == 0 or (r_b < M).all(), f"slot exceeds bucket M={M}"
 
     # page blocks per work row (post-append shard lengths), quantised to a
     # power of two so the AOT executable family stays bounded
-    max_shard = 1
-    for req in cluster.active.values():
-        for s, t in pt.shard_tokens(req.rid).items():
-            max_shard = max(max_shard, t)
-    MB = _quantize_dim(-(-max_shard // page))
+    max_shard = int(p_tok.max(initial=1))
+    MB = _quantize_dim(-(-max(max_shard, 1) // page))
     # per-stripe block-table width: exact max per-(row, stripe) page count
     ps = cluster.kv_stripes
-    mbt = 1
-    if ps > 1:
-        for req in cluster.active.values():
-            for s_ in req.kv_binding:
-                frames = pt.shard_frames(req.rid, s_)
-                counts = [0] * ps
-                for f in frames:
-                    counts[f % ps] += 1
-                mbt = max(mbt, max(counts))
-        MBT = min(_quantize_dim(mbt), MB)
+    if ps > 1 and frames_of:
+        nfr = np.array([f.shape[0] for f in frames_of], np.int64)
+        if nfr.sum():
+            allf = np.concatenate([f for f in frames_of if f.shape[0]])
+            pair_id = np.repeat(np.arange(len(frames_of)), nfr)
+            mbt = int(np.bincount(pair_id * ps + allf % ps).max())
+        else:
+            mbt = 1
+        MBT = min(_quantize_dim(max(mbt, 1)), MB)
     else:
         MBT = MB
 
-    tbl = RoutingTables(
-        W=W, M=M, S=S, N=N, MB=MB, MBT=MBT, R=R,
-        slot_rid=-np.ones((I, M), np.int32),
-        slot_token=np.zeros((I, M), np.int32),
-        slot_pos=np.zeros((I, M), np.int32),
-        slot_active=np.zeros((I, M), np.int32),
-        append_frame=np.zeros((I, M), np.int32),
-        append_off=np.zeros((I, M), np.int32),
-        q_send_idx=-np.ones((I, W - 1, S), np.int32),
-        q_recv_slot=-np.ones((I, W - 1, S), np.int32),
-        work_src=-np.ones((I, N), np.int32),
-        work_bt=np.zeros((I, N, MB), np.int32),
-        work_len=np.zeros((I, N), np.int32),
-        ret_send_idx=-np.ones((I, W - 1, S), np.int32),
-        merge_src=-np.ones((I, M, W), np.int32),
-        merge_round=np.zeros((I, M, W), np.int32),
-        merge_peer_row=-np.ones((I, M, W), np.int32),
-    )
+    tbl = (arena.tables(I, M, S, N, MB, W) if arena is not None
+           else TableArena._fresh(I, M, S, N, MB, W))
+    if arena is None:
+        TableArena._reset(tbl)
+    tbl.MBT, tbl.R = MBT, R
 
-    slot_of = {}           # rid -> (instance, slot), stable across iterations
-    for rid in sorted(cluster.active):
-            req = cluster.active[rid]
-            i, b = cluster.slot_map[rid]
-            assert i == req.moe_binding, (rid, i, req.moe_binding)
-            assert b < M, f"slot {b} exceeds bucket M={M}"
-            slot_of[rid] = (i, b)
-            tbl.slot_rid[i, b] = rid
-            tbl.slot_active[i, b] = 1
-            tbl.slot_token[i, b] = 0 if next_tokens is None else \
-                next_tokens.get(rid, 0)
-            # decoder-only: absolute position = context length; enc-dec:
-            # decoder position = decoder prefix + generated so far
-            tbl.slot_pos[i, b] = (req.dec_prefix_len + req.generated
-                                  if req.dec_prefix_len >= 0 else req.length)
-            if append_tokens:
-                f, o = append[rid]
-                tbl.append_frame[i, b] = f
-                tbl.append_off[i, b] = o
+    # --- per-slot tensors (bulk writes) ------------------------------------
+    if rids:
+        tbl.slot_rid[r_m, r_b] = np.asarray(rids)
+        tbl.slot_active[r_m, r_b] = 1
+        tbl.slot_token[r_m, r_b] = r_tok
+        tbl.slot_pos[r_m, r_b] = r_pos
+        if append_tokens:
+            tbl.append_frame[r_m, r_b] = ap_f
+            tbl.append_off[r_m, r_b] = ap_o
 
-    # --- work rows, Q-route, Res-route, merge -------------------------------
-    n_rows = np.zeros(I, np.int64)          # next work row per instance
-    n_send = np.zeros((I, W), np.int64)     # next q-send pos per (sender, round)
-    n_ret = np.zeros((I, W), np.int64)      # next ret-send pos per (owner, round)
-    merge_w = np.zeros((I, M), np.int64)    # next merge source per slot
+    # --- work rows, Q-route, Res-route, merge ------------------------------
+    # active pairs: zero-token shards participate only when they are the MoE
+    # binding's local shard (the slot's own work row)
+    keep = (p_tok > 0) | (p_d == 0)
+    if keep.all():
+        k_m, k_b, k_s, k_d, k_tok = p_m, p_b, p_s, p_d, p_tok
+        k_frames = frames_of
+    else:
+        k_m, k_b, k_s, k_d = p_m[keep], p_b[keep], p_s[keep], p_d[keep]
+        k_tok = p_tok[keep]
+        k_frames = [f for f, kp in zip(frames_of, keep) if kp]
+    P_ = k_s.shape[0]
+    if P_ == 0:
+        return tbl
 
-    for rid in sorted(cluster.active):
-        req = cluster.active[rid]
-        m, b = slot_of[rid]
-        shards = pt.shard_tokens(rid)
-        for s in sorted(req.kv_binding, key=lambda s: _round_of(cluster, m, s)):
-            toks = shards.get(s, 0)
-            if toks <= 0 and s != m:
-                continue
-            d = _round_of(cluster, m, s)
-            row = int(n_rows[s])
-            assert row < N, f"work rows exceed bucket N={N} on instance {s}"
-            n_rows[s] += 1
-            frames = pt.shard_frames(rid, s)
-            nb = -(-toks // page) if toks else 0
-            assert nb <= MB
-            tbl.work_bt[s, row, :nb] = frames[:nb]
-            tbl.work_len[s, row] = toks
-            if d == 0:                       # local shard of the MoE binding
-                tbl.work_src[s, row] = b
-                tbl.merge_src[m, b, merge_w[m, b]] = row
-                tbl.merge_round[m, b, merge_w[m, b]] = 0
-                tbl.merge_peer_row[m, b, merge_w[m, b]] = row
-                merge_w[m, b] += 1
-            else:
-                # sender m emits slot b in rotation round d at position p
-                p = int(n_send[m, d])
-                assert p < S, f"send rows exceed bucket S={S}"
-                n_send[m, d] += 1
-                tbl.q_send_idx[m, d - 1, p] = b
-                tbl.q_recv_slot[s, d - 1, p] = b
-                tbl.work_src[s, row] = M + (d - 1) * S + p
-                # owner s returns this row in reverse round d at position p2
-                p2 = int(n_ret[s, d])
-                n_ret[s, d] += 1
-                tbl.ret_send_idx[s, d - 1, p2] = row
-                tbl.merge_src[m, b, merge_w[m, b]] = N + (d - 1) * S + p2
-                tbl.merge_round[m, b, merge_w[m, b]] = d
-                tbl.merge_peer_row[m, b, merge_w[m, b]] = row
-                merge_w[m, b] += 1
+    # running counters -> vectorized cumulative counts (iteration order is
+    # rid-ascending, shards by round — exactly the collection order)
+    row = _cumcount(k_s)                               # work row per instance
+    assert int(row.max(initial=-1)) < N, \
+        f"work rows exceed bucket N={N}"
+    mw = _cumcount(k_m * M + k_b)                      # merge write position
+    loc = k_d == 0
+    rem = ~loc
+    any_rem = bool(rem.any())
+    # for fixed (sender, round) the receiver is determined (ring topology),
+    # so the (m, d) send counter and the (s, d) return counter agree
+    p_pos = np.zeros(P_, np.int64)
+    if any_rem:
+        p_pos[rem] = _cumcount((k_s * W + k_d)[rem])
+        assert int(p_pos.max(initial=0)) < max(S, 1), \
+            f"send rows exceed bucket S={S}"
+
+    tbl.work_len[k_s, row] = k_tok
+
+    # block tables: one flat scatter over (pair, page) coordinates
+    nb_arr = -(-k_tok // page)
+    assert int(nb_arr.max(initial=0)) <= MB
+    total = int(nb_arr.sum())
+    if total:
+        views = [f[:n] for f, n in zip(k_frames, nb_arr) if n]
+        allf = np.concatenate(views)
+        starts = np.cumsum(nb_arr) - nb_arr          # exclusive prefix sum
+        col = np.arange(total) - np.repeat(starts, nb_arr)
+        tbl.work_bt[np.repeat(k_s, nb_arr), np.repeat(row, nb_arr),
+                    col] = allf
+
+    # local rows: slot's own shard on the MoE binding
+    tbl.work_src[k_s[loc], row[loc]] = k_b[loc]
+    tbl.merge_src[k_m[loc], k_b[loc], mw[loc]] = row[loc]
+    tbl.merge_round[k_m[loc], k_b[loc], mw[loc]] = 0
+    tbl.merge_peer_row[k_m[loc], k_b[loc], mw[loc]] = row[loc]
+
+    # remote rows: sender m emits slot b in rotation round d at position p;
+    # owner s computes the row and returns it in reverse round d
+    if any_rem:
+        rm, rb_, rs, rd = k_m[rem], k_b[rem], k_s[rem], k_d[rem]
+        rr, rp, rmw = row[rem], p_pos[rem], mw[rem]
+        tbl.q_send_idx[rm, rd - 1, rp] = rb_
+        tbl.q_recv_slot[rs, rd - 1, rp] = rb_
+        tbl.work_src[rs, rr] = M + (rd - 1) * S + rp
+        tbl.ret_send_idx[rs, rd - 1, rp] = rr
+        tbl.merge_src[rm, rb_, rmw] = N + (rd - 1) * S + rp
+        tbl.merge_round[rm, rb_, rmw] = rd
+        tbl.merge_peer_row[rm, rb_, rmw] = rr
     return tbl
 
 
@@ -227,14 +345,9 @@ def _quantize_dim(x: int, lo: int = 4) -> int:
     v = lo
     while v < x and v < 8:
         v *= 2
-    if v >= x:
-        return v
-    step = max(v // 8, 1)
-    while True:
-        if v >= x:
-            return v
-        step = max(v // 8, 1)
-        v += step
+    while v < x:
+        v += max(v // 8, 1)
+    return v
 
 
 def _round_of(cluster: ClusterState, m: int, s: int) -> int:
@@ -245,11 +358,19 @@ def _round_of(cluster: ClusterState, m: int, s: int) -> int:
 
 
 def as_device_arrays(tbl: RoutingTables):
-    """numpy -> jnp dict (int32), ready to shard over the data axis."""
-    import jax.numpy as jnp
+    """numpy -> jnp dict (int32), ready to shard over the data axis.
+
+    Uses EXPLICIT ``jax.device_put`` so the decode hot path stays clean under
+    ``jax.transfer_guard("disallow")`` (implicit transfers are the bug class
+    the guard catches); with a ``TableArena`` the source host buffers are
+    stable per bucket, so no per-step host allocation happens either.
+    """
+    import jax
     out = {}
     for f in fields(tbl):
         v = getattr(tbl, f.name)
         if isinstance(v, np.ndarray):
-            out[f.name] = jnp.asarray(v, jnp.int32)
+            if v.dtype != np.int32:
+                v = v.astype(np.int32)
+            out[f.name] = jax.device_put(v)
     return out

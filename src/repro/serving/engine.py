@@ -9,9 +9,30 @@ production mesh in the dry-run.
 
 Prefill executes on the reference forward path (``models.transformer``) —
 the paper assumes prefill-decode disaggregation with external prefill (§3).
+
+Decode hot path (the Alg. 2 "dict lookup + replay" contract, made real):
+
+  * The serve state LIVES ON DEVICE for the engine's whole lifetime.  The
+    AOT step executables are compiled with ``donate=True`` and the engine
+    consumes the returned state, so XLA reuses the pool buffers in place
+    (``AOTGraphEngine.note_donation`` audits that donation actually held).
+  * Prefill KV/SSM state is written by jitted on-device scatters
+    (``migrate.PrefillScatter``): page-table coordinates travel as small
+    int32 tensors; all requests admitted in one step batch into one call.
+  * Iterations are pipelined one step ahead: ``step`` lowers iteration t's
+    routing tables while the device still computes iteration t-1, then
+    harvests t-1's tokens (fetched via an async device->host copy started
+    right after dispatch) and only patches the per-slot input-token row
+    before dispatching t.  The host never blocks on the device except for
+    that (usually already complete) token fetch.
+  * Finish-by-length is known at dispatch time and applied immediately so
+    the scheduler reuses pages/slots without waiting a round trip; EOS is
+    only visible in sampled tokens, so an EOS request may execute one extra
+    speculative iteration whose output is discarded.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -32,6 +53,15 @@ class GenResult:
     rid: int
     prompt: list
     tokens: list = field(default_factory=list)
+
+
+@dataclass
+class _Inflight:
+    """One dispatched-but-unharvested decode iteration."""
+    toks: object                 # [I, M] device array; async d2h copy started
+    # (rid, request, instance, slot, is_last) snapshot at dispatch time —
+    # immune to later rebalancing/slot reuse
+    slots: list
 
 
 class NanoCPEngine:
@@ -76,16 +106,30 @@ class NanoCPEngine:
         self.state = dcp.init_serve_state(cfg, self._dims0, num_instances,
                                           dtype=jnp.float32)
         self.aot = AOTGraphEngine(self._build_step)
+        self._scatter = migrate.PrefillScatter(cfg, self._dims0,
+                                               num_instances)
+        self._arena = routing.TableArena()
         self.next_tok: dict = {}
         self.results: dict = {}
         self._prompts: dict = {}
-        self._pending_prefill: list = []
         self.finished: list = []
         self.iterations = 0
+        self._inflight: _Inflight | None = None
+        self._t0 = time.monotonic()
+        # hot-path introspection (benchmarks/decode_step.py, tests)
+        self.timings: dict = {}
+        self.last_bucket: tuple | None = None
+        self.hot_path_stats: dict = {
+            "steps": 0, "async_token_fetches": 0, "speculative_slots": 0}
+        self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
     def add_request(self, prompt_tokens, max_new_tokens: int,
-                    now: float = 0.0) -> int:
+                    now: float | None = None) -> int:
+        now = self._now() if now is None else now
         rid = len(self._prompts)
         self._prompts[rid] = list(map(int, prompt_tokens))
         self.cluster.enqueue(Request(rid=rid, prompt_len=len(prompt_tokens),
@@ -120,85 +164,201 @@ class NanoCPEngine:
         s_sds = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
         fn = dcp.make_serve_step(self.cfg, d, self.mesh, p_sds, s_sds,
-                                 tbl_sds, donate=False)
+                                 tbl_sds, donate=True)
         return fn, (p_sds, s_sds, tbl_sds)
 
     # ------------------------------------------------------------------ #
-    def _prefill(self, req: Request) -> None:
-        toks = jnp.asarray(self._prompts[req.rid])[None, :]
-        logits, caches = transformer.forward(self.cfg, self.params, toks,
-                                             collect_kv=True)
-        first = int(jnp.argmax(logits[0, -1]))
-        self.next_tok[req.rid] = first
-        # the FIRST generated token is sampled from the prefill logits; the
-        # decode loop then extends from it
-        self.results[req.rid].tokens.append(first)
-        state_np = {k: np.array(v) for k, v in self.state.items()}
-        kv_layers, ssm_layers = [], []
-        for bi in range(self.cfg.num_blocks):
-            for li, kind in enumerate(self.cfg.block_pattern()):
+    def _prefill_batch(self, reqs: list, now: float) -> None:
+        """Prefill admitted requests; migrate their KV/SSM state into the
+        on-device pools with ONE donated scatter per state kind.
+
+        The prefill forward runs on device and its caches stay there — the
+        only host work is assembling the small int32 coordinate tensors from
+        the page table (MIGRATE + TRANSFER, §3 (2)-(3))."""
+        pattern = self.cfg.block_pattern()
+        ps = self._scatter.ps
+        page = self._dims0.page
+        kv_k, kv_v, kv_coords = [], [], []
+        ssm_conv, ssm_h, ssm_coords = [], [], []
+        firsts = []
+        for req in reqs:
+            toks = jnp.asarray(self._prompts[req.rid])[None, :]
+            logits, caches = transformer.forward(self.cfg, self.params, toks,
+                                                 collect_kv=True)
+            # the FIRST generated token is sampled from the prefill logits;
+            # the decode loop then extends from it.  Keep the argmax on
+            # device — ONE batched readback happens after every forward has
+            # been enqueued (admission-path readback)
+            firsts.append(jnp.argmax(logits[0, -1]))
+            ks, vs, lats, convs, hs = [], [], [], [], []
+            for li, kind in enumerate(pattern):
                 aux = caches[li]
                 if kind["mixer"] == "attn":
                     a, b = aux["kv"]
-                    kv_layers.append((np.asarray(a[bi, 0]),
-                                      np.asarray(b[bi, 0])))
+                    if self.cfg.is_mla:
+                        lats.append(jnp.concatenate([a[:, 0], b[:, 0]],
+                                                    axis=-1))
+                    else:
+                        ks.append(a[:, 0])
+                        vs.append(b[:, 0])
                 else:
-                    cs, hs = aux["ssm"]
-                    ssm_layers.append((np.asarray(cs[bi, 0]),
-                                       np.asarray(hs[bi, 0])))
-        if kv_layers:
-            migrate.load_prefill_kv(self.cfg, self.cluster, self._dims0,
-                                    state_np, req.rid, kv_layers)
-        if ssm_layers:
-            inst, slot = self.cluster.slot_map[req.rid]
-            migrate.load_prefill_ssm(self.cfg, state_np, inst, slot,
-                                     ssm_layers)
-        self.state = {k: jnp.asarray(v) for k, v in state_np.items()}
-        kv_layers.clear()
+                    cs, hs_ = aux["ssm"]
+                    convs.append(cs[:, 0])
+                    hs.append(hs_[:, 0])
+            if lats:
+                # [nb, na, len, 1, dk] — MLA's single latent "head"
+                kv_k.append(jnp.stack(lats, axis=1)[..., None, :])
+                kv_coords.append(migrate.prefill_coords(
+                    self.cluster, req.rid, page, ps))
+            elif ks:
+                khs = self._scatter.khs
+                kv_k.append(jnp.stack(ks, axis=1)[..., :khs, :])
+                kv_v.append(jnp.stack(vs, axis=1)[..., :khs, :])
+                kv_coords.append(migrate.prefill_coords(
+                    self.cluster, req.rid, page, ps))
+            if convs:
+                inst, slot = self.cluster.slot_map[req.rid]
+                ssm_conv.append(jnp.stack(convs, axis=1)[:, :, None])
+                ssm_h.append(jnp.stack(hs, axis=1)[:, :, None])
+                ssm_coords.append([inst, slot])
+        for req, first in zip(reqs, jax.device_get(firsts)):
+            first = int(first)
+            self.next_tok[req.rid] = first
+            self.results[req.rid].tokens.append(first)
+            req.token_times.append(now)
+        if kv_k:
+            k = jnp.concatenate(kv_k, axis=2)
+            v = jnp.concatenate(kv_v, axis=2) if kv_v else None
+            coords = np.concatenate(kv_coords, axis=1)
+            self.state = self._scatter.scatter_kv(self.state, k, v, coords)
+        if ssm_conv:
+            conv = jnp.concatenate(ssm_conv, axis=2)
+            h = jnp.concatenate(ssm_h, axis=2)
+            coords = np.asarray(ssm_coords, np.int32).T
+            self.state = self._scatter.scatter_ssm(self.state, conv, h,
+                                                   coords)
 
     # ------------------------------------------------------------------ #
-    def step(self, now: float = 0.0) -> list:
-        """One scheduling+decode iteration; returns requests finished now."""
-        plan = self.scheduler.schedule(self.cluster, now)
-        for req in plan.admitted:                      # MIGRATE + TRANSFER
-            self._prefill(req)
-        if not self.cluster.active:
+    def _harvest(self, now: float) -> list:
+        """Materialize the in-flight iteration's tokens (async copy started
+        at dispatch), record them, and apply finishes."""
+        infl = self._inflight
+        if infl is None:
             return []
-        tbl = routing.lower_plan(self.cluster, plan,
-                                 buckets=self.shape_buckets,
-                                 append_tokens=self.cfg.has_attention,
-                                 next_tokens=self.next_tok)
-        key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
-        # re-pad block tables to the quantised MB bucket
-        if key[2] != tbl.MB:
-            pad = key[2] - tbl.MB
-            tbl.work_bt = np.pad(tbl.work_bt, ((0, 0), (0, 0), (0, pad)))
-        fn = self.aot.lookup(tbl.M, tbl.S, tbl.MB, tbl.W)
-        tbl_dev = routing.as_device_arrays(tbl)
-        self.state, toks, _ = fn(self.decode_params, self.state, tbl_dev)
-        toks = np.asarray(toks)
-        self.iterations += 1
-
+        self._inflight = None
+        t0 = time.perf_counter()
+        toks = np.asarray(jax.device_get(infl.toks))
+        self.timings["harvest_us"] = (time.perf_counter() - t0) * 1e6
+        self.hot_path_stats["async_token_fetches"] += 1
         done = []
-        for rid in list(self.cluster.active):
-            req = self.cluster.active[rid]
-            i, b = self.cluster.slot_map[rid]
+        for rid, req, i, b, last in infl.slots:
             t = int(toks[i, b])
             self.results[rid].tokens.append(t)
             self.next_tok[rid] = t
-            req.generated += 1
             req.token_times.append(now)
-            if (len(self.results[rid].tokens) >= req.max_new_tokens
-                    or (self.eos is not None and t == self.eos)):
+            if last:
+                # cluster bookkeeping already done at dispatch; stamp the
+                # actual emission time now that the token materialized
+                req.finish_time = now
+                self.finished.append(req)
                 done.append(req)
-        for req in done:
+            elif self.eos is not None and t == self.eos:
+                # EOS is only visible post-readback: the request may already
+                # be lowered into the next iteration (one speculative slot,
+                # output discarded at the next harvest)
+                if rid in self.cluster.active:
+                    self.cluster.finish(req, now)
+                    self.hot_path_stats["speculative_slots"] += 1
+                self.finished.append(req)
+                done.append(req)
+        return done
+
+    # ------------------------------------------------------------------ #
+    def step(self, now: float | None = None) -> list:
+        """One scheduling+decode iteration, pipelined one step ahead.
+
+        Returns the requests whose completion became visible during this
+        call (i.e. at the harvest of the previously dispatched iteration).
+        """
+        t_step = time.perf_counter()
+        now = self._now() if now is None else now
+        self.timings = {}
+
+        # -- schedule + admit (prefill -> on-device KV migration) ----------
+        plan = self.scheduler.schedule(self.cluster, now)
+        if plan.admitted:
+            t0 = time.perf_counter()
+            self._prefill_batch(plan.admitted, now)
+            self.timings["prefill_us"] = (time.perf_counter() - t0) * 1e6
+        if not self.cluster.active:
+            return self._harvest(now)          # drain a trailing iteration
+
+        # -- lower THIS iteration's tables while the device computes the
+        #    previous one (routing never depends on token VALUES) ----------
+        t0 = time.perf_counter()
+        tbl = routing.lower_plan(self.cluster, plan,
+                                 buckets=self.shape_buckets,
+                                 append_tokens=self.cfg.has_attention,
+                                 next_tokens=self.next_tok,
+                                 arena=self._arena)
+        key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
+        # lower_plan already quantised MB on the same (idempotent) ladder;
+        # a mismatch would mean the arena buffers no longer match the AOT
+        # executable's expected shape
+        assert key[2] == tbl.MB, (key, tbl.MB)
+        self.timings["lower_us"] = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        fn = self.aot.lookup_key(key)
+        self.timings["lookup_us"] = (time.perf_counter() - t0) * 1e6
+
+        # -- harvest the previous iteration (tokens usually already home) --
+        done = self._harvest(now)
+
+        # -- patch per-slot input tokens now that they are all known -------
+        for rid in self.cluster.active:
+            i, b = self.cluster.slot_map[rid]
+            tbl.slot_token[i, b] = self.next_tok[rid]
+        tbl_dev = routing.as_device_arrays(tbl)
+
+        # -- dispatch (async) + start the token readback copy --------------
+        t0 = time.perf_counter()
+        check = self.aot.stats.donation_checks < 8
+        in_ptrs = self.aot.buffer_ptrs(self.state) if check else None
+        self.state, toks, _ = fn(self.decode_params, self.state, tbl_dev)
+        try:
+            toks.copy_to_host_async()
+        except AttributeError:
+            pass
+        self.timings["dispatch_us"] = (time.perf_counter() - t0) * 1e6
+        if check:
+            self.aot.note_donation(in_ptrs, self.state)
+
+        # -- dispatch-time bookkeeping: the iteration WILL emit one token
+        #    per active slot; length-based finishes are deterministic, so
+        #    free their pages/slots for the next schedule immediately ------
+        snapshot = []
+        length_done = []
+        for rid in list(self.cluster.active):
+            req = self.cluster.active[rid]
+            i, b = self.cluster.slot_map[rid]
+            req.generated += 1
+            last = len(self.results[rid].tokens) + 1 >= req.max_new_tokens
+            snapshot.append((rid, req, i, b, last))
+            if last:
+                length_done.append(req)
+        for req in length_done:
             self.cluster.finish(req, now)
-            self.finished.append(req)
+        self._inflight = _Inflight(toks, snapshot)
+        self.iterations += 1
+        self.last_bucket = key
+        self.hot_path_stats["steps"] += 1
+        self.timings["step_us"] = (time.perf_counter() - t_step) * 1e6
         return done
 
     def run(self, max_iters: int = 1000) -> dict:
         it = 0
-        while (self.cluster.active or self.cluster.waiting) and it < max_iters:
-            self.step(float(it))
+        while ((self.cluster.active or self.cluster.waiting
+                or self._inflight is not None) and it < max_iters):
+            self.step()
             it += 1
         return self.results

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .. import models
+from ..compat import shard_map as _shard_map
 from .optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
@@ -138,9 +139,9 @@ def make_hybrid_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh, *,
     batch_in = {"tokens": P(dp, None), "targets": P(dp, None)}
     if cfg.is_encoder_decoder:
         batch_in["frames"] = P(dp, None, None)
-    fn = jax.shard_map(grad_body, mesh=mesh,
-                       in_specs=(P(), batch_in), out_specs=(P(), P()),
-                       axis_names=frozenset(dp_axes), check_vma=False)
+    fn = _shard_map(grad_body, mesh=mesh,
+                    in_specs=(P(), batch_in), out_specs=(P(), P()),
+                    axis_names=frozenset(dp_axes), check_vma=False)
 
     def train_step(params, opt_state, batch):
         loss, grads = fn(params, batch)
@@ -172,9 +173,9 @@ def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
         return loss, grads
 
     batch_spec = jax.tree.map(lambda _: P(data_axes), {"tokens": 0, "targets": 0})
-    fn = jax.shard_map(shard_body, mesh=mesh,
-                       in_specs=(P(), batch_spec),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = _shard_map(shard_body, mesh=mesh,
+                    in_specs=(P(), batch_spec),
+                    out_specs=(P(), P()), check_vma=False)
 
     def train_step(params, opt_state, batch):
         loss, grads = fn(params, batch)

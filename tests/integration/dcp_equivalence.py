@@ -4,6 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
 
+from repro import compat
 from repro.configs import CONFIGS, reduced
 from repro.models import transformer
 from repro.models import init_params
@@ -42,8 +43,7 @@ def run_equiv(arch, backend="routed", steps=4, seed=0, I=4, TP=2):
     plan = sched.schedule(cluster)
     assert len(plan.admitted) == len(prompts)
 
-    mesh = jax.make_mesh((I, TP), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
     M0 = 8 if is_ssm_family else 2
     dims0 = dcp.DecodeDims(M=M0, S=2, N=M0 + 3 * 2, MB=0, W=W,
                            num_frames=cluster.page_table.frames_per_instance + 1,

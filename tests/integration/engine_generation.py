@@ -1,6 +1,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
 from repro.configs import CONFIGS, reduced
 from repro.models import init_params, transformer
 from repro.serving.engine import NanoCPEngine
@@ -9,7 +10,7 @@ from repro.core.bucketing import CPBuckets, ShapeBuckets
 cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2, vocab_size=256)
 rng = jax.random.PRNGKey(0)
 params = jax.tree.map(lambda x: x.astype(jnp.float32), init_params(rng, cfg))
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 
 eng = NanoCPEngine(cfg, params, mesh, num_instances=4, instances_per_node=4,
                    kv_capacity_tokens=2048, page_size=16,

@@ -2,6 +2,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import CONFIGS, reduced
 from repro.models import init_params
 from repro.training import data, optimizer, train_step
@@ -10,8 +11,7 @@ cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2)
 params = jax.tree.map(lambda x: x.astype(jnp.float32),
                       init_params(jax.random.PRNGKey(0), cfg))
 opt_cfg = optimizer.AdamWConfig(lr=1e-3)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 ds = data.SyntheticTokens(cfg, batch=8, seq_len=32)
 batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
 
@@ -19,7 +19,7 @@ exact = jax.jit(train_step.make_train_step(cfg, opt_cfg, num_micro=2))
 opt = optimizer.init_opt_state(params)
 p_exact, _, s_exact = exact(params, opt, batch)
 
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     hyb = jax.jit(train_step.make_hybrid_train_step(
         cfg, opt_cfg, mesh, num_micro=2, compress=None))
     opt2 = optimizer.init_opt_state(params)

@@ -4,6 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
 
+from repro import compat
 from repro.configs import CONFIGS, reduced
 from repro.models import encdec, init_params
 from repro.core import dcp, migrate, routing
@@ -34,8 +35,7 @@ plan = sched.schedule(cluster)
 assert len(plan.admitted) == len(reqs)
 print("bindings:", {q.rid: (q.moe_binding, q.kv_binding) for q in cluster.active.values()})
 
-mesh = jax.make_mesh((I, TP), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((I, TP), ("data", "model"))
 dims = dcp.DecodeDims(M=1, S=1, N=4, MB=0, W=W,
                       num_frames=cluster.page_table.frames_per_instance + 1,
                       page=PAGE, data_size=I, tp=TP)
