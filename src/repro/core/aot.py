@@ -53,12 +53,28 @@ class AOTStats:
 class AOTGraphEngine:
     """Offline capture + online replay of bucketed step executables."""
 
+    # donation checks sampled by default: only the first WARMUP_CHECKS
+    # dispatches read back buffer pointers (reading output pointers may
+    # synchronize the stream)
+    WARMUP_CHECKS = 8
+
     def __init__(self, step_builder, mb_grid=(8, 16, 32, 64, 128, 256, 512,
-                                              1024, 2048, 4096, 8192)):
+                                              1024, 2048, 4096, 8192),
+                 audit_every_step: bool = False):
         self._builder = step_builder
         self._mb_grid = mb_grid
         self._cache: dict = {}
         self.stats = AOTStats()
+        # debug mode: audit donation on EVERY step instead of sampling the
+        # warmup ones.  Cheap on accelerator backends where
+        # ``unsafe_buffer_pointer`` is a metadata read; catches a
+        # copy-on-donate regression the moment a recompile introduces it.
+        self.audit_every_step = audit_every_step
+
+    def should_audit_donation(self) -> bool:
+        """Whether the caller should capture pointers for this dispatch."""
+        return (self.audit_every_step
+                or self.stats.donation_checks < self.WARMUP_CHECKS)
 
     # ---------------- bucket resolution (Alg. 2 l.19) ----------------
     def quantise(self, M: int, S: int, MB: int, W: int) -> tuple:

@@ -62,6 +62,13 @@ class DecodeDims:
     rounds_used: int = -1            # effective W-1 rounds (-1 = all)
     MBT: int = 0                     # page blocks per work row per kv stripe
                                      # (0 -> MB; hybrid sharding)
+    eos: int = -1                    # stop token id; >= 0 enables the
+                                     # device-side EOS mask: a slot whose
+                                     # INPUT token is eos (the one-step-late
+                                     # speculative step of an EOS finish) is
+                                     # treated as inactive — its KV append is
+                                     # redirected to the scratch frame and
+                                     # its sampled token comes back as -1
 
     @property
     def num_rounds(self) -> int:
@@ -81,6 +88,12 @@ def attn_tp_geometry(cfg: ModelConfig, tp: int):
             single latent head) stripes pages across ALL tp devices — no KV
             replication anywhere (beyond-paper memory optimisation,
             EXPERIMENTS.md §Perf).
+
+    When tp < Hkv each shard owns a GROUP of kg = Hkv/tp kv heads
+    (``kv_group_size``): the per-device sub-pool stores kg heads per token
+    (last dim kg*hd) and the paged kernel's kv-head grid indexes within the
+    group.  Grouping (kg>1) and page striping (ps>1) are mutually exclusive
+    by construction.
     """
     if not cfg.has_attention:                  # SSM-only: no attention geometry
         return 0, 1, 1
@@ -88,7 +101,18 @@ def attn_tp_geometry(cfg: ModelConfig, tp: int):
     hkv = 1 if cfg.is_mla else cfg.num_kv_heads
     khs = min(hkv, tp)
     assert tp % khs == 0, (hkv, tp)
+    assert hkv % khs == 0, \
+        f"tp={tp} < num_kv_heads={hkv} needs tp | num_kv_heads for head groups"
     return hp, khs, tp // khs
+
+
+def kv_group_size(cfg: ModelConfig, tp: int) -> int:
+    """kv heads co-resident on one model chunk (tp < Hkv head-grouping)."""
+    if not cfg.has_attention:
+        return 1
+    hkv = 1 if cfg.is_mla else max(cfg.num_kv_heads, 1)
+    _, khs, _ = attn_tp_geometry(cfg, tp)
+    return hkv // khs
 
 
 def _head_perm(hp: int, tp: int, khs: int) -> list[int]:
@@ -132,12 +156,15 @@ def _head_tools(cfg: ModelConfig, tp: int):
         return w.reshape(hp * per, D)
 
     def tile_kv(w, per):
-        """[..., Hkv*per] -> [..., tp*per]: kv head layout [p0h0..p0hK,
-        p1h0..] so model-chunk c = p*khs + h holds kv head h."""
-        shape = w.shape[:-1] + (hkv, per)
+        """[..., Hkv*per] -> [..., tp*(kg*per)]: kv head layout [p0h0..p0hK,
+        p1h0..] so model-chunk c = p*khs + h holds kv-head GROUP h, i.e. the
+        kg = Hkv/khs heads [h*kg, (h+1)*kg) in order (kg=1 unless tp < Hkv,
+        in which case ps=1 and the layout is plain grouped column TP)."""
+        kg = hkv // khs
+        shape = w.shape[:-1] + (khs, kg * per)
         w = w.reshape(shape)
         w = jnp.concatenate([w] * ps, axis=-2)
-        return w.reshape(w.shape[:-2] + (tp * per,))
+        return w.reshape(w.shape[:-2] + (tp * kg * per,))
 
     return pad_q, pad_q_rows, tile_kv, perm
 
@@ -251,14 +278,16 @@ def init_serve_state(cfg: ModelConfig, dims: DecodeDims, num_instances: int,
     state = {}
     if n_attn:
         _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+        kg = kv_group_size(cfg, dims.tp)
         fp = -(-(dims.num_frames - 1) // ps) + 1     # frames/stripe + scratch
         if cfg.is_mla:
             dk = cfg.kv_lora_rank + cfg.qk_rope_head_dim
             state["kv_pool"] = jnp.zeros(
                 (nb, n_attn, I, dims.tp, fp, dims.page, dk), dtype)
         else:
+            # last dim kg*hd: each model chunk stores its kv-head GROUP
             state["k_pool"] = jnp.zeros(
-                (nb, n_attn, I, dims.tp, fp, dims.page, hd), dtype)
+                (nb, n_attn, I, dims.tp, fp, dims.page, kg * hd), dtype)
             state["v_pool"] = jnp.zeros_like(state["k_pool"])
     if n_ssm:
         din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
@@ -277,6 +306,24 @@ def init_serve_state(cfg: ModelConfig, dims: DecodeDims, num_instances: int,
 # =========================================================================== #
 # per-device step (runs inside shard_map)
 # =========================================================================== #
+def _mask_eos_slots(dims: DecodeDims, tbl: dict, tokens):
+    """Device-side stop-token check (`dims.eos`).
+
+    A slot whose input token equals the stop token can only be the
+    speculative step of an EOS finish (the pipelined engine lowers iteration
+    t+1 before iteration t's sampled EOS is visible on the host): clearing
+    ``slot_active`` for it makes the KV append land in the scratch frame and
+    the sampled token come back -1 — the EOS request finishes without a
+    stray KV entry, and the mask costs one compare+and per slot, surviving
+    ``donate=True`` (it rewrites no state)."""
+    if dims.eos < 0:
+        return tbl
+    live = (tbl["slot_active"][0] != 0) & (tokens != dims.eos)
+    tbl = dict(tbl)
+    tbl["slot_active"] = live[None].astype(jnp.int32)
+    return tbl
+
+
 def _embed_lookup(embed_local, tokens, vs_local, tp_axis):
     """Vocab-sharded embedding: masked local gather + psum."""
     j = jax.lax.axis_index(tp_axis)
@@ -326,11 +373,12 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
                    tbl, *, dk, dv, geom):
     """Phases 1-4 for one attention layer (per device).
 
-    q: [M, hl, dk] local-slot queries.  k_pool/v_pool: [F', page, dk|dv]
-    — the device's hybrid-sharded sub-pool: kv head h_j = chunk % khs, page
+    q: [M, hl, dk] local-slot queries.  k_pool/v_pool: [F', page, kg*(dk|dv)]
+    — the device's hybrid-sharded sub-pool: kv-head group h_j = chunk % khs
+    (kg = Hkv/khs heads per group, flattened into the last dim), page
     stripe p_j = chunk // khs (geom = (hp, khs, ps); DESIGN.md §2).
-    new_k/new_v: [M, dk|dv] this step's token KV for the device's kv head
-    (written at append_frame/off iff the frame's stripe is p_j), or
+    new_k/new_v: [M, kg*(dk|dv)] this step's token KV for the device's kv
+    heads (written at append_frame/off iff the frame's stripe is p_j), or
     new_k=None for read-only pools (whisper cross-attention).
     Returns merged [M, hl, dv], updated (k_pool, v_pool).
     """
@@ -338,6 +386,9 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
     R = dims.num_rounds
     hp, khs, ps = geom
     hl = hp // dims.tp
+    Fp, page = k_pool.shape[0], k_pool.shape[1]
+    kg = k_pool.shape[-1] // dk                     # kv heads per model chunk
+    assert kg == 1 or ps == 1, (kg, ps)
     j = jax.lax.axis_index(dims.model)
     p_j = j // khs
     groups = [[p * khs + h for p in range(ps)] for h in range(khs)]
@@ -347,7 +398,6 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
         # Only the frame's stripe owner writes; everyone else (and inactive
         # slots) scatters into the local scratch frame (last frame of the
         # sub-pool, never handed out by the allocator).
-        Fp, page = k_pool.shape[0], k_pool.shape[1]
         act = tbl["slot_active"][0].astype(bool)
         af_g = tbl["append_frame"][0]
         mine = act & ((af_g % ps) == p_j) if ps > 1 else act
@@ -392,8 +442,9 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
                                        ps, p_j, dims.MBT or dims.MB, dims.page)
     else:
         bt_dev, len_dev = tbl["work_bt"][0], tbl["work_len"][0]
-    kp = k_pool[:, :, None, :]                                     # [F',page,1,dk]
-    vp = (v_pool if v_pool is not None else k_pool[..., :dv])[:, :, None, :]
+    kp = k_pool.reshape(Fp, page, kg, dk)                          # [F',page,kg,dk]
+    vp = (v_pool.reshape(Fp, page, kg, dv) if v_pool is not None
+          else kp[..., :dv])
     out, lse = ops.paged_decode_attention(
         q_work, kp, vp, bt_dev, len_dev,
         scale=dk ** -0.5 if cfg.attention != "mla" else
@@ -479,6 +530,7 @@ def _attn_layer(cfg, dims, lp, x, pos, pools, tbl, hl, geom):
         o = o.reshape(M, hl * dv) @ lp["mixer"]["wo"]
         return jax.lax.psum(o, dims.model), (kp, None)
     mx = lp["mixer"]
+    kg = kv_group_size(cfg, dims.tp)
     q = h @ mx["wq"]
     k = h @ mx["wk"]
     v = h @ mx["wv"]
@@ -487,12 +539,12 @@ def _attn_layer(cfg, dims, lp, x, pos, pools, tbl, hl, geom):
         k = k + mx["bk"].astype(k.dtype)
         v = v + mx["bv"].astype(v.dtype)
     q = q.reshape(M, hl, hd)
-    k = k.reshape(M, 1, hd)                                        # local kv head
+    k = k.reshape(M, kg, hd)                              # local kv-head group
     if cfg.qk_norm:
         q = L.rms_norm_vec(q, mx["q_norm"])
         k = L.rms_norm_vec(k, mx["k_norm"])
     q = L.apply_rope(q, pos, cfg.rope_theta)
-    k = L.apply_rope(k, pos, cfg.rope_theta)[:, 0, :]
+    k = L.apply_rope(k, pos, cfg.rope_theta).reshape(M, kg * hd)
     merged, kp, vp = _dcp_attention(cfg, dims, q, pools[0], pools[1],
                                     k, v, tbl, dk=hd, dv=hd, geom=geom)
     o = merged.reshape(M, hl * hd) @ mx["wo"]
@@ -558,6 +610,7 @@ def build_decode_step(cfg: ModelConfig, dims: DecodeDims):
     def step(params, state, tbl):
         tokens = tbl["slot_token"][0]                              # [M]
         pos = tbl["slot_pos"][0]
+        tbl = _mask_eos_slots(dims, tbl, tokens)
         x = _embed_lookup(params["embed"]["tok"], tokens, vs_local, dims.model)
         x = x.astype(params["embed"]["tok"].dtype)   # carry dtype = param dtype
 
@@ -643,17 +696,20 @@ def build_decode_step(cfg: ModelConfig, dims: DecodeDims):
 def init_encdec_serve_state(cfg: ModelConfig, dims: DecodeDims,
                             num_instances: int, dtype=jnp.bfloat16) -> dict:
     """Cross-attn KV is the big DCP-managed paged pool (seq_len enc states);
-    decoder self-attn KV is a small per-slot contiguous cache."""
+    decoder self-attn KV is a small per-slot contiguous cache.  Last dim is
+    kg*hd: each model chunk stores its whole kv-head group (kg=1 unless
+    tp < num_kv_heads)."""
     I, L = num_instances, cfg.num_layers
     hd = cfg.head_dim_
     _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    kg = kv_group_size(cfg, dims.tp)
     fp = -(-(dims.num_frames - 1) // ps) + 1
     T = cfg.max_target_positions
     return {
-        "cross_k_pool": jnp.zeros((L, I, dims.tp, fp, dims.page, hd), dtype),
-        "cross_v_pool": jnp.zeros((L, I, dims.tp, fp, dims.page, hd), dtype),
-        "self_k": jnp.zeros((L, I, dims.tp, dims.M, T, hd), dtype),
-        "self_v": jnp.zeros((L, I, dims.tp, dims.M, T, hd), dtype),
+        "cross_k_pool": jnp.zeros((L, I, dims.tp, fp, dims.page, kg * hd), dtype),
+        "cross_v_pool": jnp.zeros((L, I, dims.tp, fp, dims.page, kg * hd), dtype),
+        "self_k": jnp.zeros((L, I, dims.tp, dims.M, T, kg * hd), dtype),
+        "self_v": jnp.zeros((L, I, dims.tp, dims.M, T, kg * hd), dtype),
     }
 
 
@@ -664,11 +720,13 @@ def build_encdec_decode_step(cfg: ModelConfig, dims: DecodeDims):
     hp = geom[0]
     hl = hp // dims.tp
     hd = cfg.head_dim_
+    kg = kv_group_size(cfg, dims.tp)
     vs_local = cfg.padded_vocab // dims.tp
     M = dims.M
 
     def self_attention(lp, h, pos, sk, sv):
-        """Contiguous small self-attn cache: write at pos, attend [0..pos]."""
+        """Contiguous small self-attn cache: write at pos, attend [0..pos].
+        sk/sv: [M, T, kg*hd] — the model chunk's kv-head group."""
         mx = lp["self_attn"]
         q = h @ mx["wq"]
         k = h @ mx["wk"]
@@ -680,14 +738,16 @@ def build_encdec_decode_step(cfg: ModelConfig, dims: DecodeDims):
         q = q.reshape(M, hl, hd)
         sk = sk.at[jnp.arange(M), pos].set(k.astype(sk.dtype))
         sv = sv.at[jnp.arange(M), pos].set(v.astype(sv.dtype))
-        o, _ = ref.decode_attention_dense(q, sk[:, :, None, :],
-                                          sv[:, :, None, :], pos + 1)
+        T = sk.shape[1]
+        o, _ = ref.decode_attention_dense(q, sk.reshape(M, T, kg, hd),
+                                          sv.reshape(M, T, kg, hd), pos + 1)
         o = o.reshape(M, hl * hd) @ mx["wo"]
         return jax.lax.psum(o, dims.model), sk, sv
 
     def step(params, state, tbl):
         tokens = tbl["slot_token"][0]
         pos = tbl["slot_pos"][0]                      # decoder position
+        tbl = _mask_eos_slots(dims, tbl, tokens)
         x = _embed_lookup(params["embed"]["tok"], tokens, vs_local, dims.model)
         x = x + params["embed"]["pos_dec"][pos].astype(x.dtype)
         x = x.astype(params["embed"]["pos_dec"].dtype)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..configs.base import ModelConfig
-from .dcp import DecodeDims, attn_tp_geometry
+from .dcp import DecodeDims, attn_tp_geometry, kv_group_size
 from .state import ClusterState
 
 
@@ -57,9 +57,11 @@ def load_prefill_kv(cfg: ModelConfig, cluster: ClusterState, dims: DecodeDims,
     pt = cluster.page_table
     ranges = shard_ranges(cluster, rid)
     _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    kg = kv_group_size(cfg, dims.tp)
 
-    # hybrid sub-pool addressing: frame f of kv head h lives in sub-pool
-    # chunk c = (f % ps)*khs + h at local frame f // ps (core/dcp.py)
+    # hybrid sub-pool addressing: frame f of kv-head group h lives in
+    # sub-pool chunk c = (f % ps)*khs + h at local frame f // ps; the chunk
+    # stores its kg = Hkv/khs heads flattened into the last dim (core/dcp.py)
     for a, kv in enumerate(kv_layers):
         bi, pos = attn_layer_index(cfg, a)
         if cfg.is_mla:
@@ -83,8 +85,11 @@ def load_prefill_kv(cfg: ModelConfig, cluster: ClusterState, dims: DecodeDims,
                     f, o = frames[j // page], j % page
                     for h in range(khs):
                         c = (f % ps) * khs + h
-                        kp[bi, pos, s, c, f // ps, o] = k[start + j, h]
-                        vp[bi, pos, s, c, f // ps, o] = v[start + j, h]
+                        grp = slice(h * kg, (h + 1) * kg)
+                        kp[bi, pos, s, c, f // ps, o] = \
+                            k[start + j, grp].reshape(-1)
+                        vp[bi, pos, s, c, f // ps, o] = \
+                            v[start + j, grp].reshape(-1)
 
 
 def load_prefill_ssm(cfg: ModelConfig, state_np: dict, instance: int,
@@ -130,10 +135,12 @@ def prefill_coords(cluster: ClusterState, rid: int, page: int,
 class PrefillScatter:
     """Jitted, donated scatters loading prefill output into the serve state.
 
-    One executable per padded token-count bucket (``_quantize_dim`` ladder,
-    so the family stays bounded); padding rows carry ``instance = I`` and
-    are dropped by the scatter (``mode='drop'``).  The state argument is
-    donated, so steady-state admission reuses the pool buffers in place.
+    One compiled executable per padded token-count bucket (``_quantize_dim``
+    ladder keeps the shape family bounded; ``jax.jit`` specializes per
+    shape); padding rows carry ``instance = I`` and are dropped by the
+    scatter (``mode='drop'``).  The state argument is donated and the
+    output shardings are pinned to the state's own, so steady-state
+    admission reuses the pool buffers in place.
     """
 
     def __init__(self, cfg: ModelConfig, dims: DecodeDims,
@@ -142,14 +149,45 @@ class PrefillScatter:
         self.dims = dims
         self.I = num_instances
         _, self.khs, self.ps = attn_tp_geometry(cfg, dims.tp)
-        self._kv_fns: dict = {}
-        self._ssm_fns: dict = {}
+        self.kg = kv_group_size(cfg, dims.tp)
+        self._fns: dict = {}
+        self._state_shardings: dict | None = None
+
+    def _out_shardings(self, state: dict) -> dict:
+        """Pin scatter outputs to the serve state's own shardings: without
+        this, GSPMD may pick a different output layout (e.g. model-sharding
+        the SSM conv dims), which both breaks donation aliasing and
+        mismatches the AOT step executable's compiled input shardings."""
+        if self._state_shardings is None:
+            self._state_shardings = {k: v.sharding for k, v in state.items()}
+        return {k: self._state_shardings[k] for k in state}
+
+    def _jit(self, kind: str, body, state: dict):
+        """One donated jitted fn per scatter kind (jit re-specializes per
+        padded bucket shape, so the executable family stays bounded)."""
+        fn = self._fns.get(kind)
+        if fn is None:
+            import jax
+            fn = jax.jit(body, donate_argnums=(0,),
+                         out_shardings=self._out_shardings(state))
+            self._fns[kind] = fn
+        return fn
 
     # -- bucketing ---------------------------------------------------------
     @staticmethod
     def _bucket(n: int) -> int:
         from .routing import _quantize_dim
         return _quantize_dim(max(n, 1))
+
+    @staticmethod
+    def _pad_to(x, axis: int, n: int):
+        """Zero-pad ``x`` along ``axis`` up to length n (no-op if equal)."""
+        if x is None or x.shape[axis] == n:
+            return x
+        import jax.numpy as jnp
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, n - x.shape[axis])
+        return jnp.pad(x, pad)
 
     def _pad_coords(self, coords: np.ndarray, nb: int):
         """Pad [k, n] coords to n=nb with out-of-range instance ids."""
@@ -160,85 +198,108 @@ class PrefillScatter:
         return jnp.asarray(np.concatenate([coords, pad], axis=1))
 
     # -- attention KV ------------------------------------------------------
-    def _kv_fn(self, tb: int):
-        fn = self._kv_fns.get(tb)
-        if fn is not None:
-            return fn
-        import jax
+    def _kv_body(self, state, k, v, inst, stripe, subf, off):
+        khs = self.khs
         import jax.numpy as jnp
-        khs, mla = self.khs, self.cfg.is_mla
-
-        def scatter(state, k, v, inst, stripe, subf, off):
-            c = stripe[:, None] * khs + jnp.arange(khs, dtype=jnp.int32)
-            ii, ff, oo = inst[:, None], subf[:, None], off[:, None]
-            state = dict(state)
-            if mla:
-                kp = state["kv_pool"]
-                state["kv_pool"] = kp.at[:, :, ii, c, ff, oo].set(
-                    k.astype(kp.dtype), mode="drop")
-            else:
-                kp, vp = state["k_pool"], state["v_pool"]
-                state["k_pool"] = kp.at[:, :, ii, c, ff, oo].set(
-                    k.astype(kp.dtype), mode="drop")
-                state["v_pool"] = vp.at[:, :, ii, c, ff, oo].set(
-                    v.astype(vp.dtype), mode="drop")
-            return state
-
-        fn = jax.jit(scatter, donate_argnums=(0,))
-        self._kv_fns[tb] = fn
-        return fn
+        c = stripe[:, None] * khs + jnp.arange(khs, dtype=jnp.int32)
+        ii, ff, oo = inst[:, None], subf[:, None], off[:, None]
+        state = dict(state)
+        if self.cfg.is_mla:
+            kp = state["kv_pool"]
+            state["kv_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                k.astype(kp.dtype), mode="drop")
+        else:
+            kp, vp = state["k_pool"], state["v_pool"]
+            state["k_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                k.astype(kp.dtype), mode="drop")
+            state["v_pool"] = vp.at[:, :, ii, c, ff, oo].set(
+                v.astype(vp.dtype), mode="drop")
+        return state
 
     def scatter_kv(self, state: dict, k, v, coords: np.ndarray) -> dict:
-        """k (and v for non-MLA): [nb, na, T, khs, d] device arrays; coords
-        from ``prefill_coords`` (concatenated over the admitted batch)."""
-        import jax.numpy as jnp
-        T = k.shape[2]
-        tb = self._bucket(T)
-        if tb != T:
-            pad = [(0, 0), (0, 0), (0, tb - T), (0, 0), (0, 0)]
-            k = jnp.pad(k, pad)
-            v = jnp.pad(v, pad) if v is not None else None
+        """k (and v for non-MLA): [nb, na, T, khs, kg*d] device arrays (the
+        Hkv head axis reshaped to khs groups of kg heads); coords from
+        ``prefill_coords`` (concatenated over the admitted batch)."""
+        tb = self._bucket(k.shape[2])
+        k = self._pad_to(k, 2, tb)
+        v = self._pad_to(v, 2, tb)
         cs = self._pad_coords(coords, tb)
         if v is None:
             v = k                                     # unused by the MLA path
-        return self._kv_fn(tb)(state, k, v, cs[0], cs[1], cs[2], cs[3])
+        return self._jit("kv", self._kv_body, state)(
+            state, k, v, cs[0], cs[1], cs[2], cs[3])
 
     # -- SSM state ---------------------------------------------------------
-    def _ssm_fn(self, rb: int):
-        fn = self._ssm_fns.get(rb)
-        if fn is not None:
-            return fn
-        import jax
+    def _ssm_body(self, state, conv, h, inst, slot):
         din, ns = self.cfg.ssm_d_inner, self.cfg.ssm_state
-
-        def scatter(state, conv, h, inst, slot):
-            state = dict(state)
-            for name, lo, hi in (("conv_x", 0, din),
-                                 ("conv_B", din, din + ns),
-                                 ("conv_C", din + ns, conv.shape[-1])):
-                dst = state[name]
-                state[name] = dst.at[:, :, inst, slot].set(
-                    conv[..., lo:hi].astype(dst.dtype), mode="drop")
-            st = state["ssm_state"]
-            state["ssm_state"] = st.at[:, :, inst, slot].set(
-                h.astype(st.dtype), mode="drop")
-            return state
-
-        fn = jax.jit(scatter, donate_argnums=(0,))
-        self._ssm_fns[rb] = fn
-        return fn
+        state = dict(state)
+        for name, lo, hi in (("conv_x", 0, din),
+                             ("conv_B", din, din + ns),
+                             ("conv_C", din + ns, conv.shape[-1])):
+            dst = state[name]
+            state[name] = dst.at[:, :, inst, slot].set(
+                conv[..., lo:hi].astype(dst.dtype), mode="drop")
+        st = state["ssm_state"]
+        state["ssm_state"] = st.at[:, :, inst, slot].set(
+            h.astype(st.dtype), mode="drop")
+        return state
 
     def scatter_ssm(self, state: dict, conv, h, inst_slot: np.ndarray) -> dict:
         """conv: [nb, n_ssm, R, cw-1, conv_dim], h: [nb, n_ssm, R, nh, hd, ns]
         device arrays; inst_slot int32 [2, R] (instance, slot) per request."""
-        import jax.numpy as jnp
-        R = conv.shape[2]
-        rb = self._bucket(R)
-        if rb != R:
-            conv = jnp.pad(conv, [(0, 0), (0, 0), (0, rb - R), (0, 0), (0, 0)])
-            h = jnp.pad(h, [(0, 0), (0, 0), (0, rb - R)] + [(0, 0)] * 3)
+        rb = self._bucket(conv.shape[2])
+        conv = self._pad_to(conv, 2, rb)
+        h = self._pad_to(h, 2, rb)
         cs = self._pad_coords(inst_slot, rb)
-        return self._ssm_fn(rb)(state, conv, h, cs[0], cs[1])
+        return self._jit("ssm", self._ssm_body, state)(
+            state, conv, h, cs[0], cs[1])
+
+    # -- encoder-decoder (whisper) ------------------------------------------
+    def _cross_body(self, state, k, v, inst, stripe, subf, off):
+        khs = self.khs
+        import jax.numpy as jnp
+        c = stripe[:, None] * khs + jnp.arange(khs, dtype=jnp.int32)
+        ii, ff, oo = inst[:, None], subf[:, None], off[:, None]
+        state = dict(state)
+        kp, vp = state["cross_k_pool"], state["cross_v_pool"]
+        state["cross_k_pool"] = kp.at[:, ii, c, ff, oo].set(
+            k.astype(kp.dtype), mode="drop")
+        state["cross_v_pool"] = vp.at[:, ii, c, ff, oo].set(
+            v.astype(vp.dtype), mode="drop")
+        return state
+
+    def scatter_cross_kv(self, state: dict, k, v, coords: np.ndarray) -> dict:
+        """Whisper cross-attn KV (encoder states' projections) into the paged
+        cross pools.  k/v: [L, T, khs, kg*d] device arrays; coords from
+        ``prefill_coords``."""
+        tb = self._bucket(k.shape[1])
+        k, v = self._pad_to(k, 1, tb), self._pad_to(v, 1, tb)
+        cs = self._pad_coords(coords, tb)
+        return self._jit("cross", self._cross_body, state)(
+            state, k, v, cs[0], cs[1], cs[2], cs[3])
+
+    def _self_body(self, state, k, v, inst, slot, pos):
+        import jax.numpy as jnp
+        cc = jnp.arange(self.dims.tp, dtype=jnp.int32)[None, :]
+        ii, ss, pp = inst[:, None], slot[:, None], pos[:, None]
+        state = dict(state)
+        sk, sv = state["self_k"], state["self_v"]
+        state["self_k"] = sk.at[:, ii, cc, ss, pp].set(
+            k.astype(sk.dtype), mode="drop")
+        state["self_v"] = sv.at[:, ii, cc, ss, pp].set(
+            v.astype(sv.dtype), mode="drop")
+        return state
+
+    def scatter_self_kv(self, state: dict, k, v, coords: np.ndarray) -> dict:
+        """Whisper decoder-prefix self-attn KV into the per-slot contiguous
+        caches.  k/v: [L, T, tp, kg*d] device arrays (head groups already
+        tiled across page subgroups); coords int32 [3, T]
+        (instance, slot, position) per prefix token."""
+        tb = self._bucket(k.shape[1])
+        k, v = self._pad_to(k, 1, tb), self._pad_to(v, 1, tb)
+        cs = self._pad_coords(coords, tb)
+        return self._jit("self", self._self_body, state)(
+            state, k, v, cs[0], cs[1], cs[2])
 
 
 def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,
@@ -253,6 +314,7 @@ def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,
     pt = cluster.page_table
     ranges = shard_ranges(cluster, rid)
     _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    kg = kv_group_size(cfg, dims.tp)
     for l, (k, v) in enumerate(cross_layers):
         k = np.asarray(k, np.float32)
         v = np.asarray(v, np.float32)
@@ -262,8 +324,11 @@ def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,
                 f, o = frames[j // page], j % page
                 for h in range(khs):
                     c = (f % ps) * khs + h
-                    state_np["cross_k_pool"][l, s, c, f // ps, o] = k[start + j, h]
-                    state_np["cross_v_pool"][l, s, c, f // ps, o] = v[start + j, h]
+                    grp = slice(h * kg, (h + 1) * kg)
+                    state_np["cross_k_pool"][l, s, c, f // ps, o] = \
+                        k[start + j, grp].reshape(-1)
+                    state_np["cross_v_pool"][l, s, c, f // ps, o] = \
+                        v[start + j, grp].reshape(-1)
 
 
 def load_prefill_self_kv(cfg: ModelConfig, dims: DecodeDims, state_np: dict,
@@ -273,11 +338,14 @@ def load_prefill_self_kv(cfg: ModelConfig, dims: DecodeDims, state_np: dict,
     self_layers: per decoder layer, (k [T0, Hkv, hd], v [T0, Hkv, hd]).
     """
     _, khs, ps = attn_tp_geometry(cfg, dims.tp)
+    kg = kv_group_size(cfg, dims.tp)
     for l, (k, v) in enumerate(self_layers):
         t0 = k.shape[0]
         k = np.asarray(k, np.float32)
         v = np.asarray(v, np.float32)
         for c in range(khs * ps):
-            h = c % khs
-            state_np["self_k"][l, instance, c, slot, :t0] = k[:, h]
-            state_np["self_v"][l, instance, c, slot, :t0] = v[:, h]
+            grp = slice((c % khs) * kg, (c % khs + 1) * kg)
+            state_np["self_k"][l, instance, c, slot, :t0] = \
+                k[:, grp].reshape(t0, -1)
+            state_np["self_v"][l, instance, c, slot, :t0] = \
+                v[:, grp].reshape(t0, -1)

@@ -24,6 +24,12 @@ class FramePool:
     pages spread evenly across stripes (bounds the per-device block-table
     width MBT).  LIFO reuse order stays deliberately fragmentation-prone
     (the HoL experiments rely on realistic occupancy).
+
+    ``stripes`` is ``attn_tp_geometry(cfg, tp).ps``: tp/khs devices per
+    kv-head shard.  Under head grouping (tp < num_kv_heads) ps == 1 — every
+    frame holds ALL of the chunk's kv-head group, so striping degenerates
+    and the single free-list is exact (grouping and striping never
+    compose, by construction of the geometry).
     """
     instance: int
     num_frames: int

@@ -357,13 +357,18 @@ def _round_of(cluster: ClusterState, m: int, s: int) -> int:
     return (s - m) % w
 
 
-def as_device_arrays(tbl: RoutingTables):
+def as_device_arrays(tbl: RoutingTables, shardings: dict | None = None):
     """numpy -> jnp dict (int32), ready to shard over the data axis.
 
     Uses EXPLICIT ``jax.device_put`` so the decode hot path stays clean under
     ``jax.transfer_guard("disallow")`` (implicit transfers are the bug class
     the guard catches); with a ``TableArena`` the source host buffers are
     stable per bucket, so no per-step host allocation happens either.
+
+    ``shardings``: optional per-field ``Sharding`` map — pass the step
+    executable's input shardings so tables land PRE-SHARDED over the data
+    axis (a default-device put would be re-sharded device-to-device at every
+    dispatch on multi-device meshes).
     """
     import jax
     out = {}
@@ -372,5 +377,7 @@ def as_device_arrays(tbl: RoutingTables):
         if isinstance(v, np.ndarray):
             if v.dtype != np.int32:
                 v = v.astype(np.int32)
-            out[f.name] = jax.device_put(v)
+            sh = shardings.get(f.name) if shardings is not None else None
+            out[f.name] = (jax.device_put(v, sh) if sh is not None
+                           else jax.device_put(v))
     return out

@@ -9,6 +9,10 @@ TPU mapping (DESIGN.md §7):
     BlockSpec index maps driven by the scalar-prefetched block table (SMEM).
   * GQA: the G = Hq/Hkv query heads of a kv head form the sublane dim of the
     q block; MXU matmuls are [G, Dk] x [Dk, page] and [page] x [page, Dv].
+  * head-grouped TP (tp < Hkv, core/dcp.py): each device passes its resident
+    kv-head GROUP as the Hkv axis (sub-pool [F', page, kg, Dk], q rows
+    kv-head-major), so the same kv-head grid dimension indexes within the
+    group — no separate kernel variant.
   * online softmax: running (m, l, acc) in f32 VMEM scratch; rows with
     length 0 (CP padding) produce out=0, lse=-inf without touching pages.
   * pages past a row's length are masked; their FLOPs are skipped via

@@ -28,7 +28,19 @@ Decode hot path (the Alg. 2 "dict lookup + replay" contract, made real):
   * Finish-by-length is known at dispatch time and applied immediately so
     the scheduler reuses pages/slots without waiting a round trip; EOS is
     only visible in sampled tokens, so an EOS request may execute one extra
-    speculative iteration whose output is discarded.
+    speculative iteration whose output is discarded.  With ``eos_token``
+    set, the step executables carry a device-side stop-token check
+    (``DecodeDims.eos``): the speculative iteration's KV append is masked
+    on device (redirected to the scratch frame), so an EOS finish leaves
+    exactly the KV entries of its real tokens behind.  ``pipeline=False``
+    switches to the non-pipelined reference semantics (dispatch + harvest
+    every step; EOS applies before the next lowering, no speculative slot).
+
+Whisper (enc-dec) requests enter via ``add_audio_request``: prefill runs
+encode + teacher-forced decode, cross-attn KV scatters into the paged DCP
+pools and the decoder-prefix self-attn KV into the per-slot caches; decode
+replays ``make_encdec_serve_step`` executables (cross pools read-only, no
+appends).
 """
 from __future__ import annotations
 
@@ -38,6 +50,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..core import dcp, migrate, routing
@@ -45,7 +58,7 @@ from ..core.aot import AOTGraphEngine
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
 from ..core.state import ClusterState, Request
-from ..models import transformer
+from ..models import encdec, transformer
 
 
 @dataclass
@@ -73,45 +86,84 @@ class NanoCPEngine:
                  buckets: CPBuckets = DEFAULT_BUCKETS,
                  shape_buckets: ShapeBuckets | None = None,
                  eos_token: int | None = None,
-                 max_slots_per_instance: int = 16):
+                 max_slots_per_instance: int = 16,
+                 pipeline: bool = True,
+                 audit_donation_every_step: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.tp = tp or mesh.shape["model"]
         self.backend = backend
         self.eos = eos_token
+        # one-step-lookahead pipeline (False = dispatch+harvest each step:
+        # EOS finishes apply before the next lowering, so no speculative
+        # slot-steps ever run — the non-pipelined reference semantics)
+        self.pipeline = pipeline
+        self.is_encdec = cfg.is_encoder_decoder
+        _, _, ps = dcp.attn_tp_geometry(cfg, self.tp)
         self.cluster = ClusterState(num_instances=num_instances,
                                     instances_per_node=instances_per_node,
                                     kv_capacity_tokens=kv_capacity_tokens,
-                                    page_size=page_size)
-        is_ssm_family = cfg.family in ("ssm", "hybrid")
+                                    page_size=page_size, kv_stripes=ps)
+        # per-slot device state (SSM recurrent state, whisper self-attn
+        # caches) pins the slot dimension of the serve state: ONE fixed M
+        # bucket and no MoE-binding rebalance
+        pinned_slots = cfg.family in ("ssm", "hybrid") or self.is_encdec
         self.scheduler = scheduler or DualBalancedScheduler(
-            buckets=buckets, allow_rebalance=not is_ssm_family,
+            buckets=buckets, allow_rebalance=not pinned_slots,
             max_batch_per_instance=max_slots_per_instance,
             has_kv=cfg.has_attention)
-        # per-slot recurrent state (SSM/hybrid) pins the slot dimension of
-        # the serve state, so those archs use ONE fixed M bucket
-        if shape_buckets is None and is_ssm_family:
+        if shape_buckets is None and pinned_slots:
             shape_buckets = ShapeBuckets(m_buckets=(max_slots_per_instance,),
                                          window=instances_per_node)
         self.shape_buckets = shape_buckets or ShapeBuckets(
             window=instances_per_node)
         self.params = params
-        self.decode_params = jax.jit(
-            lambda p: dcp.to_decode_params(cfg, p, self.tp))(params)
         self._dims0 = dcp.DecodeDims(
             M=max_slots_per_instance, S=0, N=1, MB=4, W=instances_per_node,
             num_frames=self.cluster.page_table.frames_per_instance + 1,
             page=page_size, data_size=num_instances, tp=self.tp,
-            backend=backend)
-        self.state = dcp.init_serve_state(cfg, self._dims0, num_instances,
-                                          dtype=jnp.float32)
-        self.aot = AOTGraphEngine(self._build_step)
+            backend=backend,
+            eos=-1 if eos_token is None else int(eos_token))
+        # Decode params and the initial serve state are COMMITTED to their
+        # shard_map layouts here, once: otherwise every dispatch re-shards
+        # them (implicit device-to-device transfers on multi-device meshes —
+        # caught by the conformance matrix's transfer-guard window) and the
+        # first donation silently degrades to copy-on-donate.
+        from jax.sharding import NamedSharding
+        if self.is_encdec:
+            self.decode_params = jax.jit(
+                lambda p: dcp.to_encdec_decode_params(cfg, p, self.tp))(params)
+            self.state = dcp.init_encdec_serve_state(
+                cfg, self._dims0, num_instances, dtype=jnp.float32)
+            pspecs = dcp.encdec_param_specs(cfg, self.decode_params)
+            sspecs = dcp.encdec_state_specs(self.state)
+        else:
+            self.decode_params = jax.jit(
+                lambda p: dcp.to_decode_params(cfg, p, self.tp))(params)
+            self.state = dcp.init_serve_state(cfg, self._dims0, num_instances,
+                                              dtype=jnp.float32)
+            pspecs = dcp.decode_param_specs(cfg, self.decode_params)
+            sspecs = dcp.serve_state_specs(cfg, self.state)
+        self.decode_params = jax.device_put(
+            self.decode_params,
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P)))
+        self.state = jax.device_put(
+            self.state,
+            jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                         is_leaf=lambda x: isinstance(x, P)))
+        self._tbl_shardings: dict | None = None
+        # cross pools are read-only during decode (whisper): no KV appends
+        self._append_tokens = cfg.has_attention and not self.is_encdec
+        self.aot = AOTGraphEngine(self._build_step,
+                                  audit_every_step=audit_donation_every_step)
         self._scatter = migrate.PrefillScatter(cfg, self._dims0,
                                                num_instances)
         self._arena = routing.TableArena()
         self.next_tok: dict = {}
         self.results: dict = {}
         self._prompts: dict = {}
+        self._dec_prefix: dict = {}
         self.finished: list = []
         self.iterations = 0
         self._inflight: _Inflight | None = None
@@ -120,7 +172,8 @@ class NanoCPEngine:
         self.timings: dict = {}
         self.last_bucket: tuple | None = None
         self.hot_path_stats: dict = {
-            "steps": 0, "async_token_fetches": 0, "speculative_slots": 0}
+            "steps": 0, "async_token_fetches": 0, "speculative_slots": 0,
+            "prefill_eos_finishes": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -138,6 +191,23 @@ class NanoCPEngine:
         self.results[rid] = GenResult(rid, self._prompts[rid])
         return rid
 
+    def add_audio_request(self, frames, dec_prefix_tokens,
+                          max_new_tokens: int, now: float | None = None) -> int:
+        """Whisper: enqueue an audio request.  ``frames`` [S_enc, d_model]
+        stub frame embeddings (the DCP-managed cross-attn KV source),
+        ``dec_prefix_tokens`` the decoder prompt."""
+        assert self.is_encdec, "add_audio_request is enc-dec only"
+        now = self._now() if now is None else now
+        rid = len(self._prompts)
+        self._prompts[rid] = np.asarray(frames, np.float32)
+        self._dec_prefix[rid] = list(map(int, dec_prefix_tokens))
+        self.cluster.enqueue(
+            Request(rid=rid, prompt_len=len(self._prompts[rid]),
+                    max_new_tokens=max_new_tokens, arrival=now,
+                    dec_prefix_len=len(self._dec_prefix[rid])), now)
+        self.results[rid] = GenResult(rid, self._dec_prefix[rid])
+        return rid
+
     # ------------------------------------------------------------------ #
     def _build_step(self, key):
         M, S, MB, W = key
@@ -146,7 +216,7 @@ class NanoCPEngine:
                            num_frames=self._dims0.num_frames,
                            page=self._dims0.page,
                            data_size=self.cluster.num_instances, tp=self.tp,
-                           backend=self.backend)
+                           backend=self.backend, eos=self._dims0.eos)
         I = self.cluster.num_instances
         tbl_spec = {
             "slot_rid": (I, M), "slot_token": (I, M), "slot_pos": (I, M),
@@ -163,8 +233,9 @@ class NanoCPEngine:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.decode_params)
         s_sds = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
-        fn = dcp.make_serve_step(self.cfg, d, self.mesh, p_sds, s_sds,
-                                 tbl_sds, donate=True)
+        mk = (dcp.make_encdec_serve_step if self.is_encdec
+              else dcp.make_serve_step)
+        fn = mk(self.cfg, d, self.mesh, p_sds, s_sds, tbl_sds, donate=True)
         return fn, (p_sds, s_sds, tbl_sds)
 
     # ------------------------------------------------------------------ #
@@ -175,6 +246,8 @@ class NanoCPEngine:
         The prefill forward runs on device and its caches stay there — the
         only host work is assembling the small int32 coordinate tensors from
         the page table (MIGRATE + TRANSFER, §3 (2)-(3))."""
+        if self.is_encdec:
+            return self._prefill_batch_encdec(reqs, now)  # -> finished reqs
         pattern = self.cfg.block_pattern()
         ps = self._scatter.ps
         page = self._dims0.page
@@ -212,8 +285,11 @@ class NanoCPEngine:
                     self.cluster, req.rid, page, ps))
             elif ks:
                 khs = self._scatter.khs
-                kv_k.append(jnp.stack(ks, axis=1)[..., :khs, :])
-                kv_v.append(jnp.stack(vs, axis=1)[..., :khs, :])
+                # Hkv heads -> khs groups of kg heads (flattened last dim)
+                k3 = jnp.stack(ks, axis=1)          # [nb, na, len, Hkv, hd]
+                v3 = jnp.stack(vs, axis=1)
+                kv_k.append(k3.reshape(*k3.shape[:3], khs, -1))
+                kv_v.append(v3.reshape(*v3.shape[:3], khs, -1))
                 kv_coords.append(migrate.prefill_coords(
                     self.cluster, req.rid, page, ps))
             if convs:
@@ -221,11 +297,7 @@ class NanoCPEngine:
                 ssm_conv.append(jnp.stack(convs, axis=1)[:, :, None])
                 ssm_h.append(jnp.stack(hs, axis=1)[:, :, None])
                 ssm_coords.append([inst, slot])
-        for req, first in zip(reqs, jax.device_get(firsts)):
-            first = int(first)
-            self.next_tok[req.rid] = first
-            self.results[req.rid].tokens.append(first)
-            req.token_times.append(now)
+        eos_done = self._record_first_tokens(reqs, firsts, now)
         if kv_k:
             k = jnp.concatenate(kv_k, axis=2)
             v = jnp.concatenate(kv_v, axis=2) if kv_v else None
@@ -237,6 +309,97 @@ class NanoCPEngine:
             coords = np.asarray(ssm_coords, np.int32).T
             self.state = self._scatter.scatter_ssm(self.state, conv, h,
                                                    coords)
+        return self._finish_prefill_eos(eos_done, now)
+
+    def _prefill_batch_encdec(self, reqs: list, now: float) -> None:
+        """Whisper admission: encode frames, teacher-force the decoder
+        prefix, scatter cross-attn KV (paged, DCP-placed) and prefix
+        self-attn KV (per-slot contiguous) into the on-device pools."""
+        cfg = self.cfg
+        page = self._dims0.page
+        khs, kg, ps = self._scatter.khs, self._scatter.kg, self._scatter.ps
+        firsts = []
+        ck, cv, c_coords = [], [], []
+        sk, sv, s_coords = [], [], []
+        for req in reqs:
+            frames = jnp.asarray(self._prompts[req.rid])[None]
+            enc = encdec.encode(cfg, self.params, frames)
+            toks = jnp.asarray(self._dec_prefix[req.rid])[None, :]
+            logits, caches = encdec.decode_forward(cfg, self.params, toks,
+                                                   enc, collect_kv=True)
+            firsts.append(jnp.argmax(logits[0, -1]))
+            kc, vc = caches["cross_kv"]          # [L, 1, S_enc, Hkv, hd]
+            L_, S_enc = kc.shape[0], kc.shape[2]
+            ck.append(kc[:, 0].reshape(L_, S_enc, khs, -1))
+            cv.append(vc[:, 0].reshape(L_, S_enc, khs, -1))
+            c_coords.append(migrate.prefill_coords(
+                self.cluster, req.rid, page, ps))
+            ksf, vsf = caches["self_kv"]         # [L, 1, T0, Hkv, hd]
+            T0 = ksf.shape[2]
+            # chunk layout [p0h0..p0hK, p1h0..]: tile head groups over the
+            # ps page subgroups
+            sk.append(jnp.tile(ksf[:, 0].reshape(L_, T0, khs, -1),
+                               (1, 1, ps, 1)))
+            sv.append(jnp.tile(vsf[:, 0].reshape(L_, T0, khs, -1),
+                               (1, 1, ps, 1)))
+            inst, slot = self.cluster.slot_map[req.rid]
+            s_coords.append(np.stack([np.full(T0, inst), np.full(T0, slot),
+                                      np.arange(T0)]).astype(np.int32))
+        eos_done = self._record_first_tokens(reqs, firsts, now)
+        if ck:
+            self.state = self._scatter.scatter_cross_kv(
+                self.state, jnp.concatenate(ck, axis=1),
+                jnp.concatenate(cv, axis=1),
+                np.concatenate(c_coords, axis=1))
+            self.state = self._scatter.scatter_self_kv(
+                self.state, jnp.concatenate(sk, axis=1),
+                jnp.concatenate(sv, axis=1),
+                np.concatenate(s_coords, axis=1))
+        return self._finish_prefill_eos(eos_done, now)
+
+    def _record_first_tokens(self, reqs: list, firsts: list, now: float):
+        """One batched readback of the prefill-sampled first tokens; returns
+        the requests whose first token is already EOS."""
+        eos_done = []
+        for req, first in zip(reqs, jax.device_get(firsts)):
+            first = int(first)
+            self.next_tok[req.rid] = first
+            self.results[req.rid].tokens.append(first)
+            req.token_times.append(now)
+            if self.eos is not None and first == self.eos:
+                eos_done.append(req)
+        return eos_done
+
+    def _finish_prefill_eos(self, reqs: list, now: float) -> list:
+        """EOS sampled straight from the prefill logits: the request is done
+        before its first decode iteration — finish it now so it never
+        occupies a slot (and appends zero decode KV entries).  Returns the
+        finished requests so ``step`` reports them like every other finish
+        path."""
+        for req in reqs:
+            self.cluster.finish(req, now)
+            self.finished.append(req)
+            self.hot_path_stats["prefill_eos_finishes"] += 1
+        return reqs
+
+    # ------------------------------------------------------------------ #
+    def _table_shardings_for(self, tbl) -> dict:
+        """Per-field NamedShardings for the table upload (shard over `data`).
+
+        Built once (field -> sharding depends only on the field's rank);
+        uploading tables pre-sharded keeps dispatch free of the implicit
+        device-to-device re-shard a default-device ``device_put`` causes."""
+        if self._tbl_shardings is None:
+            from dataclasses import fields
+            from jax.sharding import NamedSharding
+            sh = {}
+            for f in fields(tbl):
+                v = getattr(tbl, f.name)
+                if isinstance(v, np.ndarray):
+                    sh[f.name] = NamedSharding(
+                        self.mesh, P("data", *([None] * (v.ndim - 1))))
+            self._tbl_shardings = sh
+        return self._tbl_shardings
 
     # ------------------------------------------------------------------ #
     def _harvest(self, now: float) -> list:
@@ -263,12 +426,15 @@ class NanoCPEngine:
                 self.finished.append(req)
                 done.append(req)
             elif self.eos is not None and t == self.eos:
-                # EOS is only visible post-readback: the request may already
-                # be lowered into the next iteration (one speculative slot,
-                # output discarded at the next harvest)
+                # EOS is only visible post-readback: under the lookahead
+                # pipeline the request is already lowered into the next
+                # iteration (one speculative slot whose input is patched to
+                # the stop token so the device-side mask suppresses its KV
+                # append; output discarded at the next harvest)
                 if rid in self.cluster.active:
                     self.cluster.finish(req, now)
-                    self.hot_path_stats["speculative_slots"] += 1
+                    if self.pipeline:
+                        self.hot_path_stats["speculative_slots"] += 1
                 self.finished.append(req)
                 done.append(req)
         return done
@@ -286,19 +452,21 @@ class NanoCPEngine:
 
         # -- schedule + admit (prefill -> on-device KV migration) ----------
         plan = self.scheduler.schedule(self.cluster, now)
+        prefill_done = []
         if plan.admitted:
             t0 = time.perf_counter()
-            self._prefill_batch(plan.admitted, now)
+            prefill_done = self._prefill_batch(plan.admitted, now) or []
             self.timings["prefill_us"] = (time.perf_counter() - t0) * 1e6
         if not self.cluster.active:
-            return self._harvest(now)          # drain a trailing iteration
+            # drain a trailing iteration
+            return prefill_done + self._harvest(now)
 
         # -- lower THIS iteration's tables while the device computes the
         #    previous one (routing never depends on token VALUES) ----------
         t0 = time.perf_counter()
         tbl = routing.lower_plan(self.cluster, plan,
                                  buckets=self.shape_buckets,
-                                 append_tokens=self.cfg.has_attention,
+                                 append_tokens=self._append_tokens,
                                  next_tokens=self.next_tok,
                                  arena=self._arena)
         key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
@@ -312,17 +480,31 @@ class NanoCPEngine:
         self.timings["lookup_us"] = (time.perf_counter() - t0) * 1e6
 
         # -- harvest the previous iteration (tokens usually already home) --
-        done = self._harvest(now)
+        # (slot snapshot only needed when a harvested EOS can leave a
+        # speculative slot in THIS iteration's tables — pipelined mode only)
+        slots_at_lower = ({rid: self.cluster.slot_map[rid]
+                           for rid in self.cluster.active}
+                          if self.eos is not None and self.pipeline else None)
+        done = prefill_done + self._harvest(now)
 
         # -- patch per-slot input tokens now that they are all known -------
         for rid in self.cluster.active:
             i, b = self.cluster.slot_map[rid]
             tbl.slot_token[i, b] = self.next_tok[rid]
-        tbl_dev = routing.as_device_arrays(tbl)
+        if slots_at_lower is not None:
+            # EOS finishes discovered at this harvest are already lowered
+            # into THIS iteration (the one speculative slot-step): feed the
+            # stop token as their input so the device-side check masks the
+            # KV append and the sampled output
+            for req in done:
+                loc = slots_at_lower.get(req.rid)
+                if loc is not None:
+                    tbl.slot_token[loc[0], loc[1]] = self.eos
+        tbl_dev = routing.as_device_arrays(tbl, self._table_shardings_for(tbl))
 
         # -- dispatch (async) + start the token readback copy --------------
         t0 = time.perf_counter()
-        check = self.aot.stats.donation_checks < 8
+        check = self.aot.should_audit_donation()
         in_ptrs = self.aot.buffer_ptrs(self.state) if check else None
         self.state, toks, _ = fn(self.decode_params, self.state, tbl_dev)
         try:
@@ -352,6 +534,10 @@ class NanoCPEngine:
         self.iterations += 1
         self.last_bucket = key
         self.hot_path_stats["steps"] += 1
+        if not self.pipeline:
+            # non-pipelined reference semantics: harvest this very iteration
+            # so EOS finishes are visible before the next lowering
+            done += self._harvest(now)
         self.timings["step_us"] = (time.perf_counter() - t_step) * 1e6
         return done
 

@@ -1,0 +1,141 @@
+"""Architecture x topology engine conformance case (one subprocess per cell).
+
+Drives ``NanoCPEngine`` end-to-end (admission -> prefill scatter -> AOT
+decode replay -> async harvest) on 8 fake host devices and asserts:
+
+  * token-for-token equality with the single-device reference forward pass
+    (greedy), for every request;
+  * all requests admitted at the first step (the steady-state window is
+    well-defined);
+  * steady-state decode performs no implicit host transfers
+    (``jax.transfer_guard("disallow")``);
+  * serve-state donation held: pointers audited, at most one initial
+    copy-on-donate per state leaf (the first dispatch commits host state).
+
+Usage: engine_conformance.py ARCH I TP [kvK]  (kvK overrides num_kv_heads,
+e.g. ``kv4`` — used for the tp < num_kv_heads head-grouping shapes).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import encdec, init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+STEPS = 4          # generated tokens per request (incl. the prefill-sampled)
+VOCAB = 256
+
+
+def _f32(params):
+    return jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params)
+
+
+def build_engine(arch: str, I: int, TP: int, kv: int | None):
+    over = {"vocab_size": VOCAB}
+    if CONFIGS[arch].is_moe:
+        over["capacity_factor"] = 8.0     # no dropped tokens in the tiny cfg
+    if kv is not None:
+        over["num_kv_heads"] = kv
+    cfg = reduced(CONFIGS[arch], **over)
+    params = _f32(init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
+    degrees = (1, 2, 3) if I >= 3 else (1, 2, 2)
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=I,
+        kv_capacity_tokens=4096, page_size=16,
+        buckets=CPBuckets(edges=(64, 160), degrees=degrees),
+        shape_buckets=None if (cfg.family in ("ssm", "hybrid")
+                               or cfg.is_encoder_decoder)
+        else ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                          window=I),
+        max_slots_per_instance=4)
+    return cfg, params, eng
+
+
+def run_case(arch: str, I: int, TP: int, kv: int | None = None) -> None:
+    cfg, params, eng = build_engine(arch, I, TP, kv)
+    from repro.core.dcp import attn_tp_geometry, kv_group_size
+    geom = (attn_tp_geometry(cfg, TP), kv_group_size(cfg, TP))
+    print(f"{arch} I={I} TP={TP} kv={cfg.num_kv_heads} "
+          f"(hp,khs,ps)={geom[0]} kg={geom[1]}")
+
+    rng = np.random.default_rng(0)
+    if cfg.is_encoder_decoder:
+        cases = [(40, 3), (130, 5), (90, 2)]   # (enc frames, dec prefix)
+        frames = {r: rng.standard_normal((L, cfg.d_model)).astype(np.float32)
+                  for r, (L, _) in enumerate(cases)}
+        prefix = {r: rng.integers(0, cfg.vocab_size, (t0,))
+                  for r, (_, t0) in enumerate(cases)}
+        for r in range(len(cases)):
+            eng.add_audio_request(frames[r], prefix[r], max_new_tokens=STEPS)
+    else:
+        prompts = [rng.integers(0, cfg.vocab_size, (L,))
+                   for L in (24, 90, 180)]
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=STEPS)
+
+    # admission + prefill (host<->device transfers allowed), one warmup step
+    eng.step()
+    assert not eng.cluster.waiting, "all requests must admit at step 1"
+    eng.step()
+    # steady state: only explicit table uploads / token fetches may cross
+    with jax.transfer_guard("disallow"):
+        for _ in range(64):
+            if not (eng.cluster.active or eng._inflight is not None):
+                break
+            eng.step()
+    res = eng.results
+    assert not eng.cluster.active and eng._inflight is None
+
+    # ---- reference: single-device greedy continuation ----
+    for rid, r in res.items():
+        assert len(r.tokens) == STEPS, (rid, r.tokens)
+        if cfg.is_encoder_decoder:
+            enc = encdec.encode(cfg, params, jnp.asarray(frames[rid])[None])
+            seq = list(map(int, prefix[rid]))
+            ref = []
+            for _ in range(STEPS):
+                logits, _ = encdec.decode_forward(cfg, params,
+                                                  jnp.asarray(seq)[None], enc)
+                t = int(jnp.argmax(logits[0, -1]))
+                ref.append(t)
+                seq.append(t)
+        else:
+            seq = list(map(int, prompts[rid]))
+            ref = []
+            for _ in range(STEPS):
+                logits, _ = transformer.forward(cfg, params,
+                                                jnp.asarray(seq)[None])
+                t = int(jnp.argmax(logits[0, -1]))
+                ref.append(t)
+                seq.append(t)
+        assert r.tokens == ref, (arch, rid, r.tokens, ref)
+        print(f"  rid {rid}: {r.tokens} == ref")
+
+    # ---- hot-path invariants ----
+    st = eng.aot.stats
+    n_leaves = len(jax.tree.leaves(eng.state))
+    assert st.donation_checks > 0, st.as_dict()
+    assert st.donation_reuses > 0, st.as_dict()
+    # only the very first dispatch may copy (initial host state commit)
+    assert st.donation_copies <= n_leaves, st.as_dict()
+    assert eng.hot_path_stats["async_token_fetches"] >= 3
+    print(f"  aot: {st.as_dict()}")
+    print(f"{arch} I={I} TP={TP}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    arch, I, TP = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+    kv = None
+    if len(sys.argv) > 4:
+        assert sys.argv[4].startswith("kv"), sys.argv[4]
+        kv = int(sys.argv[4][2:])
+    run_case(arch, I, TP, kv)

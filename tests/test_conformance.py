@@ -1,0 +1,53 @@
+"""Architecture x topology conformance matrix (the engine e2e gate).
+
+Every config archetype is driven through ``NanoCPEngine`` end to end at
+multiple ``(I, TP)`` topologies — including a ``tp < num_kv_heads``
+head-grouping shape — and asserted token-for-token equal to the
+single-device reference, with donation / transfer-guard invariants checked
+(see ``tests/integration/engine_conformance.py`` for the exact assertions).
+
+Each cell runs in a subprocess with 8 forced host devices.  The matrix is
+marked ``conformance`` and excluded from the default (tier-1) run — CI runs
+it as its own job via ``pytest -m conformance``.
+"""
+import pytest
+
+from conftest import run_integration
+
+# (archetype, instances, tp, num_kv_heads override or None)
+MATRIX = [
+    # dense GQA
+    ("tinyllama-1.1b", 4, 2, None),        # khs=2, ps=1 (plain head TP)
+    ("tinyllama-1.1b", 2, 4, None),        # kv=2 @ tp4 -> page striping ps=2
+    ("tinyllama-1.1b", 2, 2, 4),           # tp2 < kv4 -> head groups kg=2
+    # MLA (single latent head stripes over all tp devices)
+    ("minicpm3-4b", 4, 2, None),
+    ("minicpm3-4b", 2, 4, None),
+    # wide-EP MoE (experts over the data axis)
+    ("phi3.5-moe-42b-a6.6b", 4, 2, None),
+    ("phi3.5-moe-42b-a6.6b", 2, 4, None),
+    # hybrid SSM + attention + MoE (pinned slots)
+    ("jamba-v0.1-52b", 4, 2, None),
+    ("jamba-v0.1-52b", 2, 4, None),
+    # attention-free (DCP inapplicable; SSM TP only)
+    ("mamba2-370m", 4, 2, None),
+    ("mamba2-370m", 2, 2, None),
+    # encoder-decoder (paged cross-attn pools, per-slot self caches)
+    ("whisper-base", 4, 2, None),
+    ("whisper-base", 2, 4, None),
+]
+
+
+def _cell_id(case):
+    arch, I, TP, kv = case
+    return f"{arch}-I{I}-TP{TP}" + (f"-kv{kv}" if kv else "")
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("arch,I,TP,kv", MATRIX, ids=map(_cell_id, MATRIX))
+def test_engine_conformance(arch, I, TP, kv):
+    args = [arch, str(I), str(TP)]
+    if kv is not None:
+        args.append(f"kv{kv}")
+    out = run_integration("engine_conformance.py", *args)
+    assert "PASS" in out

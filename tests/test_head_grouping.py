@@ -1,0 +1,117 @@
+"""Head-grouping math (tp < num_kv_heads) — deterministic grid + hypothesis.
+
+Invariants of the hybrid-sharded head layout (``core/dcp.py``):
+
+  * ``tile_kv`` output, split into tp model chunks, assigns every rank a
+    NON-EMPTY kv-head group; groups are disjoint within a page-stripe
+    subgroup and the union covers all Hkv heads; ascending chunks of stripe
+    p concatenate back to the reference [Hkv, per] layout.
+  * ``pad_q`` / ``pad_q_rows`` shard q heads so chunk c's heads attend
+    exactly chunk c's kv-head group, and unpadding reconstructs the
+    reference weights bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dcp import _head_tools, attn_tp_geometry, kv_group_size
+
+
+def _cfg(hq: int, hkv: int) -> ModelConfig:
+    return ModelConfig(name="t", family="dense", num_layers=1, d_model=hq * 8,
+                       num_heads=hq, num_kv_heads=hkv, head_dim=8,
+                       d_ff=16, vocab_size=128)
+
+
+# every (Hq, Hkv, tp) with Hq % Hkv == 0, (tp | Hkv or Hkv | tp), and the
+# padded head count hp = roundup(Hq, tp) divisible by Hkv (includes shapes
+# where q heads need padding, e.g. Hq=6 @ tp=4)
+GRID = [(hq, hkv, tp)
+        for hkv in (1, 2, 4, 8)
+        for hq in (hkv, 2 * hkv, 3 * hkv, 4 * hkv)
+        for tp in (1, 2, 4, 8)
+        if (hkv % tp == 0 or tp % hkv == 0)
+        and ((hq + tp - 1) // tp * tp) % hkv == 0]
+
+
+def _check_tile_kv(hq, hkv, tp, per=3):
+    cfg = _cfg(hq, hkv)
+    hp, khs, ps = attn_tp_geometry(cfg, tp)
+    kg = kv_group_size(cfg, tp)
+    assert khs * kg == hkv and khs * ps == tp
+    _, _, tile_kv, _ = _head_tools(cfg, tp)
+    # encode (head, dim) into the value so ownership is recoverable
+    w = jnp.arange(hkv * per, dtype=jnp.int32)
+    tiled = np.asarray(tile_kv(w, per))
+    assert tiled.shape == (tp * kg * per,)
+    chunks = tiled.reshape(tp, kg * per)
+    owned = [set(np.unique(c // per)) for c in chunks]      # kv heads per rank
+    for c, heads in enumerate(owned):
+        assert heads, f"rank {c} owns no kv head"
+        assert len(heads) == kg
+    for p in range(ps):                    # disjoint + covering per stripe
+        sub = owned[p * khs:(p + 1) * khs]
+        assert sorted(h for s in sub for h in s) == list(range(hkv))
+        # ascending chunks reassemble the reference layout
+        np.testing.assert_array_equal(
+            np.concatenate([chunks[p * khs + h] for h in range(khs)]),
+            np.asarray(w))
+
+
+def _check_pad_q(hq, hkv, tp, per=2):
+    cfg = _cfg(hq, hkv)
+    hp, khs, ps = attn_tp_geometry(cfg, tp)
+    kg = kv_group_size(cfg, tp)
+    pad_q, pad_q_rows, _, perm = _head_tools(cfg, tp)
+    g_in, g_out = hq // hkv, hp // hkv
+    hl = hp // tp
+    w = jnp.arange(hq * per, dtype=jnp.int32) + 1           # 0 marks padding
+    padded = np.asarray(pad_q(w, per))
+    assert padded.shape == (hp * per,)
+    # invert: chunk-permuted -> head order -> drop per-group padding
+    inv = np.argsort(np.asarray(perm))
+    heads = padded.reshape(hp, per)[inv].reshape(hkv, g_out, per)
+    np.testing.assert_array_equal(heads[:, :g_in].reshape(-1), np.asarray(w))
+    assert (heads[:, g_in:] == 0).all()
+    # chunk c's q heads belong exactly to chunk c's kv-head group
+    q_of_chunk = padded.reshape(tp, hl * per)
+    for c in range(tp):
+        h = c % khs
+        owned = set(range(h * kg, (h + 1) * kg))
+        for val in q_of_chunk[c]:
+            if val == 0:
+                continue
+            qh = int(val - 1) // per                 # original q head index
+            assert qh // g_in in owned, (c, qh, owned)
+    # pad_q_rows round-trips the same way on [Hq*per, D]
+    D = 5
+    wr = (jnp.arange(hq * per * D, dtype=jnp.int32) + 1).reshape(hq * per, D)
+    pr = np.asarray(pad_q_rows(wr, per))
+    rows = pr.reshape(hp, per, D)[inv].reshape(hkv, g_out, per, D)
+    np.testing.assert_array_equal(rows[:, :g_in].reshape(hq * per, D),
+                                  np.asarray(wr))
+    assert (rows[:, g_in:] == 0).all()
+
+
+@pytest.mark.parametrize("hq,hkv,tp", GRID)
+def test_head_layout_grid(hq, hkv, tp):
+    _check_tile_kv(hq, hkv, tp)
+    _check_pad_q(hq, hkv, tp)
+
+
+def test_grouping_and_striping_mutually_exclusive():
+    cfg = _cfg(8, 8)
+    for tp in (1, 2, 4, 8):
+        _, khs, ps = attn_tp_geometry(cfg, tp)
+        assert kv_group_size(cfg, tp) == 1 or ps == 1
+
+
+def test_indivisible_tp_rejected():
+    with pytest.raises(AssertionError):
+        attn_tp_geometry(_cfg(12, 6), 4)     # 4 ∤ 6 and 6 ∤ 4
+
+
+# A broader hypothesis-driven sweep of the same invariants lives in
+# tests/test_properties.py (importorskip-guarded on hypothesis).

@@ -223,6 +223,47 @@ def test_ssm_engine_prefill_scatter_e2e():
 
 
 # --------------------------------------------------------------------------- #
+# donation audit: copy-on-donate detection + every-step debug mode
+# --------------------------------------------------------------------------- #
+def test_note_donation_detects_copy_on_donate():
+    """A donated arg whose output buffers differ from the input buffers is a
+    silent copy-on-donate; ``note_donation`` must flag it in ``aot.stats``."""
+    from repro.core.aot import AOTGraphEngine
+    aot = AOTGraphEngine(lambda key: (_ for _ in ()).throw(RuntimeError))
+    a = jnp.arange(64, dtype=jnp.float32)
+    b = a + 1                                  # distinct buffer
+    jax.block_until_ready((a, b))
+    assert aot.note_donation(aot.buffer_ptrs({"x": a}), {"x": a}) is True
+    assert aot.stats.donation_reuses == 1 and aot.stats.donation_copies == 0
+    assert aot.note_donation(aot.buffer_ptrs({"x": a}), {"x": b}) is False
+    assert aot.stats.donation_copies == 1
+    assert aot.stats.donation_checks == 2
+
+
+def test_donation_audit_every_step_flag():
+    """Debug mode: with ``audit_donation_every_step`` the engine audits
+    donation on EVERY dispatch, not just the warmup sample."""
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2, vocab_size=128,
+                  num_kv_heads=1)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    eng = NanoCPEngine(cfg, params, mesh, num_instances=1,
+                       instances_per_node=1, kv_capacity_tokens=1024,
+                       page_size=16, audit_donation_every_step=True,
+                       shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4),
+                                                  s_buckets=(0,), window=1))
+    rng = np.random.default_rng(0)
+    eng.add_request(rng.integers(0, 128, (20,)), max_new_tokens=14)
+    eng.run(max_iters=40)
+    st = eng.aot.stats
+    assert eng.aot.audit_every_step
+    assert st.donation_checks == eng.hot_path_stats["steps"]
+    assert st.donation_checks > eng.aot.WARMUP_CHECKS   # beyond the sample
+    assert st.donation_copies == 0, st.as_dict()        # no copy-on-donate
+
+
+# --------------------------------------------------------------------------- #
 # routing bucket quantisation ladder (12.5% steps above 8)
 # --------------------------------------------------------------------------- #
 def test_quantize_dim_small_values_power_of_two():

@@ -36,6 +36,33 @@ def test_paged_decode_vs_oracle(rng, N, Hq, Hkv, Dk, Dv, page, MB, dtype):
                                atol=1e-3)
 
 
+@pytest.mark.parametrize("kg,g_out", [(2, 2), (4, 1), (2, 1)])
+def test_paged_decode_grouped_subpool_view(rng, kg, g_out):
+    """The head-grouped (tp < Hkv) device view: a flat sub-pool
+    [F', page, kg*hd] reshaped to [F', page, kg, hd] with kv-head-major q
+    rows must equal per-head oracle attention — i.e. the kernel's kv-head
+    grid indexes WITHIN the resident group (core/dcp.py `_dcp_attention`)."""
+    N, hd, page, P, MB = 3, 64, 8, 16, 2
+    flat = jnp.asarray(rng.standard_normal((P, page, kg * hd)), jnp.float32)
+    vflat = jnp.asarray(rng.standard_normal((P, page, kg * hd)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((N, kg * g_out, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, (N, MB)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, MB * page + 1, (N,)), jnp.int32)
+    kp = flat.reshape(P, page, kg, hd)
+    vp = vflat.reshape(P, page, kg, hd)
+    o, l = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    for h in range(kg):                       # per-kv-head oracle
+        qs = q[:, h * g_out:(h + 1) * g_out]
+        o_r, l_r = ref.paged_decode_attention(
+            qs, kp[:, :, h:h + 1], vp[:, :, h:h + 1], bt, lengths)
+        np.testing.assert_allclose(
+            np.asarray(o[:, h * g_out:(h + 1) * g_out]), np.asarray(o_r),
+            atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(l[:, h * g_out:(h + 1) * g_out]), np.asarray(l_r),
+            atol=1e-3)
+
+
 @pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal,dtype", [
     (2, 128, 128, 4, 2, 64, True, jnp.float32),
     (1, 256, 256, 2, 1, 128, True, jnp.bfloat16),

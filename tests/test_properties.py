@@ -135,3 +135,22 @@ def test_group_by_expert_invariants(T, k, E, seed):
     # no slot double-filled
     used = slot_of[slot_of < E * C]
     assert len(np.unique(used)) == len(used)
+
+
+# --------------------------------------------------------------------------- #
+# head-grouped / striped KV layout (tp < Hkv and tp > Hkv; core/dcp.py)
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4),
+       st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4))
+def test_head_layout_sharding_invariants(hkv, gmul, tp, per):
+    """For every valid (Hq, Hkv, tp): sharded kv weights concatenate back to
+    the reference layout, every rank owns a non-empty disjoint kv-head
+    group, and q-head chunks attend exactly their chunk's kv heads."""
+    from hypothesis import assume
+    from test_head_grouping import _check_pad_q, _check_tile_kv
+    hq = hkv * gmul
+    assume(hkv % tp == 0 or tp % hkv == 0)
+    assume(((hq + tp - 1) // tp * tp) % hkv == 0)   # hp | hkv alignment
+    _check_tile_kv(hq, hkv, tp, per=per)
+    _check_pad_q(hq, hkv, tp, per=per)
