@@ -1,0 +1,107 @@
+"""KV re-shard micro-bench: live-migration latency vs pages moved.
+
+Times ``migrate.KVReshard`` — the donated gather->scatter collective behind
+mid-decode CP escalation — on a real multi-device serve state, sweeping the
+number of KV pages moved between two instances.  Dispatch latency (host) and
+completion latency (host + device, ``block_until_ready``) are reported per
+page count; the compile of each padded token bucket is excluded by a warmup
+call.  Emits ``BENCH_escalation.json`` at the repo root (or ``--out``).
+
+  PYTHONPATH=src python benchmarks/escalation.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import statistics
+import time
+
+
+def _summ(xs):
+    xs = sorted(xs)
+    return {
+        "mean_us": statistics.fmean(xs),
+        "p50_us": xs[len(xs) // 2],
+        "p99_us": xs[min(len(xs) - 1, int(len(xs) * 0.99))],
+        "n": len(xs),
+    }
+
+
+def run_bench(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compat
+    from repro.configs import CONFIGS, reduced
+    from repro.models import init_params
+    from repro.serving.engine import NanoCPEngine
+
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2, vocab_size=256)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
+    page = 16
+    eng = NanoCPEngine(cfg, params, mesh, num_instances=2,
+                       instances_per_node=2, kv_capacity_tokens=4096,
+                       page_size=page)
+
+    def coords(pages: int, direction: int) -> tuple:
+        """Move ``pages`` full pages instance 0 -> 1 (or back)."""
+        t = pages * page
+        j = np.arange(t)
+        src = np.stack([np.full(t, direction), j // page, j % page])
+        dst = np.stack([np.full(t, 1 - direction), j // page, j % page])
+        return src.astype(np.int32), dst.astype(np.int32)
+
+    page_counts = [1, 4, 16] if smoke else [1, 2, 4, 8, 16, 32, 64]
+    reps = 3 if smoke else 10
+    cells = []
+    for pages in page_counts:
+        # warmup: compile this token bucket (excluded from timings)
+        src, dst = coords(pages, 0)
+        eng.state = eng._reshard(eng.state, src, dst)
+        jax.block_until_ready(jax.tree.leaves(eng.state))
+        disp, total = [], []
+        for r in range(reps):
+            src, dst = coords(pages, (r + 1) % 2)   # ping-pong directions
+            t0 = time.perf_counter()
+            eng.state = eng._reshard(eng.state, src, dst)
+            t1 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(eng.state))
+            t2 = time.perf_counter()
+            disp.append((t1 - t0) * 1e6)
+            total.append((t2 - t0) * 1e6)
+        cells.append({"pages_moved": pages, "tokens_moved": pages * page,
+                      "dispatch": _summ(disp), "complete": _summ(total)})
+        print(f"pages={pages:4d} tokens={pages * page:5d}  "
+              f"dispatch p50 {cells[-1]['dispatch']['p50_us']:8.1f}us  "
+              f"complete p50 {cells[-1]['complete']['p50_us']:8.1f}us")
+    return {
+        "bench": "kv_reshard_latency_vs_pages",
+        "arch": "tinyllama-1.1b(reduced nl=2)",
+        "topology": {"instances": 2, "tp": 2, "page_size": page},
+        "smoke": smoke,
+        "cells": cells,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_escalation.json"))
+    args = ap.parse_args()
+    out = run_bench(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

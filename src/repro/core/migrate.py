@@ -302,6 +302,67 @@ class PrefillScatter:
             state, k, v, cs[0], cs[1], cs[2])
 
 
+class KVReshard:
+    """Donated jitted collective moving RESIDENT KV between instances' pools.
+
+    Mid-decode CP escalation / instance drain: gather the moved tokens' KV at
+    their current (instance, frame, offset) pool coordinates, permute across
+    the data axis (GSPMD lowers the cross-shard gather/scatter onto mesh
+    collectives), and scatter into the newly allocated frames — one fused
+    donated executable per padded token-count bucket, reusing
+    ``PrefillScatter``'s jit/bucketing machinery and pinned output shardings
+    so the pool buffers update in place (donation holds across the re-shard).
+
+    Coordinates come from ``GlobalPageTable.move_pages`` ([3, T] int32
+    (instance, frame, offset) per token, matching order).  All gathers read
+    the PRE-move pools before any scatter writes, so a frame freed by one
+    move and reallocated by another within the same batch stays correct.
+    Coordinate uploads use EXPLICIT ``jax.device_put`` — the re-shard runs
+    mid-steady-state, inside the engine's ``transfer_guard`` window.
+    """
+
+    def __init__(self, scatter: PrefillScatter, coord_sharding=None):
+        self.sc = scatter
+        self.coord_sharding = coord_sharding     # replicate over the mesh
+
+    def _put(self, arr: np.ndarray):
+        import jax
+        return (jax.device_put(arr, self.coord_sharding)
+                if self.coord_sharding is not None else jax.device_put(arr))
+
+    def _body(self, state, src, dst):
+        import jax.numpy as jnp
+        khs, ps = self.sc.khs, self.sc.ps
+        hh = jnp.arange(khs, dtype=jnp.int32)
+        si, sf, so = src[0][:, None], src[1], src[2][:, None]
+        di, df, do = dst[0][:, None], dst[1], dst[2][:, None]
+        c_s = (sf % ps)[:, None] * khs + hh
+        c_d = (df % ps)[:, None] * khs + hh
+        fs, fd = (sf // ps)[:, None], (df // ps)[:, None]
+        keys = ("kv_pool",) if self.sc.cfg.is_mla else ("k_pool", "v_pool")
+        state = dict(state)
+        for key in keys:
+            p = state[key]
+            vals = p[:, :, si, c_s, fs, so]          # [nb, na, T, khs, d]
+            state[key] = p.at[:, :, di, c_d, fd, do].set(vals, mode="drop")
+        return state
+
+    def __call__(self, state: dict, src: np.ndarray, dst: np.ndarray) -> dict:
+        """Apply one batched re-shard (possibly many requests' moves)."""
+        assert src.shape == dst.shape and src.shape[0] == 3, (src.shape,
+                                                              dst.shape)
+        T = src.shape[1]
+        if T == 0:
+            return state
+        tb = self.sc._bucket(T)
+        sp = np.zeros((3, tb - T), np.int32)         # src pad reads coord 0
+        dp = np.zeros((3, tb - T), np.int32)
+        dp[0] = self.sc.I                            # dst pad rows drop
+        s = self._put(np.concatenate([src.astype(np.int32), sp], axis=1))
+        d = self._put(np.concatenate([dst.astype(np.int32), dp], axis=1))
+        return self.sc._jit("reshard", self._body, state)(state, s, d)
+
+
 def load_prefill_cross_kv(cfg: ModelConfig, cluster: ClusterState,
                           dims: DecodeDims, state_np: dict, rid: int,
                           cross_layers) -> None:

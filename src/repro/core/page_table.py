@@ -13,6 +13,25 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
+
+class KVSpillError(MemoryError):
+    """Mid-decode KV growth overran its shard: request ``rid`` needs a new
+    frame on ``instance`` and the instance's pool has none.
+
+    Typed (rather than a bare allocator ``MemoryError``) so the control plane
+    can react per-request: the engine catches it at the table-lowering stage
+    and either escalates the request's CP degree (live KV re-shard onto a
+    shard with headroom) or finishes the request with a clean OOM."""
+
+    def __init__(self, rid: int, instance: int):
+        super().__init__(
+            f"request {rid}: KV pool exhausted on instance {instance} "
+            f"(decode append needs a frame)")
+        self.rid = rid
+        self.instance = instance
+
 
 @dataclass
 class FramePool:
@@ -124,15 +143,27 @@ class GlobalPageTable:
         for s_, t in shard_fill.items():
             self._used[s_] += t
 
+    def append_needs_frame(self, rid: int, instance: int) -> bool:
+        """Whether the next ``append_token(rid, instance)`` must grow a page."""
+        used = self._last_fill[rid].get(instance, 0)
+        frames = self._frames_by_shard.get(rid, {}).get(instance, ())
+        return used >= len(frames) * self.page_size
+
     def append_token(self, rid: int, instance: int) -> tuple[int, int]:
         """Append one decoded token's KV on ``instance``; grows a page if
-        needed.  Returns (frame, offset) of the new token."""
+        needed.  Returns (frame, offset) of the new token.
+
+        Raises ``KVSpillError`` (not a bare allocator error) when the shard's
+        pool is exhausted — the caller decides between CP escalation and a
+        request-level OOM finish."""
         shard_fill = self._last_fill[rid]
         used = shard_fill.get(instance, 0)
         my_frames = self._frames_by_shard.setdefault(rid, {}).setdefault(
             instance, [])
         cap = len(my_frames) * self.page_size
         if used >= cap:
+            if self.pools[instance].free_frames < 1:
+                raise KVSpillError(rid, instance)
             frame = self.pools[instance].alloc(1)[0]
             self._pages[rid].append((instance, frame))
             my_frames.append(frame)
@@ -142,6 +173,77 @@ class GlobalPageTable:
         shard_fill[instance] = used + 1
         self._used[instance] += 1
         return frame, offset
+
+    def move_pages(self, rid: int, moves) -> tuple["np.ndarray", "np.ndarray"]:
+        """Re-shard bookkeeping: move KV tokens of ``rid`` between instances.
+
+        ``moves``: [(src_instance, dst_instance, tokens)] — each move takes
+        the TAIL ``tokens`` of the source shard's fill and appends them to the
+        destination shard (allocating frames there, freeing fully-vacated
+        source frames).  Token->shard assignment is order-agnostic for decode
+        attention (LSE merge), so the tail is the cheapest correct slice.
+
+        A shard must not appear as both a source and a destination within one
+        call: the data plane applies all moves as a single gather->scatter
+        whose gathers read the PRE-move pools.
+
+        Returns ``(src_coords, dst_coords)`` int32 [3, T] (instance, frame,
+        offset) per moved token, in matching order — the coordinate tensors
+        ``migrate.KVReshard`` consumes.  Raises ``KVSpillError`` if a
+        destination shard cannot allocate the frames it needs — callers plan
+        moves against per-shard headroom (``free_frames``) so this only fires
+        on a planner bug.
+        """
+        srcs = {s for s, _, n in moves if n > 0}
+        dsts = {d for _, d, n in moves if n > 0}
+        assert not (srcs & dsts), f"shard both source and destination: {srcs & dsts}"
+        self._frames_np.pop(rid, None)
+        shard_fill = self._last_fill[rid]
+        by_shard = self._frames_by_shard.setdefault(rid, {})
+        page = self.page_size
+        s_cols, d_cols = [], []
+        for src, dst, n in moves:
+            if n <= 0:
+                continue
+            assert src != dst, (src, dst)
+            used_s = shard_fill.get(src, 0)
+            assert n <= used_s, (rid, src, n, used_s)
+            fs = by_shard[src]
+            pos = np.arange(used_s - n, used_s)
+            s_cols.append(np.stack([np.full(n, src),
+                                    np.asarray(fs)[pos // page], pos % page]))
+            # destination: extend the shard's fill (allocate frames as needed)
+            used_d = shard_fill.get(dst, 0)
+            fd = by_shard.setdefault(dst, [])
+            need = self.pages_needed(used_d + n) - len(fd)
+            if need > 0:
+                if self.pools[dst].free_frames < need:
+                    raise KVSpillError(rid, dst)
+                new = self.pools[dst].alloc(need)
+                self._pages[rid].extend((dst, f) for f in new)
+                fd.extend(new)
+            dpos = np.arange(used_d, used_d + n)
+            d_cols.append(np.stack([np.full(n, dst),
+                                    np.asarray(fd)[dpos // page], dpos % page]))
+            # shrink the source: free fully-vacated frames
+            left = used_s - n
+            keep = self.pages_needed(left)
+            freed = fs[keep:]
+            del fs[keep:]
+            if freed:
+                self.pools[src].free(freed)
+                gone = set(freed)
+                self._pages[rid] = [(s_, f) for (s_, f) in self._pages[rid]
+                                    if not (s_ == src and f in gone)]
+            shard_fill[src] = left
+            shard_fill[dst] = used_d + n
+            self._used[src] -= n
+            self._used[dst] += n
+        if not s_cols:
+            z = np.zeros((3, 0), np.int32)
+            return z, z
+        return (np.concatenate(s_cols, axis=1).astype(np.int32),
+                np.concatenate(d_cols, axis=1).astype(np.int32))
 
     def free_request(self, rid: int) -> None:
         for s, f in self._pages.pop(rid, []):

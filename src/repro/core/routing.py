@@ -22,6 +22,7 @@ from dataclasses import dataclass, fields
 import numpy as np
 
 from .bucketing import ShapeBuckets
+from .page_table import KVSpillError
 from .state import ClusterState, IterationPlan
 
 
@@ -177,6 +178,22 @@ def lower_plan(cluster: ClusterState, plan: IterationPlan,
     pt = cluster.page_table
     act = cluster.active
     rids = sorted(act)
+
+    # --- append pre-flight: surface KV exhaustion BEFORE any mutation ------
+    # ``append_token`` below mutates the page table per request; raising
+    # mid-loop would leave earlier appends applied.  Check every MoE-binding
+    # shard's frame budget first so a spill raises a typed ``KVSpillError``
+    # with the table untouched — the engine escalates the request (live KV
+    # re-shard) or OOM-finishes it, then retries the lowering.
+    if append_tokens:
+        frames_wanted: dict[int, int] = {}
+        for rid in rids:
+            i = act[rid].moe_binding
+            if pt.append_needs_frame(rid, i):
+                want = frames_wanted.get(i, 0) + 1
+                if want > pt.free_frames(i):
+                    raise KVSpillError(rid, i)
+                frames_wanted[i] = want
 
     # --- single collection pass over the active set ------------------------
     # per-slot rows (one per request) and flat per-(request, shard) pair

@@ -23,6 +23,39 @@ from .state import ClusterState, InstancePlan, IterationPlan, Request
 from .waterfill import waterfill
 
 
+@dataclass
+class Escalation:
+    """One mid-decode CP promotion: the request's KV binding grew (or its KV
+    was rebalanced within the binding) and ``moves`` tokens change shards.
+
+    Page-table bookkeeping is already applied when this record is created;
+    ``src_coords``/``dst_coords`` ([3, T] int32: instance, frame, offset per
+    moved token, matching order) are the coordinate tensors the data plane's
+    ``migrate.KVReshard`` consumes to move the physical KV.  The engine MUST
+    apply that re-shard before dispatching a step lowered from the updated
+    table (the simulator instead charges ``latency_model.kv_reshard_time``).
+    """
+    rid: int
+    old_binding: list
+    new_binding: list
+    moves: list                      # [(src_instance, dst_instance, tokens)]
+    src_coords: np.ndarray           # [3, T] (instance, frame, offset)
+    dst_coords: np.ndarray
+    reason: str = "bucket"           # bucket | headroom | spill | drain
+
+    @property
+    def tokens_moved(self) -> int:
+        return int(self.src_coords.shape[1])
+
+    @property
+    def pages_moved(self) -> int:
+        """Distinct destination frames written by the re-shard."""
+        if self.dst_coords.shape[1] == 0:
+            return 0
+        key = self.dst_coords[0].astype(np.int64) * (1 << 32) + self.dst_coords[1]
+        return int(np.unique(key).size)
+
+
 def _mk_plan(cluster: ClusterState) -> IterationPlan:
     return IterationPlan([InstancePlan(i) for i in range(cluster.num_instances)])
 
@@ -55,10 +88,18 @@ class BaseScheduler:
     def rebalance(self, cluster: ClusterState) -> None:
         """Optionally reassign MoE bindings of active requests."""
 
+    def escalate(self, cluster: ClusterState) -> list:
+        """Optionally promote running requests' CP degrees (returns
+        ``Escalation`` records; page-table bookkeeping already applied)."""
+        return []
+
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
         self.rebalance(cluster)
         plan = _mk_plan(cluster)
+        # escalations run BEFORE admission so new placements see the
+        # post-move headroom picture (and never race a planned move's frames)
+        plan.escalations = self.escalate(cluster)
         admitted, still_waiting = [], []
         batch_counts = np.bincount(
             [r.moe_binding for r in cluster.active.values()],
@@ -103,7 +144,9 @@ class DualBalancedScheduler(BaseScheduler):
 
     def __init__(self, buckets: CPBuckets = DEFAULT_BUCKETS,
                  max_batch_per_instance: int = 256, kv_reserve: int = 0,
-                 allow_rebalance: bool = True, has_kv: bool = True):
+                 allow_rebalance: bool = True, has_kv: bool = True,
+                 allow_escalation: bool = True,
+                 escalate_headroom: int | None = None):
         super().__init__(max_batch_per_instance)
         self.buckets = buckets
         self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
@@ -114,6 +157,19 @@ class DualBalancedScheduler(BaseScheduler):
         # attention-free archs (mamba2) have no KV cache: DCP is inapplicable
         # (DESIGN.md §6) and placement degenerates to batch balancing.
         self.has_kv = has_kv
+        # mid-decode CP escalation (live KV re-sharding).  The engine turns
+        # it off when decode never appends KV (whisper: cross pools are
+        # read-only, the request's KV footprint cannot grow).
+        self.allow_escalation = allow_escalation
+        # low-water mark (tokens): escalate a request whose MoE-binding
+        # shard's free space falls to/below this.  None -> derived per
+        # cluster as max(kv_reserve, page_size).
+        self.escalate_headroom = escalate_headroom
+
+    def _low_water(self, cluster: ClusterState) -> int:
+        if self.escalate_headroom is not None:
+            return self.escalate_headroom
+        return max(self.kv_reserve, cluster.page_table.page_size)
 
     # Alg. 1, lines 1-5: rebalance MoE bindings of active requests
     def rebalance(self, cluster: ClusterState) -> None:
@@ -130,6 +186,219 @@ class DualBalancedScheduler(BaseScheduler):
                 req.moe_binding = int(m)
                 cluster.move_slot(req.rid, int(m))
             B[m] += 1
+
+    # -- mid-decode CP escalation (live KV re-sharding) --------------------
+    def escalate(self, cluster: ClusterState) -> list:
+        """Promote running requests whose KV footprint outgrew their degree.
+
+        A request escalates when (a) its TOTAL KV length (prompt + decoded)
+        crossed its next ``CPBuckets`` edge, or (b) its MoE-binding shard —
+        the one every decoded token's KV is appended to — fell to/below the
+        low-water headroom mark.  The promotion extends ``kv_binding`` with
+        the least-loaded node members and WaterFills the request's resident
+        tokens across the new binding; page-table bookkeeping happens here,
+        the physical move is the returned records' coordinate tensors.
+        """
+        if not (self.has_kv and self.allow_escalation):
+            return []
+        out = []
+        low = self._low_water(cluster)
+        for rid in sorted(cluster.active):
+            req = cluster.active[rid]
+            if req.moe_binding in cluster.dead_instances:
+                continue
+            esc = self._try_escalate(cluster, req, low)
+            if esc is not None:
+                out.append(esc)
+        return out
+
+    def relieve_spill(self, cluster: ClusterState, rid: int,
+                      instance: int) -> list:
+        """Emergency path for a ``KVSpillError`` at table lowering: free
+        append headroom on ``instance`` by force-escalating the spilling
+        request itself, else the co-resident request with the most movable
+        KV.  Returns the applied escalations ([] = nothing could move — the
+        caller should OOM-finish the request)."""
+        if not self.has_kv:
+            return []
+        low = self._low_water(cluster)
+        pt = cluster.page_table
+        cands = []
+        if rid in cluster.active:
+            cands.append(cluster.active[rid])
+        others = [r for r_id, r in sorted(cluster.active.items())
+                  if r_id != rid and pt.shard_tokens(r_id).get(instance, 0) > 0]
+        others.sort(key=lambda r: -pt.shard_tokens(r.rid).get(instance, 0))
+        cands.extend(others)
+        for req in cands:
+            esc = self._try_escalate(cluster, req, low, relieve=instance)
+            if esc is not None:
+                return [esc]
+        return []
+
+    def evacuate(self, cluster: ClusterState, instance: int) -> list:
+        """Drain ``instance``: move every active request's resident KV off it
+        (live re-shard, no data loss) and drop it from their bindings.  The
+        caller marks the instance dead and lets ``rebalance`` move MoE
+        bindings; if any request's KV cannot fit elsewhere this raises with
+        the page table UNTOUCHED (two-phase plan/apply — a mid-drain failure
+        must not leave earlier requests' tables pointing at frames whose KV
+        was never physically moved; callers that tolerate loss use
+        ``ClusterState.fail_instance`` instead)."""
+        pt = cluster.page_table
+        page = pt.page_size
+        # phase 1: plan every request's moves against a FRAME ledger (each
+        # request's tokens land in its own frames, so receiver headroom is
+        # consumed at page granularity — conservatively ceil per request)
+        head_frames = {s: pt.free_frames(s)
+                       for s in range(cluster.num_instances)}
+        plans = []
+        for rid in sorted(cluster.active):
+            req = cluster.active[rid]
+            tokens_on = pt.shard_tokens(rid).get(instance, 0)
+            if instance not in req.kv_binding and tokens_on == 0:
+                continue
+            members = [s for s in cluster.node_instances(req.node)
+                       if s != instance]
+            moves = []
+            if tokens_on > 0:
+                if not members:
+                    raise MemoryError(
+                        f"evacuate({instance}): request {rid} has no "
+                        f"surviving node member to hold its KV")
+                loads = np.array([cluster.kv_load(s) for s in members],
+                                 np.float64)
+                caps = np.array([head_frames[s] * page for s in members],
+                                np.float64)
+                if caps.sum() < tokens_on:
+                    raise MemoryError(
+                        f"evacuate({instance}): request {rid} needs "
+                        f"{tokens_on} tokens, node headroom {caps.sum():.0f}")
+                split = waterfill(loads, tokens_on, capacities=caps)
+                for s, t in zip(members, split):
+                    if t > 0:
+                        moves.append((instance, s, int(t)))
+                        head_frames[s] -= -(-int(t) // page)
+            plans.append((req, members, moves))
+        # phase 2: apply (cannot fail — the ledger over-reserved frames)
+        out = []
+        for req, members, moves in plans:
+            src, dst = pt.move_pages(req.rid, moves)
+            binding = sorted(s for s in req.kv_binding
+                             if s != instance and s not in cluster.dead_instances)
+            holders = {s for s, t in pt.shard_tokens(req.rid).items() if t > 0}
+            new_binding = sorted(holders | set(binding)) or sorted(
+                set(members[:1]))
+            old = sorted(req.kv_binding)
+            req.kv_binding = new_binding
+            out.append(Escalation(req.rid, old, new_binding, moves, src, dst,
+                                  reason="drain"))
+        return out
+
+    def _try_escalate(self, cluster: ClusterState, req: Request, low: int,
+                      relieve: int | None = None):
+        """Plan + apply one request's escalation; None when not needed or
+        infeasible.  ``relieve``: force mode — the instance a decode append
+        spilled on; the plan must vacate at least one frame there."""
+        pt = cluster.page_table
+        shards = pt.shard_tokens(req.rid)
+        total = sum(shards.values())
+        members = cluster.node_instances(req.node)
+        if not members or total == 0:
+            return None
+        if relieve is not None and shards.get(relieve, 0) == 0:
+            return None             # nothing of this request to vacate there
+        binding = [s for s in req.kv_binding
+                   if s not in cluster.dead_instances]
+        m = req.moe_binding
+        k_want = min(self.buckets.cp_degree(total), len(members))
+        need_degree = k_want > len(binding)
+        need_headroom = cluster.kv_headroom(m) <= low
+        force = relieve is not None
+        if not (force or need_degree or need_headroom):
+            return None
+        cand = sorted((s for s in members if s not in binding),
+                      key=lambda s: (cluster.kv_load(s), s))
+        k_new = max(k_want, len(binding) + (1 if (need_headroom or force)
+                                            else 0))
+        trial = sorted(set(binding) | set(cand[:max(k_new - len(binding), 0)]))
+        moves = self._plan_moves(cluster, req, trial, low, relieve)
+        if not moves:
+            return None
+        if not force and not need_degree:
+            # headroom-only trigger: the move must actually relieve m, and
+            # must be worth a re-shard (>= one page) — under sustained
+            # pressure this batches the migration into periodic page-sized
+            # moves instead of a per-step token dribble (the typed spill
+            # path stays as the exhaustion backstop)
+            if not any(s == m for s, _, _ in moves):
+                return None
+            if sum(n for _, _, n in moves) < cluster.page_table.page_size:
+                return None
+        src, dst = pt.move_pages(req.rid, moves)
+        holders = {s for s, t in pt.shard_tokens(req.rid).items() if t > 0}
+        old = sorted(req.kv_binding)
+        req.kv_binding = sorted(holders | {m})
+        reason = ("spill" if force else
+                  "bucket" if need_degree else "headroom")
+        return Escalation(req.rid, old, req.kv_binding, moves, src, dst,
+                          reason)
+
+    def _plan_moves(self, cluster: ClusterState, req: Request, binding: list,
+                    low: int, relieve: int | None):
+        """WaterFill the request's resident tokens over ``binding`` and emit
+        the donor->receiver move list reaching that split.  Donors and
+        receivers are disjoint by construction (sign of cur - target), which
+        is exactly the invariant ``move_pages``/the single-scatter data plane
+        require."""
+        pt = cluster.page_table
+        page = pt.page_size
+        shards = pt.shard_tokens(req.rid)
+        cur = np.array([shards.get(s, 0) for s in binding], np.int64)
+        total = int(cur.sum())
+        if total == 0 or len(binding) < 2:
+            return []
+        loads = np.array([cluster.kv_load(s) - c
+                          for s, c in zip(binding, cur)], np.float64)
+        caps = np.array([float(c) + cluster.kv_headroom(s)
+                         for s, c in zip(binding, cur)], np.float64)
+        mi = binding.index(req.moe_binding) if req.moe_binding in binding \
+            else None
+        if mi is not None:
+            caps[mi] = max(caps[mi] - low, 0.0)
+        if relieve is not None and relieve in binding:
+            # vacating the partial tail page is what actually frees a frame
+            ri = binding.index(relieve)
+            if cur[ri] > 0:
+                vacate = (int(cur[ri]) - 1) % page + 1
+                caps[ri] = min(caps[ri], float(max(int(cur[ri]) - vacate, 0)))
+        if caps.sum() < total and mi is not None:
+            # relax the soft low-water reserve on the MoE binding, but keep
+            # the hard frame-vacating constraint of a spill relief
+            relaxed = float(cur[mi]) + cluster.kv_headroom(req.moe_binding)
+            if relieve == req.moe_binding and cur[mi] > 0:
+                vacate = (int(cur[mi]) - 1) % page + 1
+                relaxed = min(relaxed, float(max(int(cur[mi]) - vacate, 0)))
+            caps[mi] = relaxed
+        if caps.sum() < total:
+            return []
+        target = waterfill(loads, total, capacities=caps)
+        delta = cur - target                      # >0 donor, <0 receiver
+        donors = [(binding[i], int(d)) for i, d in enumerate(delta) if d > 0]
+        recvs = [(binding[i], int(-d)) for i, d in enumerate(delta) if d < 0]
+        moves = []
+        di = 0
+        for s, have in donors:
+            while have > 0 and di < len(recvs):
+                d, want = recvs[di]
+                n = min(have, want)
+                moves.append((s, d, n))
+                have -= n
+                want -= n
+                recvs[di] = (d, want)
+                if want == 0:
+                    di += 1
+        return moves
 
     # Alg. 1, lines 6-18
     def place(self, cluster: ClusterState, req: Request, B=None):
@@ -152,10 +421,13 @@ class DualBalancedScheduler(BaseScheduler):
                         key=lambda s: (cluster.kv_load(s), s))
         binding = [m] + others[: k - 1]
         # WaterFill token split (line 12); reserve growth room on the MoE
-        # binding so appended tokens don't immediately spill
+        # binding SPECIFICALLY — an aggregate check lets WaterFill fill m to
+        # its cap, and the very first appended token then needs a frame the
+        # shard doesn't have
         loads = np.array([cluster.kv_load(s) for s in binding], dtype=np.float64)
         caps = np.array([cluster.kv_headroom(s) for s in binding], dtype=np.float64)
-        if caps.sum() < req.length + self.kv_reserve:   # keep growth headroom
+        caps[0] = max(caps[0] - self.kv_reserve, 0.0)   # binding[0] is m
+        if caps.sum() < req.length:
             return None
         split_arr = waterfill(loads, req.length, capacities=caps)
         split = {s: int(t) for s, t in zip(binding, split_arr)}

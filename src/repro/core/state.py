@@ -184,6 +184,10 @@ class IterationPlan:
     instances: list
     admitted: list = field(default_factory=list)
     deferred: int = 0
+    # mid-decode CP escalations decided this iteration (scheduler.Escalation
+    # records; page-table bookkeeping already applied — the engine owes the
+    # device-side KV re-shard before dispatching against these tables)
+    escalations: list = field(default_factory=list)
 
     def plan_of(self, instance: int) -> InstancePlan:
         return self.instances[instance]

@@ -56,6 +56,7 @@ from ..configs.base import ModelConfig
 from ..core import dcp, migrate, routing
 from ..core.aot import AOTGraphEngine
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
+from ..core.page_table import KVSpillError
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
 from ..core.state import ClusterState, Request
 from ..models import encdec, transformer
@@ -66,6 +67,9 @@ class GenResult:
     rid: int
     prompt: list
     tokens: list = field(default_factory=list)
+    # True when the request was finished early by a clean request-level OOM
+    # (KV spill with no shard headroom anywhere to escalate into)
+    oom: bool = False
 
 
 @dataclass
@@ -104,6 +108,9 @@ class NanoCPEngine:
                                     instances_per_node=instances_per_node,
                                     kv_capacity_tokens=kv_capacity_tokens,
                                     page_size=page_size, kv_stripes=ps)
+        # cross pools are read-only during decode (whisper): no KV appends —
+        # and therefore no decode-time KV growth to escalate for
+        self._append_tokens = cfg.has_attention and not self.is_encdec
         # per-slot device state (SSM recurrent state, whisper self-attn
         # caches) pins the slot dimension of the serve state: ONE fixed M
         # bucket and no MoE-binding rebalance
@@ -111,7 +118,17 @@ class NanoCPEngine:
         self.scheduler = scheduler or DualBalancedScheduler(
             buckets=buckets, allow_rebalance=not pinned_slots,
             max_batch_per_instance=max_slots_per_instance,
-            has_kv=cfg.has_attention)
+            has_kv=cfg.has_attention,
+            # keep one decode page of growth headroom on every MoE binding
+            # at admission so the first appended tokens never spill
+            kv_reserve=page_size if self._append_tokens else 0,
+            allow_escalation=self._append_tokens)
+        if not self._append_tokens and \
+                getattr(self.scheduler, "allow_escalation", False):
+            # a caller-supplied scheduler must not escalate when decode
+            # never appends KV (nothing grows; the re-shard op only covers
+            # the decoder-only pool layouts)
+            self.scheduler.allow_escalation = False
         if shape_buckets is None and pinned_slots:
             shape_buckets = ShapeBuckets(m_buckets=(max_slots_per_instance,),
                                          window=instances_per_node)
@@ -153,12 +170,14 @@ class NanoCPEngine:
             jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
                          is_leaf=lambda x: isinstance(x, P)))
         self._tbl_shardings: dict | None = None
-        # cross pools are read-only during decode (whisper): no KV appends
-        self._append_tokens = cfg.has_attention and not self.is_encdec
         self.aot = AOTGraphEngine(self._build_step,
                                   audit_every_step=audit_donation_every_step)
         self._scatter = migrate.PrefillScatter(cfg, self._dims0,
                                                num_instances)
+        # live KV re-shard collective (mid-decode CP escalation / drain);
+        # coords replicate over the mesh so dispatch stays implicit-free
+        self._reshard = migrate.KVReshard(
+            self._scatter, coord_sharding=NamedSharding(mesh, P()))
         self._arena = routing.TableArena()
         self.next_tok: dict = {}
         self.results: dict = {}
@@ -173,7 +192,8 @@ class NanoCPEngine:
         self.last_bucket: tuple | None = None
         self.hot_path_stats: dict = {
             "steps": 0, "async_token_fetches": 0, "speculative_slots": 0,
-            "prefill_eos_finishes": 0}
+            "prefill_eos_finishes": 0, "escalations": 0, "reshard_tokens": 0,
+            "spill_escalations": 0, "oom_finishes": 0, "drains": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -314,16 +334,29 @@ class NanoCPEngine:
     def _prefill_batch_encdec(self, reqs: list, now: float) -> None:
         """Whisper admission: encode frames, teacher-force the decoder
         prefix, scatter cross-attn KV (paged, DCP-placed) and prefix
-        self-attn KV (per-slot contiguous) into the on-device pools."""
+        self-attn KV (per-slot contiguous) into the on-device pools.
+
+        Encoder forwards BATCH over same-shape frame stacks (one ``encode``
+        call per shape group, not one per request): batching is over the
+        leading axis only, so each request's encoder states — and therefore
+        its scatters — are bit-for-bit those of the per-request call."""
         cfg = self.cfg
         page = self._dims0.page
         khs, kg, ps = self._scatter.khs, self._scatter.kg, self._scatter.ps
+        by_shape: dict = {}
+        for req in reqs:
+            by_shape.setdefault(self._prompts[req.rid].shape, []).append(req)
+        enc_of = {}
+        for grp in by_shape.values():
+            stack = jnp.asarray(np.stack([self._prompts[r.rid] for r in grp]))
+            enc_grp = encdec.encode(cfg, self.params, stack)
+            for b, r in enumerate(grp):
+                enc_of[r.rid] = enc_grp[b:b + 1]
         firsts = []
         ck, cv, c_coords = [], [], []
         sk, sv, s_coords = [], [], []
         for req in reqs:
-            frames = jnp.asarray(self._prompts[req.rid])[None]
-            enc = encdec.encode(cfg, self.params, frames)
+            enc = enc_of[req.rid]
             toks = jnp.asarray(self._dec_prefix[req.rid])[None, :]
             logits, caches = encdec.decode_forward(cfg, self.params, toks,
                                                    enc, collect_kv=True)
@@ -402,6 +435,80 @@ class NanoCPEngine:
         return self._tbl_shardings
 
     # ------------------------------------------------------------------ #
+    def _apply_escalations(self, escalations: list) -> None:
+        """Dispatch the live KV re-shard for this step's escalations.
+
+        Page-table bookkeeping already happened (inside the scheduler); the
+        device-side move rides the same dispatch stream as the decode steps:
+        its input is the in-flight iteration's output state, so the gather
+        reads post-append pools, and the next lowered step sees the moved
+        frames.  One batched gather->scatter covers every escalated request.
+        """
+        if not escalations:
+            return
+        # page-table bookkeeping is already applied by the scheduler; if this
+        # engine cannot physically move the KV, silently dropping the records
+        # would desynchronize tables from pools — fail loudly instead
+        assert self._append_tokens, \
+            "scheduler escalated on an arch whose KV the engine cannot re-shard"
+        t0 = time.perf_counter()
+        src = np.concatenate([e.src_coords for e in escalations], axis=1)
+        dst = np.concatenate([e.dst_coords for e in escalations], axis=1)
+        self.state = self._reshard(self.state, src, dst)
+        self.hot_path_stats["escalations"] += len(escalations)
+        self.hot_path_stats["reshard_tokens"] += int(src.shape[1])
+        self.timings["reshard_us"] = (
+            self.timings.get("reshard_us", 0.0)
+            + (time.perf_counter() - t0) * 1e6)
+
+    def _handle_spill(self, err: KVSpillError, now: float) -> list:
+        """A decode append overran its shard at table lowering: escalate the
+        spilled request onto shards with headroom, or — when no shard in the
+        node can take the KV — finish it with a clean request-level OOM.
+        Returns the requests finished here (empty when escalation worked)."""
+        escs = (self.scheduler.relieve_spill(self.cluster, err.rid,
+                                             err.instance)
+                if hasattr(self.scheduler, "relieve_spill") else [])
+        if escs:
+            self._apply_escalations(escs)
+            self.hot_path_stats["spill_escalations"] += len(escs)
+            return []
+        req = self.cluster.active.get(err.rid)
+        if req is None:
+            return []
+        self.results[err.rid].oom = True
+        self.cluster.finish(req, now)
+        self.finished.append(req)
+        self.hot_path_stats["oom_finishes"] += 1
+        return [req]
+
+    def drain_instance(self, instance: int) -> list:
+        """Planned drain (live migration, zero data loss): evacuate every
+        request's resident KV off ``instance`` through the re-shard
+        collective, mark the instance dead, and rebalance MoE bindings off
+        it.  Unlike ``ClusterState.fail_instance`` (crash semantics: KV lost,
+        requests re-prefill), a drained instance's requests keep decoding
+        with unchanged tokens.  Requires a rebalance-able decode arch
+        (decoder-only attention; pinned-slot families cannot move their MoE
+        binding without a state migration)."""
+        assert self._append_tokens and self.scheduler.allow_rebalance, \
+            "drain needs a rebalance-able attention arch"
+        # dead first so the evacuation planner never picks it as a receiver;
+        # rolled back if the node lacks headroom (evacuate raises with the
+        # page table untouched) — a failed drain must leave the instance
+        # serving, not dead-with-resident-KV
+        self.cluster.dead_instances.add(instance)
+        try:
+            escalations = self.scheduler.evacuate(self.cluster, instance)
+        except MemoryError:
+            self.cluster.dead_instances.discard(instance)
+            raise
+        self._apply_escalations(escalations)
+        self.scheduler.rebalance(self.cluster)
+        self.hot_path_stats["drains"] += 1
+        return escalations
+
+    # ------------------------------------------------------------------ #
     def _harvest(self, now: float) -> list:
         """Materialize the in-flight iteration's tokens (async copy started
         at dispatch), record them, and apply finishes."""
@@ -430,13 +537,15 @@ class NanoCPEngine:
                 # pipeline the request is already lowered into the next
                 # iteration (one speculative slot whose input is patched to
                 # the stop token so the device-side mask suppresses its KV
-                # append; output discarded at the next harvest)
+                # append; output discarded at the next harvest).  A request
+                # no longer active here was OOM-finished between dispatch
+                # and harvest — already reported, don't double-finish.
                 if rid in self.cluster.active:
                     self.cluster.finish(req, now)
                     if self.pipeline:
                         self.hot_path_stats["speculative_slots"] += 1
-                self.finished.append(req)
-                done.append(req)
+                    self.finished.append(req)
+                    done.append(req)
         return done
 
     # ------------------------------------------------------------------ #
@@ -452,6 +561,10 @@ class NanoCPEngine:
 
         # -- schedule + admit (prefill -> on-device KV migration) ----------
         plan = self.scheduler.schedule(self.cluster, now)
+        # mid-decode CP escalations decided by the scheduler: dispatch the
+        # live KV re-shard FIRST so the gather reads the pools before this
+        # step's admissions scatter into (possibly just-freed) frames
+        self._apply_escalations(plan.escalations)
         prefill_done = []
         if plan.admitted:
             t0 = time.perf_counter()
@@ -462,13 +575,28 @@ class NanoCPEngine:
             return prefill_done + self._harvest(now)
 
         # -- lower THIS iteration's tables while the device computes the
-        #    previous one (routing never depends on token VALUES) ----------
+        #    previous one (routing never depends on token VALUES).  A typed
+        #    KV spill surfaces HERE (pre-flight, page table untouched): the
+        #    engine escalates the request onto shards with headroom — or
+        #    OOM-finishes it when none exists — and retries the lowering. ---
         t0 = time.perf_counter()
-        tbl = routing.lower_plan(self.cluster, plan,
-                                 buckets=self.shape_buckets,
-                                 append_tokens=self._append_tokens,
-                                 next_tokens=self.next_tok,
-                                 arena=self._arena)
+        spill_done = []
+        attempts = len(self.cluster.active) + 1
+        while True:
+            try:
+                tbl = routing.lower_plan(self.cluster, plan,
+                                         buckets=self.shape_buckets,
+                                         append_tokens=self._append_tokens,
+                                         next_tokens=self.next_tok,
+                                         arena=self._arena)
+                break
+            except KVSpillError as err:
+                attempts -= 1
+                if attempts <= 0:
+                    raise
+                spill_done += self._handle_spill(err, now)
+                if not self.cluster.active:
+                    return prefill_done + spill_done + self._harvest(now)
         key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
         # lower_plan already quantised MB on the same (idempotent) ladder;
         # a mismatch would mean the arena buffers no longer match the AOT
@@ -485,7 +613,7 @@ class NanoCPEngine:
         slots_at_lower = ({rid: self.cluster.slot_map[rid]
                            for rid in self.cluster.active}
                           if self.eos is not None and self.pipeline else None)
-        done = prefill_done + self._harvest(now)
+        done = prefill_done + spill_done + self._harvest(now)
 
         # -- patch per-slot input tokens now that they are all known -------
         for rid in self.cluster.active:

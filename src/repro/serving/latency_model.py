@@ -156,6 +156,26 @@ class LatencyModel:
         return self.hw.kernel_base + tokens * per_tok / (
             self.hw.peak_flops * self.hw.chips_per_instance)
 
+    @property
+    def num_attn_layers(self) -> int:
+        """TOTAL attention layers in the stack (block_pattern is ONE
+        repeating block; the pools the re-shard moves are [nb, na, ...])."""
+        per_block = sum(1 for k in self.cfg.block_pattern()
+                        if k["mixer"] == "attn")
+        return self.cfg.num_blocks * per_block
+
+    def kv_reshard_time(self, tokens_moved: float) -> float:
+        """Live KV re-shard (mid-decode CP escalation): gather + scatter the
+        moved tokens' KV for EVERY attention layer across instance links —
+        one hop out of the donor, one into the receiver — plus the HBM sweep
+        to read and rewrite the pages on both ends."""
+        if tokens_moved <= 0:
+            return 0.0
+        bytes_ = tokens_moved * self.kv_bytes_per_token * self.num_attn_layers
+        return (2 * self.hw.hop_latency + self.hw.kernel_base
+                + bytes_ / self.inst_link_bw
+                + 2 * bytes_ / (self.hw.hbm_bw * self.hw.chips_per_instance))
+
     # ---------------- composite: DCP attention for one request ----------
     def dcp_attention_latency(self, length: int, cp: int) -> float:
         """Offline-profiling objective for Bucket(len) derivation: one

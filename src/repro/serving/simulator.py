@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.bucketing import ShapeBuckets
+from ..core.page_table import KVSpillError
 from ..core.scheduler import BaseScheduler, UniformCPScheduler
 from ..core.state import ClusterState, Request
 from .latency_model import LatencyModel
@@ -54,6 +55,13 @@ class SimResult:
     phase: list = field(default_factory=list)              # [iters] PhaseBreakdown
     cp_degree_hist: dict = field(default_factory=dict)     # degree -> req-iters
     sched_wall: float = 0.0                                # real control-plane s
+    # mid-decode CP escalation accounting (the re-shard is charged into sim
+    # time so escalating policies pay for the KV they move)
+    escalations: int = 0                                   # promotion events
+    escalated_tokens: int = 0                              # KV tokens moved
+    escalated_pages: int = 0                               # dest frames written
+    reshard_time: float = 0.0                              # total seconds charged
+    oom_finishes: int = 0                                  # spills nobody could absorb
 
 
 class ClusterSimulator:
@@ -124,6 +132,36 @@ class ClusterSimulator:
         return t_iter, ph, attn_t + cp_t, 2 * a2a_t
 
     # ------------------------------------------------------------------ #
+    def _charge_reshard(self, res: SimResult, escalations: list,
+                        now: float) -> float:
+        if not escalations:
+            return now
+        moved = sum(e.tokens_moved for e in escalations)
+        t_resh = self.latency.kv_reshard_time(moved)
+        res.reshard_time += t_resh
+        res.escalations += len(escalations)
+        res.escalated_tokens += moved
+        res.escalated_pages += sum(e.pages_moved for e in escalations)
+        return now + t_resh
+
+    def _relieve_or_oom(self, res: SimResult, cl: ClusterState, r: Request,
+                        err: KVSpillError, now: float) -> float:
+        """A decode append overran its shard between scheduling passes:
+        force-escalate (charged) like the engine's spill path, else finish
+        the request with a request-level OOM."""
+        escs = (self.scheduler.relieve_spill(cl, err.rid, err.instance)
+                if hasattr(self.scheduler, "relieve_spill") else [])
+        if escs:
+            now = self._charge_reshard(res, escs, now)
+            cl.page_table.append_token(r.rid, r.moe_binding)
+            return now
+        cl.finish(r, now)
+        r.status = "oom"
+        res.finished.append(r)
+        res.oom_finishes += 1
+        return now
+
+    # ------------------------------------------------------------------ #
     def run(self, workload: Workload, horizon: float | None = None,
             failure_events: list | None = None) -> SimResult:
         """failure_events: optional [(time, instance), ...] — fault injection."""
@@ -152,6 +190,10 @@ class ClusterSimulator:
             t0 = _time.perf_counter()
             plan = self.scheduler.schedule(cl, now)
             res.sched_wall += _time.perf_counter() - t0
+            # escalations: page-table bookkeeping already applied by the
+            # scheduler; the simulator charges the data-plane re-shard time
+            # (the engine instead dispatches migrate.KVReshard here)
+            now = self._charge_reshard(res, plan.escalations, now)
             if not cl.active:
                 if ai < len(arrivals):
                     now = max(now, arrivals[ai].arrival)
@@ -176,14 +218,31 @@ class ClusterSimulator:
                 d = r.cp_degree
                 res.cp_degree_hist[d] = res.cp_degree_hist.get(d, 0) + 1
 
-            # run ``multi_step`` decode iterations under this plan
+            # run ``multi_step`` decode iterations under this plan.  Each
+            # decoded token's KV is APPENDED to the MoE-binding shard — the
+            # same page-table growth the real data plane performs — so
+            # decode-time memory pressure (and the escalations/OOMs it
+            # forces) is modeled, not ignored.
+            # mirror the engine's append gate: enc-dec cross pools are
+            # read-only at decode (no KV growth), attention-free archs have
+            # no KV at all
+            append = (self.cfg.has_attention
+                      and not self.cfg.is_encoder_decoder
+                      and getattr(self.scheduler, "has_kv", True))
             for _ in range(self.multi_step):
                 now += t_iter
                 res.iterations += 1
                 done = []
-                for r in cl.active.values():
+                for r in list(cl.active.values()):
                     r.generated += 1
                     r.token_times.append(now)
+                    if append:
+                        try:
+                            cl.page_table.append_token(r.rid, r.moe_binding)
+                        except KVSpillError as err:
+                            now = self._relieve_or_oom(res, cl, r, err, now)
+                            if r.status == "oom":
+                                continue
                     if r.done:
                         done.append(r)
                 for r in done:

@@ -68,7 +68,10 @@ def run_case(arch: str, I: int, TP: int, kv: int | None = None) -> None:
 
     rng = np.random.default_rng(0)
     if cfg.is_encoder_decoder:
-        cases = [(40, 3), (130, 5), (90, 2)]   # (enc frames, dec prefix)
+        # (enc frames, dec prefix); two same-shape requests so admission's
+        # shape-grouped BATCHED encoder forward is exercised (and must stay
+        # bit-for-bit equal to the per-request reference encode below)
+        cases = [(40, 3), (130, 5), (130, 2)]
         frames = {r: rng.standard_normal((L, cfg.d_model)).astype(np.float32)
                   for r, (L, _) in enumerate(cases)}
         prefix = {r: rng.integers(0, cfg.vocab_size, (t0,))

@@ -1,0 +1,137 @@
+"""Mid-decode CP escalation engine cell (one subprocess per mode).
+
+A long decode whose KV growth overruns its admission-time shard must NOT
+crash in ``append_token``: the scheduler promotes the request's CP degree
+(bucket edge / headroom low-water / typed spill) and the engine re-shards the
+resident KV live through ``migrate.KVReshard`` — and the escalated request's
+tokens stay bit-for-bit equal to the single-device reference.
+
+Modes (second arg ``nopipe`` switches off the one-step-lookahead pipeline):
+
+  * bucket   — plenty of memory; the request's total KV length crosses a
+               ``CPBuckets`` edge mid-decode (degree 1 -> 2).
+  * headroom — tiny per-instance pool; decode fills the MoE-binding shard and
+               the low-water mark forces KV onto the node's other instance.
+               The workload needs MORE than one instance's pool: without
+               escalation this is exactly the ``append_token`` crash.
+  * oom      — the WHOLE node's pools are exhausted mid-decode: the request
+               finishes with a clean request-level OOM (``GenResult.oom``),
+               its emitted tokens still matching the reference prefix.
+  * striped  — bucket escalation at tp > num_kv_heads: the re-shard must
+               address page-striped sub-pools (ps = 2).
+  * mla      — bucket escalation on the MLA latent pool (single ``kv_pool``
+               striped over all tp devices).
+
+Asserts donation + transfer-guard invariants across the re-shard steps.
+
+Usage: engine_escalation.py MODE [nopipe]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+VOCAB = 256
+
+MODES = {
+    # mode: (arch, tp, kv_capacity_tokens, edges, degrees, prompt_len, max_new)
+    "bucket":   ("tinyllama-1.1b", 2, 4096, (48,), (1, 2), 40, 24),
+    "headroom": ("tinyllama-1.1b", 2, 96, (100_000,), (1, 2), 40, 40),
+    "oom":      ("tinyllama-1.1b", 2, 48, (16,), (1, 2), 24, 100),
+    "striped":  ("tinyllama-1.1b", 4, 4096, (48,), (1, 2), 40, 24),   # ps=2
+    "mla":      ("minicpm3-4b", 2, 4096, (48,), (1, 2), 40, 24),      # kv_pool
+}
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def run_case(mode: str, pipeline: bool) -> None:
+    arch, tp, cap, edges, degrees, plen, max_new = MODES[mode]
+    cfg = reduced(CONFIGS[arch], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((2, tp), ("data", "model"))
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=2, instances_per_node=2, tp=tp,
+        kv_capacity_tokens=cap, page_size=16,
+        buckets=CPBuckets(edges=edges, degrees=degrees),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=2),
+        max_slots_per_instance=4, pipeline=pipeline,
+        audit_donation_every_step=True)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, VOCAB, (plen,))
+    rid = eng.add_request(prompt, max_new_tokens=max_new)
+
+    eng.step()                                    # admission + warmup
+    assert not eng.cluster.waiting, "request must admit at step 1"
+    if mode != "oom":                             # oom admits pre-split (deg 2)
+        assert eng.cluster.active[rid].cp_degree == 1, "must admit un-escalated"
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+    with jax.transfer_guard("disallow"):
+        for _ in range(max_new + 32):
+            if not (eng.cluster.active or eng._inflight is not None):
+                break
+            eng.step()
+    assert not eng.cluster.active and eng._inflight is None
+    res = eng.results[rid]
+    hp = eng.hot_path_stats
+    print(f"mode={mode} pipeline={pipeline}: tokens={len(res.tokens)} "
+          f"escalations={hp['escalations']} spill={hp['spill_escalations']} "
+          f"reshard_tokens={hp['reshard_tokens']} oom={hp['oom_finishes']}")
+
+    if mode == "oom":
+        assert res.oom, "request must end in a clean request-level OOM"
+        assert hp["oom_finishes"] == 1
+        assert len(res.tokens) < max_new
+        # every emitted token still matches the reference prefix
+        ref = reference(cfg, params, prompt, len(res.tokens))
+        assert res.tokens == ref, (res.tokens, ref)
+        # before the OOM the decode liquefied across BOTH shards
+        assert hp["escalations"] + hp["spill_escalations"] >= 1
+    else:
+        assert not res.oom
+        assert len(res.tokens) == max_new
+        assert hp["escalations"] >= 1, hp
+        assert hp["reshard_tokens"] > 0
+        ref = reference(cfg, params, prompt, max_new)
+        assert res.tokens == ref, (res.tokens, ref)
+        # the finished request ended at CP degree 2 (binding recorded on the
+        # request object it finished with)
+        fin = [r for r in eng.finished if r.rid == rid][0]
+        assert len(fin.kv_binding) == 2, fin.kv_binding
+
+    # donation held across the re-shard dispatches (audited EVERY step);
+    # only the initial host-state commit may copy
+    st = eng.aot.stats
+    n_leaves = len(jax.tree.leaves(eng.state))
+    assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+    assert st.donation_copies <= n_leaves, st.as_dict()
+    assert st.donation_copies == copies_before, \
+        ("re-shard broke step donation", st.as_dict())
+    print(f"  aot: {st.as_dict()}")
+    print(f"mode={mode} pipeline={pipeline}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1]
+    pipeline = "nopipe" not in sys.argv[2:]
+    run_case(mode, pipeline)

@@ -1,0 +1,94 @@
+"""Fault-injection engine cell: drain an instance mid-run, keep the tokens.
+
+Marks an instance dead mid-decode via ``NanoCPEngine.drain_instance`` —
+planned-maintenance semantics: every request's resident KV is evacuated off
+the instance through the live re-shard collective (``migrate.KVReshard``, the
+same data path CP escalation uses) and ``rebalance`` moves MoE bindings off
+it.  Unlike crash-semantics ``fail_instance`` (KV lost, requests re-prefill),
+the drained requests keep decoding and every request's tokens stay
+token-for-token equal to the single-device reference.
+
+Usage: engine_fault.py [I TP]   (defaults 4 2)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+STEPS = 8
+VOCAB = 256
+
+
+def run_case(I: int, TP: int) -> None:
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
+    degrees = (1, 2, 3) if I >= 3 else (1, 2, 2)
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=I,
+        kv_capacity_tokens=4096, page_size=16,
+        buckets=CPBuckets(edges=(64, 160), degrees=degrees),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=I),
+        max_slots_per_instance=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, VOCAB, (L,)) for L in (24, 90, 180)]
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=STEPS)
+
+    eng.step()
+    assert not eng.cluster.waiting, "all requests must admit at step 1"
+    eng.step()
+    eng.step()
+    # drain the instance carrying the most MoE bindings (the worst case)
+    bindings = [r.moe_binding for r in eng.cluster.active.values()]
+    victim = int(np.bincount(bindings, minlength=I).argmax())
+    n_bound = bindings.count(victim)
+    assert n_bound >= 1
+    with jax.transfer_guard("disallow"):
+        escs = eng.drain_instance(victim)
+        print(f"drained {victim} (moe-bound requests: {n_bound}): "
+              f"{len(escs)} evacuations, "
+              f"{sum(e.tokens_moved for e in escs)} tokens moved")
+        # the evacuated instance holds nothing and nobody references it
+        assert eng.cluster.page_table.instance_used_tokens(victim) == 0
+        for rid, req in eng.cluster.active.items():
+            assert victim not in req.kv_binding, (rid, req.kv_binding)
+            assert req.moe_binding != victim, (rid, req.moe_binding)
+            assert req.moe_binding in req.kv_binding
+            assert eng.cluster.slot_map[rid][0] == req.moe_binding
+        for _ in range(64):
+            if not (eng.cluster.active or eng._inflight is not None):
+                break
+            eng.step()
+    assert not eng.cluster.active and eng._inflight is None
+    assert eng.hot_path_stats["drains"] == 1
+
+    for rid, r in eng.results.items():
+        assert len(r.tokens) == STEPS, (rid, r.tokens)
+        seq = list(map(int, prompts[rid]))
+        ref = []
+        for _ in range(STEPS):
+            logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+            t = int(jnp.argmax(logits[0, -1]))
+            ref.append(t)
+            seq.append(t)
+        assert r.tokens == ref, (rid, r.tokens, ref)
+        print(f"  rid {rid}: {r.tokens} == ref")
+    print(f"engine_fault I={I} TP={TP}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    I = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    TP = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+    run_case(I, TP)

@@ -35,6 +35,8 @@ MATRIX = [
     # encoder-decoder (paged cross-attn pools, per-slot self caches)
     ("whisper-base", 4, 2, None),
     ("whisper-base", 2, 4, None),
+    # wide topology: 8 single-chip instances (W=8 ring, head-grouped KV)
+    ("tinyllama-1.1b", 8, 1, None),
 ]
 
 
@@ -50,4 +52,34 @@ def test_engine_conformance(arch, I, TP, kv):
     if kv is not None:
         args.append(f"kv{kv}")
     out = run_integration("engine_conformance.py", *args)
+    assert "PASS" in out
+
+
+# long-decode cells: KV growth overruns the admission-time shard and the
+# engine must finish via mid-decode CP escalation (live KV re-sharding),
+# token-for-token equal to the reference — pipelined AND non-pipelined.
+ESCALATION_CELLS = [
+    ("bucket", True), ("bucket", False),
+    ("headroom", True), ("headroom", False),
+    ("oom", True), ("oom", False),
+    ("striped", True),             # ps=2 page-striped sub-pool re-shard
+    ("mla", True),                 # MLA latent kv_pool re-shard
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mode,pipeline", ESCALATION_CELLS,
+                         ids=[f"{m}-{'pipe' if p else 'nopipe'}"
+                              for m, p in ESCALATION_CELLS])
+def test_engine_escalation(mode, pipeline):
+    args = [mode] + ([] if pipeline else ["nopipe"])
+    out = run_integration("engine_escalation.py", *args)
+    assert "PASS" in out
+
+
+@pytest.mark.conformance
+def test_engine_fault_drain():
+    """Fault cell: drain an instance mid-run — KV evacuates via the live
+    re-shard, rebalance moves MoE bindings off it, tokens stay equal."""
+    out = run_integration("engine_fault.py", "4", "2")
     assert "PASS" in out

@@ -1,0 +1,326 @@
+"""Mid-decode CP escalation: page-table moves, scheduler triggers, spill
+relief, and the simulator's escalation cost model (host-side, no devices)."""
+import numpy as np
+import pytest
+
+from repro.core.bucketing import CPBuckets
+from repro.core.page_table import GlobalPageTable, KVSpillError
+from repro.core.routing import lower_plan
+from repro.core.scheduler import DualBalancedScheduler
+from repro.core.state import ClusterState, Request
+from repro.core.waterfill import waterfill
+
+
+def mk_cluster(I=4, W=4, cap=4096, page=16, stripes=1):
+    return ClusterState(num_instances=I, instances_per_node=W,
+                        kv_capacity_tokens=cap, page_size=page,
+                        kv_stripes=stripes)
+
+
+def decode_until(cl, sched, steps, on_spill=None):
+    """Drive schedule+lower ``steps`` decode iterations; returns the
+    escalations seen.  ``on_spill(err)`` handles KVSpillError (return True
+    to retry the lowering, False to stop)."""
+    escs = []
+    for _ in range(steps):
+        plan = sched.schedule(cl)
+        escs.extend(plan.escalations)
+        try:
+            lower_plan(cl, plan)
+        except KVSpillError as err:
+            if on_spill is None or not on_spill(err):
+                raise
+            lower_plan(cl, plan)
+        for req in cl.active.values():
+            req.generated += 1
+    return escs
+
+
+# --------------------------------------------------------------------------- #
+# page table: typed spill + move bookkeeping
+# --------------------------------------------------------------------------- #
+def test_append_token_raises_typed_spill():
+    """Regression: exhausting a shard's pool mid-decode raises KVSpillError
+    carrying (rid, instance), not a bare allocator error."""
+    pt = GlobalPageTable(2, frames_per_instance=2, page_size=4)
+    pt.allocate(7, {0: 8})                    # both frames of instance 0
+    with pytest.raises(KVSpillError) as ei:
+        pt.append_token(7, 0)
+    assert ei.value.rid == 7 and ei.value.instance == 0
+    assert isinstance(ei.value, MemoryError)  # old catches keep working
+    # the failed append must not have advanced any bookkeeping
+    assert pt.shard_tokens(7) == {0: 8}
+    assert pt.instance_used_tokens(0) == 8
+
+
+def test_move_pages_bookkeeping_and_coords():
+    pt = GlobalPageTable(3, frames_per_instance=8, page_size=4)
+    pt.allocate(0, {0: 10, 1: 3})
+    frames0 = list(pt.shard_frames(0, 0))
+    src, dst = pt.move_pages(0, [(0, 2, 6)])
+    # token conservation + tail semantics: 6 tokens moved off 0's tail
+    assert pt.shard_tokens(0) == {0: 4, 1: 3, 2: 6}
+    assert pt.instance_used_tokens(0) == 4
+    assert pt.instance_used_tokens(2) == 6
+    # instance 0 keeps exactly ceil(4/4)=1 frame; the other two freed
+    assert len(pt.shard_frames(0, 0)) == 1
+    assert pt.shard_frames(0, 0) == frames0[:1]
+    assert pt.free_frames(0) == 7
+    # coords: matching order, source tail positions, dest fresh frames
+    assert src.shape == dst.shape == (3, 6)
+    assert (src[0] == 0).all() and (dst[0] == 2).all()
+    assert list(src[2]) == [0, 1, 2, 3, 0, 1]          # offsets 4..9 of shard 0
+    assert list(dst[2]) == [0, 1, 2, 3, 0, 1]
+    d_frames = pt.shard_frames(0, 2)
+    assert set(dst[1]) == set(d_frames)
+    pt.free_request(0)
+    assert pt.total_free_frames() == 24
+
+
+def test_move_pages_rejects_src_dst_overlap():
+    pt = GlobalPageTable(3, frames_per_instance=8, page_size=4)
+    pt.allocate(0, {0: 8, 1: 8})
+    with pytest.raises(AssertionError):
+        pt.move_pages(0, [(0, 1, 4), (1, 2, 4)])
+
+
+def test_move_pages_partial_page_append_continues():
+    """After a move, appends continue from the new tail on both shards."""
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=4)
+    pt.allocate(0, {0: 6})
+    pt.move_pages(0, [(0, 1, 3)])
+    assert pt.shard_tokens(0) == {0: 3, 1: 3}
+    f, o = pt.append_token(0, 0)
+    assert o == 3                                   # fills shard 0's partial page
+    f, o = pt.append_token(0, 1)
+    assert o == 3
+    assert pt.shard_tokens(0) == {0: 4, 1: 4}
+
+
+# --------------------------------------------------------------------------- #
+# satellite: admission reserves growth room on the MoE binding specifically
+# --------------------------------------------------------------------------- #
+def test_place_reserves_on_moe_binding():
+    """Whenever placement succeeds, split[m] <= headroom(m) - kv_reserve —
+    WaterFill must never fill the MoE binding into the growth reserve."""
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        cl = mk_cluster(I=4, W=4, cap=int(rng.integers(128, 1024)), page=16)
+        reserve = int(rng.integers(0, 64))
+        sched = DualBalancedScheduler(
+            buckets=CPBuckets(edges=(64,), degrees=(1, 3)),
+            kv_reserve=reserve)
+        # pre-load uneven background occupancy
+        for s in range(4):
+            t = int(rng.integers(0, cl.kv_capacity_tokens // 2))
+            if t:
+                cl.page_table.allocate(100 + s, {s: t})
+        length = int(rng.integers(1, 600))
+        head_before = {s: cl.kv_headroom(s) for s in range(4)}
+        cl.enqueue(Request(rid=0, prompt_len=length, max_new_tokens=4))
+        plan = sched.schedule(cl)
+        if not plan.admitted:
+            continue
+        req = cl.active[0]
+        m = req.moe_binding
+        split_m = cl.page_table.shard_tokens(0).get(m, 0)
+        assert split_m <= max(head_before[m] - reserve, 0), \
+            (trial, split_m, head_before[m], reserve)
+
+
+def test_place_reserve_makes_first_append_safe():
+    """The exact satellite scenario: aggregate headroom fits the request but
+    the MoE shard would be filled to its cap — with the per-shard reserve the
+    placement leaves append room instead."""
+    cl = mk_cluster(I=2, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(16,), degrees=(1, 2)),
+                                  kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=112, max_new_tokens=8))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 1
+    req = cl.active[0]
+    m = req.moe_binding
+    assert cl.kv_headroom(m) >= 16                 # a full page of growth room
+    lower_plan(cl, sched.schedule(cl))             # first append must not spill
+
+
+# --------------------------------------------------------------------------- #
+# scheduler: escalation triggers
+# --------------------------------------------------------------------------- #
+def test_bucket_edge_escalation_extends_binding():
+    cl = mk_cluster(I=4, W=4, cap=4096, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(48, 96), degrees=(1, 2, 3)), kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=40, max_new_tokens=128))
+    sched.schedule(cl)
+    assert cl.active[0].cp_degree == 1
+    escs = decode_until(cl, sched, 80)
+    reasons = [e.reason for e in escs]
+    assert reasons.count("bucket") == 2            # 1 -> 2 -> 3
+    assert cl.active[0].cp_degree == 3
+    # every record's moves are donor/receiver-disjoint and token-conserving
+    for e in escs:
+        srcs = {s for s, _, n in e.moves if n}
+        dsts = {d for _, d, n in e.moves if n}
+        assert not (srcs & dsts)
+        assert e.tokens_moved == sum(n for _, _, n in e.moves)
+    total = sum(cl.page_table.shard_tokens(0).values())
+    assert total == 40 + 80                        # no KV lost in the moves
+
+
+def test_headroom_escalation_liquefies_past_one_shard():
+    """A decode that overruns its shard's pool completes by spilling KV onto
+    the node's other instance — up to the FULL cluster capacity — and then
+    OOMs cleanly through the typed spill (today's crash scenario)."""
+    cl = mk_cluster(I=2, W=2, cap=96, page=16)     # 6 frames per instance
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=40, max_new_tokens=500))
+    sched.schedule(cl)
+    assert cl.active[0].cp_degree == 1
+    spilled = {}
+
+    def relieve(err):
+        escs = sched.relieve_spill(cl, err.rid, err.instance)
+        spilled["final"] = not escs
+        return bool(escs)
+
+    with pytest.raises(KVSpillError):
+        decode_until(cl, sched, 500, on_spill=relieve)
+    # the whole cluster's KV was consumed before the OOM
+    total = sum(cl.page_table.shard_tokens(0).values())
+    assert total == 2 * 96
+    assert spilled["final"]
+    assert cl.active[0].cp_degree == 2
+
+
+def test_lower_plan_preflight_mutates_nothing():
+    """The typed spill surfaces BEFORE any append mutates the page table, so
+    the lowering can be retried after relief."""
+    cl = mk_cluster(I=2, W=2, cap=32, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)),
+        allow_escalation=False)
+    cl.enqueue(Request(rid=0, prompt_len=20, max_new_tokens=64))
+    cl.enqueue(Request(rid=1, prompt_len=20, max_new_tokens=64))
+    sched.schedule(cl)
+    for _ in range(64):
+        plan = sched.schedule(cl)
+        before = {r: cl.page_table.shard_tokens(r) for r in cl.active}
+        try:
+            lower_plan(cl, plan)
+        except KVSpillError:
+            after = {r: cl.page_table.shard_tokens(r) for r in cl.active}
+            assert before == after
+            return
+        for req in cl.active.values():
+            req.generated += 1
+    pytest.fail("tiny pool never spilled")
+
+
+def test_escalation_disabled_without_kv():
+    cl = mk_cluster()
+    sched = DualBalancedScheduler(has_kv=False)
+    cl.enqueue(Request(rid=0, prompt_len=400, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert plan.escalations == []
+    for _ in range(4):
+        plan = sched.schedule(cl)
+        assert plan.escalations == []
+        cl.active[0].generated += 1
+
+
+def test_evacuate_moves_all_kv_off_instance():
+    cl = mk_cluster(I=4, W=4, cap=4096, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(64,), degrees=(1, 2)))
+    for r, L in enumerate([100, 100, 30]):
+        cl.enqueue(Request(rid=r, prompt_len=L, max_new_tokens=8))
+    sched.schedule(cl)
+    victim = cl.active[0].moe_binding
+    cl.dead_instances.add(victim)
+    escs = sched.evacuate(cl, victim)
+    assert escs
+    for rid, req in cl.active.items():
+        assert cl.page_table.shard_tokens(rid).get(victim, 0) == 0
+        assert victim not in req.kv_binding
+    assert cl.page_table.instance_used_tokens(victim) == 0
+    # tokens conserved
+    totals = {r: sum(cl.page_table.shard_tokens(r).values())
+              for r in cl.active}
+    assert totals == {0: 100, 1: 100, 2: 30}
+    # rebalance then moves MoE bindings off the dead instance
+    sched.rebalance(cl)
+    for req in cl.active.values():
+        assert req.moe_binding != victim
+        assert req.moe_binding in req.kv_binding
+
+
+def test_evacuate_infeasible_leaves_table_untouched():
+    """A drain that cannot fit raises BEFORE any page-table mutation — a
+    partial evacuation would leave tables pointing at frames whose KV never
+    physically moved."""
+    cl = mk_cluster(I=2, W=2, cap=128, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100_000,),
+                                                    degrees=(1, 2)))
+    # fill BOTH instances so instance 0's KV has nowhere to go
+    cl.enqueue(Request(rid=0, prompt_len=100, max_new_tokens=4))
+    cl.enqueue(Request(rid=1, prompt_len=100, max_new_tokens=4))
+    sched.schedule(cl)
+    before = {r: cl.page_table.shard_tokens(r) for r in cl.active}
+    frames_before = cl.page_table.total_free_frames()
+    cl.dead_instances.add(0)
+    with pytest.raises(MemoryError):
+        sched.evacuate(cl, 0)
+    assert {r: cl.page_table.shard_tokens(r) for r in cl.active} == before
+    assert cl.page_table.total_free_frames() == frames_before
+    for req in cl.active.values():
+        assert sorted(req.kv_binding) == sorted(set(req.kv_binding))
+
+
+def test_latency_model_counts_whole_stack():
+    """kv_reshard_time charges EVERY attention layer (block_pattern is one
+    repeating block — regression for an nb-fold undercount)."""
+    from repro.configs import CONFIGS
+    from repro.serving.latency_model import LatencyModel
+    cfg = CONFIGS["tinyllama-1.1b"]
+    lm = LatencyModel(cfg)
+    assert lm.num_attn_layers == cfg.num_layers      # uniform decoder stack
+
+
+# --------------------------------------------------------------------------- #
+# waterfill sanity for the escalation planner
+# --------------------------------------------------------------------------- #
+def test_waterfill_respects_caps_for_moves():
+    loads = np.array([50.0, 10.0, 0.0])
+    split = waterfill(loads, 60, capacities=np.array([5.0, 40.0, 40.0]))
+    assert split.sum() == 60
+    assert (split <= np.array([5, 40, 40])).all()
+
+
+# --------------------------------------------------------------------------- #
+# simulator: escalation cost is charged
+# --------------------------------------------------------------------------- #
+def test_simulator_charges_escalation():
+    from repro.configs import get_config
+    from repro.serving.latency_model import LatencyModel
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import TraceRequest, Workload
+
+    cfg = get_config("deepseek-v3")
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(3000, 6000), degrees=(1, 2, 4)),
+        kv_reserve=64)
+    sim = ClusterSimulator(cfg, sched, num_instances=8, instances_per_node=8,
+                           kv_capacity_tokens=16_384, page_size=64)
+    # decodes deliberately cross the 3000-token bucket edge mid-generation
+    wl = Workload("edge-crossing", [
+        TraceRequest(r, 0.01 * r, 2_800, 600) for r in range(6)])
+    res = sim.run(wl, horizon=120.0)
+    assert res.escalations > 0
+    assert res.escalated_tokens > 0
+    assert res.escalated_pages > 0
+    assert res.reshard_time > 0
+    # the cost model is monotone in tokens moved
+    lm = LatencyModel(cfg)
+    assert lm.kv_reshard_time(0) == 0.0
+    assert lm.kv_reshard_time(10_000) > lm.kv_reshard_time(100) > 0
