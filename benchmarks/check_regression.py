@@ -1,0 +1,125 @@
+"""Benchmark regression gate: smoke-run JSON vs committed baselines.
+
+CI runs the smoke benchmarks (``decode_step.py --smoke`` /
+``escalation.py --smoke``) and then this script, which compares the p50 of
+each gated metric against the committed baseline under
+``benchmarks/baselines/`` and FAILS (exit 1) when any metric regressed by
+more than the tolerance (default 25%, ``--tol`` / ``$BENCH_REGRESSION_TOL``).
+
+Updating a baseline is an EXPLICIT act: run with ``--update`` locally and
+commit the refreshed ``benchmarks/baselines/*.json`` — the gate never
+rewrites baselines on its own, so a perf regression cannot silently ratchet
+the baseline upward.
+
+  PYTHONPATH=src python benchmarks/check_regression.py \\
+      [--decode BENCH_decode_step.json] [--escalation BENCH_escalation.json] \\
+      [--tol 0.25] [--update]
+
+Gated metrics (host-overhead-dominated p50s, the most machine-stable of the
+smoke numbers — full-step / device-completion times are deliberately NOT
+gated: they are compute-dominated and too noisy on shared runners):
+  decode_step:  steady_state.lower_us.p50, steady_state.tables_us.p50
+  escalation:   dispatch.p50_us per pages_moved cell
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BASE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baselines")
+DEFAULTS = {
+    "decode": ("BENCH_decode_step.json", "BENCH_decode_step.smoke.json"),
+    "escalation": ("BENCH_escalation.json", "BENCH_escalation.smoke.json"),
+}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def decode_metrics(rep: dict) -> dict:
+    ss = rep.get("steady_state", {})
+    out = {}
+    for k in ("lower_us", "tables_us"):
+        if k in ss and ss[k].get("n"):
+            out[f"steady.{k}.p50"] = float(ss[k]["p50_us"])
+    return out
+
+
+def escalation_metrics(rep: dict) -> dict:
+    return {f"pages{c['pages_moved']}.dispatch.p50":
+            float(c["dispatch"]["p50_us"]) for c in rep.get("cells", [])}
+
+
+def compare(name: str, cur: dict, base: dict, tol: float) -> list[str]:
+    failures = []
+    for k, b in sorted(base.items()):
+        c = cur.get(k)
+        if c is None:
+            failures.append(f"{name}:{k}: metric missing from current run")
+            continue
+        ratio = c / b if b > 0 else float("inf")
+        verdict = "FAIL" if ratio > 1.0 + tol else "ok"
+        print(f"  {name}:{k:30s} base={b:10.1f}us cur={c:10.1f}us "
+              f"ratio={ratio:5.2f}  {verdict}")
+        if verdict == "FAIL":
+            failures.append(
+                f"{name}:{k}: {c:.1f}us vs baseline {b:.1f}us "
+                f"(+{(ratio - 1) * 100:.0f}% > {tol * 100:.0f}%)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode", default=DEFAULTS["decode"][0])
+    ap.add_argument("--escalation", default=DEFAULTS["escalation"][0])
+    ap.add_argument("--tol", type=float, default=float(
+        os.environ.get("BENCH_REGRESSION_TOL", "0.25")))
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current smoke JSONs over the committed "
+                         "baselines (then commit them explicitly)")
+    args = ap.parse_args()
+
+    if args.update:
+        os.makedirs(BASE_DIR, exist_ok=True)
+        for key, (cur_path, base_name) in DEFAULTS.items():
+            cur = getattr(args, key)
+            shutil.copy(cur, os.path.join(BASE_DIR, base_name))
+            print(f"baseline updated: {os.path.join(BASE_DIR, base_name)}")
+        return 0
+
+    failures = []
+    for key, extract in (("decode", decode_metrics),
+                         ("escalation", escalation_metrics)):
+        cur_path = getattr(args, key)
+        base_path = os.path.join(BASE_DIR, DEFAULTS[key][1])
+        if not os.path.exists(base_path):
+            print(f"{key}: no committed baseline at {base_path} — skipping")
+            continue
+        cur, base = _load(cur_path), _load(base_path)
+        if not cur.get("smoke", False) or not base.get("smoke", False):
+            print(f"{key}: gate compares SMOKE runs only "
+                  f"(cur smoke={cur.get('smoke')}, "
+                  f"base smoke={base.get('smoke')})")
+            return 2
+        failures += compare(key, extract(cur), extract(base), args.tol)
+
+    if failures:
+        print("\nbenchmark regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        print("\n(if this slowdown is intended, refresh the baseline with "
+              "`python benchmarks/check_regression.py --update` and commit "
+              "benchmarks/baselines/ explicitly)")
+        return 1
+    print("\nbenchmark regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

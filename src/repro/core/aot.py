@@ -77,9 +77,20 @@ class AOTGraphEngine:
                 or self.stats.donation_checks < self.WARMUP_CHECKS)
 
     # ---------------- bucket resolution (Alg. 2 l.19) ----------------
-    def quantise(self, M: int, S: int, MB: int, W: int) -> tuple:
+    def quantise(self, M: int, S: int, MB: int, W: int,
+                 R: int | None = None) -> tuple:
+        """Bucket key.  ``R`` (rotation rounds actually used, from
+        ``RoutingTables.R``) is quantised onto a pow2 ladder capped at the
+        full ring W-1: a step whose bindings stay within a few ring
+        positions compiles with that many ppermute rounds instead of the
+        whole cluster ring (W < I multi-node topologies keep the ring
+        cluster-wide, so this is what bounds the collectives per step)."""
         from .routing import _quantize_dim
-        return (M, S, _quantize_dim(MB), W)
+        key = (M, S, _quantize_dim(MB), W)
+        if R is None:
+            return key
+        rq = 0 if S == 0 else min(_round_pow2(max(R, 1)), W - 1)
+        return key + (rq,)
 
     # ---------------- offline capture (Alg. 2 l.7-17) ----------------
     def capture(self, keys) -> None:
@@ -101,8 +112,11 @@ class AOTGraphEngine:
         return compiled
 
     # ---------------- online replay (Alg. 2 l.19-24) ----------------
-    def lookup(self, M: int, S: int, MB: int, W: int):
-        return self.lookup_key(self.quantise(M, S, MB, W))
+    def lookup(self, M: int, S: int, MB: int, W: int, R: int | None = None):
+        """Quantise-and-replay.  Pass ``R`` (``RoutingTables.R``) when the
+        step builder keys on rounds used — mixing keyed and unkeyed lookups
+        against one builder would fragment the cache."""
+        return self.lookup_key(self.quantise(M, S, MB, W, R))
 
     def lookup_key(self, key: tuple):
         """Replay lookup for an already-quantised bucket key (the hot path

@@ -2,9 +2,16 @@
 
 NVSHMEM-style direct puts don't exist on TPU; the native equivalent of
 "sparse transfers steered by an a-priori routing table" is a short sequence
-of *intra-node ring rotations* (`lax.ppermute` with node-local cyclic pairs)
-carrying small bucketed payloads: round d moves a [S_hat, ...] buffer from
-every instance to the instance d steps ahead in its node ring.  Short
+of *ring rotations* (`lax.ppermute` with window-local cyclic pairs)
+carrying small bucketed payloads.  The rotation window is the whole cluster
+(``ClusterState.window``): node boundaries only change the LINK CLASS a
+rotation traverses, so KV bindings may span nodes (W < I topologies).
+
+Rounds follow a ZIG-ZAG schedule — round r carries delta +1, -1, +2, -2, …
+(``ring_delta``) — so a receiver |o| ring positions away is reached within
+2|o| rounds.  A placement whose bindings stay node-local therefore compiles
+with at most 2(W_node - 1) rotation rounds, never the cluster diameter;
+``RoutingTables.R`` records the highest round a step actually uses.  Short
 requests never enter a send buffer; a step whose bucket has S_hat == 0
 compiles with NO collectives at all.
 
@@ -18,6 +25,23 @@ import jax
 import jax.numpy as jnp
 
 
+def ring_delta(round_: int):
+    """Zig-zag schedule: rounds 1, 2, 3, 4, … carry deltas +1, -1, +2, -2, …
+    (round 0 = local, delta 0).  Works elementwise on jnp arrays."""
+    return (round_ + 1) // 2 * (2 * (round_ % 2) - 1)
+
+
+def ring_round(offset: int, size: int) -> int:
+    """Inverse of ``ring_delta`` within a ``size`` ring: the rotation round
+    whose delta is congruent to ``offset`` (mod size).  Bijective over
+    offsets 1..size-1 -> rounds 1..size-1; offset 0 -> round 0."""
+    o = offset % size
+    if o == 0:
+        return 0
+    back = size - o
+    return 2 * o - 1 if o <= back else 2 * back
+
+
 def node_rotation_pairs(axis_size: int, node: int, delta: int) -> list:
     """Cyclic rotation by ``delta`` within each ``node``-sized segment."""
     return [(a, (a // node) * node + ((a % node) + delta) % node)
@@ -26,17 +50,19 @@ def node_rotation_pairs(axis_size: int, node: int, delta: int) -> list:
 
 def route_rounds(payload_fn, send_idx, num_rounds: int, *, axis: str,
                  axis_size: int, node: int, reverse: bool = False):
-    """Run the (W-1) rotation rounds of the routing backend.
+    """Run the rotation rounds of the routing backend.
 
     payload_fn(d, idx) -> the [S, ...] buffer this instance emits in round d
       (idx = send_idx[d-1], entries -1 are padding and must produce zeros).
     Returns list of received buffers, one per round (round d's buffer came
-    from the instance d steps behind / ahead if ``reverse``).
+    from the instance ``ring_delta(d)`` steps behind / ahead if ``reverse``).
     """
     recvs = []
     for d in range(1, num_rounds + 1):
         buf = payload_fn(d, send_idx[d - 1])
-        delta = -d if reverse else d
+        delta = int(ring_delta(d))
+        if reverse:
+            delta = -delta
         pairs = node_rotation_pairs(axis_size, node, delta)
         recvs.append(jax.lax.ppermute(buf, axis, pairs))
     return recvs

@@ -6,7 +6,8 @@ which instances are simply more shards):
 
   Phase 1  Projection & Q-Routing — each MoE binding computes q for its M_hat
            local slots and emits cross-instance rows via the routing backend
-           (intra-node ring rotations, core/comm.py).
+           (zig-zag cluster-ring rotations, core/comm.py; node boundaries
+           are a link class, not a reachability wall).
   Phase 2  Paged attention — every instance runs the paged-decode kernel over
            its N_hat work rows against its local KV pool (LSE out).
   Phase 3  Res-Routing — partial (out, lse) rows return via reverse rotations.
@@ -51,7 +52,7 @@ class DecodeDims:
     S: int                 # cross-send rows / rotation round
     N: int                 # attention work rows / instance
     MB: int                # page blocks / work row
-    W: int                 # instances / node (rotation window)
+    W: int                 # rotation window (cluster ring, ClusterState.window)
     num_frames: int        # KV pool frames / instance
     page: int = 64
     data: str = "data"     # instance mesh axis
@@ -416,7 +417,8 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
         node0 = (me // W) * W
         recv_q = []
         for d in range(1, R + 1):
-            src = node0 + (me - node0 - d) % W                     # sender of round d
+            # sender of zig-zag round d within the rotation window
+            src = node0 + (me - node0 - comm.ring_delta(d)) % W
             recv_q.append(comm.gather_rows(gathered[src],
                                            tbl["q_recv_slot"][0, d - 1]))
     elif R > 0:
@@ -468,7 +470,7 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
         me = jax.lax.axis_index(dims.data)
         node0 = (me // W) * W
         d_mat = tbl["merge_round"][0]                              # [M, W]
-        owner = node0 + (me - node0 + d_mat) % W
+        owner = node0 + (me - node0 + comm.ring_delta(d_mat)) % W
         row = tbl["merge_peer_row"][0]                             # [M, W]
         mask = row >= 0
         parts = g_out[owner, jnp.maximum(row, 0)].transpose(1, 0, 2, 3)

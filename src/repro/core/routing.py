@@ -2,16 +2,20 @@
 
 The control plane lowers each iteration's placement into compact int32
 tensors that fully drive the data plane — Q-Route (which slots each MoE
-binding sends in each intra-node rotation round), work lists (which rows each
+binding sends in each ring rotation round), work lists (which rows each
 instance computes attention for, over which local frames), Res-Route (which
 partial rows return in each reverse round) and merge tables (how each MoE
 binding reassembles its slots' partials).  All shapes are AOT-bucketed
 (M_hat slots, S_hat send rows/round, N_hat work rows, MB page blocks, W
-window = instances per node), so one pre-compiled executable per bucket can
-replay any placement (CUDA-Graph-analogue; DESIGN.md §2).
+window = ``ClusterState.window``, the cluster-wide rotation ring), so one
+pre-compiled executable per bucket can replay any placement
+(CUDA-Graph-analogue; DESIGN.md §2).  A round whose sender and receiver sit
+on different nodes simply traverses the inter-node link class — bindings
+may span nodes (W < I topologies); ``RoutingTables.R`` records the highest
+round actually used so the AOT engine compiles only that many rotations.
 
 Send-buffer coordination: in round delta, instance j receives ONLY from
-instance (j - delta) within its node ring, so sender list position p maps
+instance (j - delta) in the cluster ring, so sender list position p maps
 deterministically to receiver buffer slot p — no handshake needed (the
 paper's "a-priori-known topology" observation, §5.3).
 """
@@ -22,6 +26,7 @@ from dataclasses import dataclass, fields
 import numpy as np
 
 from .bucketing import ShapeBuckets
+from .comm import ring_round
 from .page_table import KVSpillError
 from .state import ClusterState, IterationPlan
 
@@ -171,9 +176,12 @@ def lower_plan(cluster: ClusterState, plan: IterationPlan,
     the only python-level iteration is the O(requests) collection pass over
     the host dicts (page table, slot map).
     """
-    buckets = buckets or ShapeBuckets(window=cluster.instances_per_node)
+    buckets = buckets or ShapeBuckets(window=cluster.window)
     I = cluster.num_instances
-    W = cluster.instances_per_node
+    # rotation window: the whole cluster is ONE ring (round d of sender m
+    # reaches (m + d) % I), so a KV binding may span nodes — the node width
+    # only decides which LINK CLASS a round traverses (latency model)
+    W = cluster.window
     page = cluster.page_table.page_size
     pt = cluster.page_table
     act = cluster.active
@@ -223,9 +231,11 @@ def lower_plan(cluster: ClusterState, plan: IterationPlan,
         if append_tokens:
             ap_f[idx], ap_o[idx] = pt.append_token(rid, i)
         shards = pt.shard_tokens(rid)
-        # ring round per shard; distinct shards on one node get distinct
-        # rounds, so the (round, shard) sort equals the round-stable sort
-        for d, s in sorted(((s - i) % W, s) for s in req.kv_binding):
+        # zig-zag ring round per shard (comm.ring_round is bijective over
+        # the window, so distinct shards get distinct rounds and the
+        # (round, shard) sort equals the round-stable sort); node-local
+        # shards always land in rounds <= 2*(node_width-1)
+        for d, s in sorted((ring_round(s - i, W), s) for s in req.kv_binding):
             p_m.append(i)
             p_b.append(b)
             p_s.append(s)
@@ -238,8 +248,10 @@ def lower_plan(cluster: ClusterState, plan: IterationPlan,
     p_s = np.asarray(p_s, np.int64)
     p_d = np.asarray(p_d, np.int64)
     p_tok = np.asarray(p_t, np.int64)
-    # every CP binding must stay within the sender's node ring
-    assert (p_s // W == p_m // W).all(), "KV binding crosses a node boundary"
+    # a binding must stay within its rotation-window SEGMENT: the ring
+    # rotations (`node_rotation_pairs(node=W)`) never cross segments, so an
+    # out-of-window shard would silently read another sender's rows
+    assert (p_s // W == p_m // W).all(), "KV binding leaves its rotation window"
 
     # --- observed shape -> bucket -----------------------------------------
     max_batch = cluster.max_slots()
@@ -368,10 +380,8 @@ def _quantize_dim(x: int, lo: int = 4) -> int:
 
 
 def _round_of(cluster: ClusterState, m: int, s: int) -> int:
-    """Intra-node ring rotation round that moves data from m to s (0 if s==m)."""
-    w = cluster.instances_per_node
-    assert cluster.node_of(m) == cluster.node_of(s), (m, s)
-    return (s - m) % w
+    """Cluster-ring rotation round that moves data from m to s (0 if s==m)."""
+    return ring_round(s - m, cluster.window)
 
 
 def as_device_arrays(tbl: RoutingTables, shardings: dict | None = None):

@@ -146,10 +146,20 @@ class DualBalancedScheduler(BaseScheduler):
                  max_batch_per_instance: int = 256, kv_reserve: int = 0,
                  allow_rebalance: bool = True, has_kv: bool = True,
                  allow_escalation: bool = True,
-                 escalate_headroom: int | None = None):
+                 escalate_headroom: int | None = None,
+                 allow_cross_node: bool = True,
+                 inter_node_penalty: int | None = None):
         super().__init__(max_batch_per_instance)
         self.buckets = buckets
         self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
+        # hierarchical (two-level) placement: a binding prefers its home
+        # node's members and spills across the node boundary only when the
+        # whole home node cannot hold the KV (or a bucket degree exceeds the
+        # node width).  ``inter_node_penalty`` (tokens) is added to remote
+        # members' loads inside every WaterFill so short requests stay
+        # node-local; None derives max(page_size, kv_capacity/8) per cluster.
+        self.allow_cross_node = allow_cross_node
+        self.inter_node_penalty = inter_node_penalty
         # SSM/hybrid archs pin recurrent state to the decode slot, so their
         # MoE binding cannot be reassigned without a state migration
         # (DESIGN.md §6); the engine disables rebalancing for them.
@@ -170,6 +180,21 @@ class DualBalancedScheduler(BaseScheduler):
         if self.escalate_headroom is not None:
             return self.escalate_headroom
         return max(self.kv_reserve, cluster.page_table.page_size)
+
+    def _penalty(self, cluster: ClusterState) -> int:
+        """Inter-node link penalty in WaterFill load units (tokens)."""
+        if self.inter_node_penalty is not None:
+            return self.inter_node_penalty
+        return max(cluster.page_table.page_size,
+                   cluster.kv_capacity_tokens // 8)
+
+    def _remote_members(self, cluster: ClusterState, node: int) -> list:
+        """Cross-node fill candidates, least-loaded first ([] when the
+        binding must stay node-local)."""
+        if not self.allow_cross_node:
+            return []
+        return sorted(cluster.remote_instances(node),
+                      key=lambda s: (cluster.kv_load(s), s))
 
     # Alg. 1, lines 1-5: rebalance MoE bindings of active requests
     def rebalance(self, cluster: ClusterState) -> None:
@@ -260,20 +285,34 @@ class DualBalancedScheduler(BaseScheduler):
                 continue
             members = [s for s in cluster.node_instances(req.node)
                        if s != instance]
+            n_home = len(members)
             moves = []
             if tokens_on > 0:
+                # hierarchical receiver set: home-node members first; when
+                # the home node cannot absorb the evacuated KV, recruit
+                # remote-node receivers (the drain crosses the boundary
+                # rather than failing — last-resort, penalty-priced below)
+                home_cap = sum(head_frames[s] * page for s in members)
+                if home_cap < tokens_on:
+                    for s in self._remote_members(cluster, req.node):
+                        if s == instance or home_cap >= tokens_on:
+                            continue
+                        members.append(s)
+                        home_cap += head_frames[s] * page
                 if not members:
                     raise MemoryError(
                         f"evacuate({instance}): request {rid} has no "
-                        f"surviving node member to hold its KV")
+                        f"surviving member to hold its KV")
                 loads = np.array([cluster.kv_load(s) for s in members],
                                  np.float64)
+                loads[n_home:] += float(self._penalty(cluster))
                 caps = np.array([head_frames[s] * page for s in members],
                                 np.float64)
                 if caps.sum() < tokens_on:
                     raise MemoryError(
                         f"evacuate({instance}): request {rid} needs "
-                        f"{tokens_on} tokens, node headroom {caps.sum():.0f}")
+                        f"{tokens_on} tokens, cluster headroom "
+                        f"{caps.sum():.0f}")
                 split = waterfill(loads, tokens_on, capacities=caps)
                 for s, t in zip(members, split):
                     if t > 0:
@@ -304,25 +343,39 @@ class DualBalancedScheduler(BaseScheduler):
         shards = pt.shard_tokens(req.rid)
         total = sum(shards.values())
         members = cluster.node_instances(req.node)
-        if not members or total == 0:
+        remote = self._remote_members(cluster, req.node)
+        if (not members and not remote) or total == 0:
             return None
         if relieve is not None and shards.get(relieve, 0) == 0:
             return None             # nothing of this request to vacate there
         binding = [s for s in req.kv_binding
                    if s not in cluster.dead_instances]
         m = req.moe_binding
-        k_want = min(self.buckets.cp_degree(total), len(members))
+        k_want = min(self.buckets.cp_degree(total),
+                     len(members) + len(remote))
         need_degree = k_want > len(binding)
         need_headroom = cluster.kv_headroom(m) <= low
         force = relieve is not None
         if not (force or need_degree or need_headroom):
             return None
+        # candidates home-node first: a promotion recruits a remote-node
+        # member only once every home member is already in the binding
+        # (cross-node escalation is the last resort)
         cand = sorted((s for s in members if s not in binding),
                       key=lambda s: (cluster.kv_load(s), s))
+        cand += [s for s in remote if s not in binding]
         k_new = max(k_want, len(binding) + (1 if (need_headroom or force)
                                             else 0))
-        trial = sorted(set(binding) | set(cand[:max(k_new - len(binding), 0)]))
-        moves = self._plan_moves(cluster, req, trial, low, relieve)
+        extra = max(k_new - len(binding), 0)
+        while True:
+            trial = sorted(set(binding) | set(cand[:extra]))
+            moves = self._plan_moves(cluster, req, trial, low, relieve)
+            if moves or extra >= len(cand) or not (force or need_headroom):
+                break
+            # the chosen members lacked headroom: widen the trial (possibly
+            # past the node boundary) before giving up — a spill relief must
+            # exhaust the CLUSTER, not the home node, before the OOM finish
+            extra += 1
         if not moves:
             return None
         if not force and not need_degree:
@@ -360,8 +413,18 @@ class DualBalancedScheduler(BaseScheduler):
             return []
         loads = np.array([cluster.kv_load(s) - c
                           for s, c in zip(binding, cur)], np.float64)
-        caps = np.array([float(c) + cluster.kv_headroom(s)
-                         for s, c in zip(binding, cur)], np.float64)
+        # remote-node members carry the link penalty: WaterFill drains the
+        # home node first and puts only the overflow across the boundary
+        pen = float(self._penalty(cluster))
+        loads += np.array([0.0 if cluster.node_of(s) == req.node else pen
+                           for s in binding])
+        # receiver capacity counts the request's own partial tail-page slack
+        # (move_pages appends into it without a frame alloc): without it the
+        # planner strands cluster capacity and OOMs with free tail tokens on
+        # every shard
+        caps = np.array(
+            [len(pt.shard_frames(req.rid, s)) * page + cluster.kv_headroom(s)
+             for s in binding], np.float64)
         mi = binding.index(req.moe_binding) if req.moe_binding in binding \
             else None
         if mi is not None:
@@ -375,7 +438,8 @@ class DualBalancedScheduler(BaseScheduler):
         if caps.sum() < total and mi is not None:
             # relax the soft low-water reserve on the MoE binding, but keep
             # the hard frame-vacating constraint of a spill relief
-            relaxed = float(cur[mi]) + cluster.kv_headroom(req.moe_binding)
+            relaxed = (len(pt.shard_frames(req.rid, req.moe_binding)) * page
+                       + cluster.kv_headroom(req.moe_binding))
             if relieve == req.moe_binding and cur[mi] > 0:
                 vacate = (int(cur[mi]) - 1) % page + 1
                 relaxed = min(relaxed, float(max(int(cur[mi]) - vacate, 0)))
@@ -400,7 +464,7 @@ class DualBalancedScheduler(BaseScheduler):
                     di += 1
         return moves
 
-    # Alg. 1, lines 6-18
+    # Alg. 1, lines 6-18 (+ hierarchical two-level fill for W < I)
     def place(self, cluster: ClusterState, req: Request, B=None):
         if B is None:
             B = np.bincount([r.moe_binding for r in cluster.active.values()],
@@ -411,26 +475,60 @@ class DualBalancedScheduler(BaseScheduler):
             return None
         n_star = min(nodes, key=lambda n: (sum(B[s] for s in cluster.node_instances(n)), n))
         members = cluster.node_instances(n_star)
-        # CP degree from length buckets (line 8)
+        # CP degree from length buckets (line 8), sized within the home node
         k = min(self.buckets.cp_degree(req.length), len(members))
         # intra-node placement (lines 9-11)
-        m = min(members, key=lambda s: (B[s], s))
         if not self.has_kv:                 # attention-free: batch balance only
+            m = min(members, key=lambda s: (B[s], s))
             return int(m), [m], {m: 0}
+        # the MoE binding takes every appended token's KV: prefer a member
+        # that still has the growth reserve free (another request's spill
+        # may have filled the least-batch one — placing there guarantees a
+        # first-append spill)
+        m_cands = [s for s in members
+                   if cluster.kv_headroom(s) >= self.kv_reserve] or members
+        m = min(m_cands, key=lambda s: (B[s], s))
         others = sorted((s for s in members if s != m),
                         key=lambda s: (cluster.kv_load(s), s))
         binding = [m] + others[: k - 1]
+
         # WaterFill token split (line 12); reserve growth room on the MoE
         # binding SPECIFICALLY — an aggregate check lets WaterFill fill m to
         # its cap, and the very first appended token then needs a frame the
         # shard doesn't have
-        loads = np.array([cluster.kv_load(s) for s in binding], dtype=np.float64)
-        caps = np.array([cluster.kv_headroom(s) for s in binding], dtype=np.float64)
-        caps[0] = max(caps[0] - self.kv_reserve, 0.0)   # binding[0] is m
+        def caps_of(b):
+            caps = np.array([cluster.kv_headroom(s) for s in b], np.float64)
+            caps[0] = max(caps[0] - self.kv_reserve, 0.0)   # b[0] is m
+            return caps
+
+        # hierarchical fill: widen within the home node first, then spill
+        # the binding across the node boundary ONLY when the whole home
+        # node cannot hold the request
+        caps = caps_of(binding)
+        if caps.sum() < req.length and len(binding) < len(members):
+            binding = [m] + others
+            caps = caps_of(binding)
+        n_home = len(binding)
+        if caps.sum() < req.length:
+            short = req.length - caps.sum()
+            for s in self._remote_members(cluster, n_star):
+                if short <= 0:
+                    break
+                binding.append(s)
+                short -= cluster.kv_headroom(s)
+            caps = caps_of(binding)
         if caps.sum() < req.length:
             return None
+        loads = np.array([cluster.kv_load(s) for s in binding], np.float64)
+        # remote members look penalty-tokens fuller: overflow-only crossing
+        loads[n_home:] += float(self._penalty(cluster))
         split_arr = waterfill(loads, req.length, capacities=caps)
-        split = {s: int(t) for s, t in zip(binding, split_arr)}
+        # drop remote members the fill never used — short requests' bindings
+        # stay literally node-local
+        pairs = [(s, int(t)) for i, (s, t) in enumerate(zip(binding, split_arr))
+                 if i < n_home or t > 0]
+        binding = [s for s, _ in pairs]
+        split = dict(pairs)
         # the MoE binding must be able to take appended tokens: ensure it is
         # in the split map even at 0 so the page table tracks it
         split.setdefault(m, 0)

@@ -53,12 +53,24 @@ class Request:
 
 @dataclass
 class ClusterState:
-    """Unified view over instances, requests, and the global page table."""
+    """Unified view over instances, requests, and the global page table.
+
+    Topology model: ``num_instances`` (I) instances partition into nodes of
+    width ``instances_per_node`` (W).  The node boundary is a LINK-COST
+    class, not a routing wall: the data plane's rotation ring spans the
+    whole cluster (``window``), so a request's KV binding may cross nodes —
+    the scheduler just prices inter-node members higher (hierarchical fill)
+    and the latency model charges the slower inter-node link class.
+    """
     num_instances: int
     instances_per_node: int
     kv_capacity_tokens: int          # per-instance KV pool size in tokens
     page_size: int = 64
     kv_stripes: int = 1              # hybrid-KV page striping (core/dcp.py)
+    # data-plane rotation window (0 -> the whole cluster).  Launch shapes
+    # whose collectives cannot cross a pod confine the ring to the pod;
+    # bindings never leave their window segment.
+    routing_window: int = 0
 
     page_table: GlobalPageTable = None
     active: dict = field(default_factory=dict)       # rid -> Request
@@ -72,6 +84,9 @@ class ClusterState:
 
     def __post_init__(self):
         assert self.num_instances % self.instances_per_node == 0
+        if self.routing_window:
+            assert self.num_instances % self.routing_window == 0
+            assert self.routing_window % self.instances_per_node == 0
         self.page_table = GlobalPageTable(
             self.num_instances,
             frames_per_instance=self.kv_capacity_tokens // self.page_size,
@@ -83,13 +98,43 @@ class ClusterState:
     def num_nodes(self) -> int:
         return self.num_instances // self.instances_per_node
 
+    @property
+    def window(self) -> int:
+        """Data-plane rotation window: by default the whole cluster forms
+        ONE ring (zig-zag rounds, ``comm.ring_round``) — node boundaries
+        change the LINK CLASS a round traverses, never its reachability."""
+        return self.routing_window or self.num_instances
+
     def node_of(self, instance: int) -> int:
         return instance // self.instances_per_node
+
+    def same_node(self, a: int, b: int) -> bool:
+        return self.node_of(a) == self.node_of(b)
+
+    def link_class(self, a: int, b: int) -> str:
+        """Link class a round/transfer between two instances traverses."""
+        return "intra" if self.same_node(a, b) else "inter"
 
     def node_instances(self, node: int) -> list[int]:
         w = self.instances_per_node
         return [i for i in range(node * w, (node + 1) * w)
                 if i not in self.dead_instances]
+
+    def alive_instances(self) -> list[int]:
+        return [i for i in range(self.num_instances)
+                if i not in self.dead_instances]
+
+    def remote_instances(self, node: int) -> list[int]:
+        """Alive instances OUTSIDE ``node`` but within its rotation-window
+        segment (candidates for cross-node spill — recruited only when the
+        home node is full; a binding never leaves its window)."""
+        win = self.window
+        seg = (node * self.instances_per_node) // win
+        return [i for i in self.alive_instances()
+                if self.node_of(i) != node and i // win == seg]
+
+    def binding_nodes(self, binding) -> set[int]:
+        return {self.node_of(s) for s in binding}
 
     # ---------------- loads ----------------
     def kv_load(self, instance: int) -> int:

@@ -147,9 +147,13 @@ def plan_decode_cell(cfg: ModelConfig, shape: ShapeCfg, *,
     cap = -(-cap // page) * page
     buckets = derive_buckets(LatencyModel(cfg), max_degree=W)
     is_ssm_family = cfg.family in ("ssm", "hybrid")
+    # the rotation ring is confined to the pod (cross-pod collectives don't
+    # exist on the `data` axis); bindings may cross NODE boundaries within
+    # the pod when a node cannot hold a request
     cluster = ClusterState(num_instances=I, instances_per_node=W,
                            kv_capacity_tokens=cap, page_size=page,
-                           kv_stripes=ps)
+                           kv_stripes=ps,
+                           routing_window=min(I, INSTANCES_PER_POD))
     m_fixed = max(1, -(-gb // I))
     sched = DualBalancedScheduler(buckets=buckets,
                                   allow_rebalance=not is_ssm_family,
@@ -165,12 +169,13 @@ def plan_decode_cell(cfg: ModelConfig, shape: ShapeCfg, *,
         f"(cap={cap} tokens/instance)")
     sb = ShapeBuckets(m_buckets=(m_fixed,) if is_ssm_family
                       else (1, 2, 4, 8, 16, 32, 64, 128, 256),
-                      s_buckets=(0, 1, 2, 4, 8, 16, 32), window=W)
+                      s_buckets=(0, 1, 2, 4, 8, 16, 32),
+                      window=cluster.window)
     tbl = routing.lower_plan(cluster, plan, buckets=sb,
                              append_tokens=cfg.has_attention,
                              next_tokens={r: 1 for r in cluster.active})
     dims = dcp.DecodeDims(M=tbl.M, S=tbl.S, N=tbl.N, MB=tbl.MB, MBT=tbl.MBT,
-                          W=W, num_frames=cap // page + 1, page=page,
+                          W=tbl.W, num_frames=cap // page + 1, page=page,
                           data_size=INSTANCES_PER_POD,
                           tp=tp, rounds_used=tbl.R)
     return cluster, tbl, dims

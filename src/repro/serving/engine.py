@@ -129,14 +129,17 @@ class NanoCPEngine:
             # never appends KV (nothing grows; the re-shard op only covers
             # the decoder-only pool layouts)
             self.scheduler.allow_escalation = False
+        # the data plane's rotation window is the CLUSTER ring (node
+        # boundaries are a link class, not a routing wall) — bindings may
+        # span nodes on W < I topologies
+        ring = self.cluster.window
         if shape_buckets is None and pinned_slots:
             shape_buckets = ShapeBuckets(m_buckets=(max_slots_per_instance,),
-                                         window=instances_per_node)
-        self.shape_buckets = shape_buckets or ShapeBuckets(
-            window=instances_per_node)
+                                         window=ring)
+        self.shape_buckets = shape_buckets or ShapeBuckets(window=ring)
         self.params = params
         self._dims0 = dcp.DecodeDims(
-            M=max_slots_per_instance, S=0, N=1, MB=4, W=instances_per_node,
+            M=max_slots_per_instance, S=0, N=1, MB=4, W=ring,
             num_frames=self.cluster.page_table.frames_per_instance + 1,
             page=page_size, data_size=num_instances, tp=self.tp,
             backend=backend,
@@ -230,13 +233,16 @@ class NanoCPEngine:
 
     # ------------------------------------------------------------------ #
     def _build_step(self, key):
-        M, S, MB, W = key
+        M, S, MB, W, R = key
         N = M + (W - 1) * S
+        # rounds_used=R bounds the compiled ppermute rounds: node-local
+        # placements on a W < I topology never pay the full cluster ring
         d = dcp.DecodeDims(M=M, S=S, N=N, MB=MB, W=W,
                            num_frames=self._dims0.num_frames,
                            page=self._dims0.page,
                            data_size=self.cluster.num_instances, tp=self.tp,
-                           backend=self.backend, eos=self._dims0.eos)
+                           backend=self.backend, eos=self._dims0.eos,
+                           rounds_used=R)
         I = self.cluster.num_instances
         tbl_spec = {
             "slot_rid": (I, M), "slot_token": (I, M), "slot_pos": (I, M),
@@ -597,7 +603,7 @@ class NanoCPEngine:
                 spill_done += self._handle_spill(err, now)
                 if not self.cluster.active:
                     return prefill_done + spill_done + self._harvest(now)
-        key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W)
+        key = self.aot.quantise(tbl.M, tbl.S, tbl.MB, tbl.W, tbl.R)
         # lower_plan already quantised MB on the same (idempotent) ladder;
         # a mismatch would mean the arena buffers no longer match the AOT
         # executable's expected shape

@@ -23,11 +23,16 @@ from ..configs.base import ModelConfig
 class HardwareModel:
     peak_flops: float = 197e12        # bf16 / chip
     hbm_bw: float = 819e9             # B/s / chip
-    link_bw: float = 50e9             # B/s / ICI link
+    link_bw: float = 50e9             # B/s / ICI link (intra-node)
     chips_per_instance: int = 16      # `model` axis within a DP instance
     hop_latency: float = 2e-6         # per collective hop (alpha)
     per_row_overhead: float = 1.5e-6  # decode attention fixed cost per row
     kernel_base: float = 4e-6         # kernel launch / fusion base cost
+    # inter-node link class (DCN/IB): crossing a node boundary pays a far
+    # thinner pipe and a fatter alpha — the reason the scheduler treats the
+    # boundary as a cost and crosses it only as a last resort
+    inter_link_bw: float = 12.5e9     # B/s / link, cross-node
+    inter_hop_latency: float = 10e-6  # per cross-node hop (alpha)
 
 
 @dataclass
@@ -100,21 +105,50 @@ class LatencyModel:
         its own model-shard slice over its own ICI links in parallel."""
         return self.hw.link_bw * self.hw.chips_per_instance
 
-    def a2a_time(self, batch: float) -> float:
+    @property
+    def inst_link_bw_inter(self) -> float:
+        """Cross-node instance-to-instance bandwidth (inter link class)."""
+        return self.hw.inter_link_bw * self.hw.chips_per_instance
+
+    def _link(self, inter: bool) -> tuple[float, float]:
+        """(bandwidth, hop alpha) of a link class."""
+        if inter:
+            return self.inst_link_bw_inter, self.hw.inter_hop_latency
+        return self.inst_link_bw, self.hw.hop_latency
+
+    def a2a_link_times(self, batch: float,
+                       inter_frac: float = 0.0) -> tuple[float, float]:
+        """One all-to-all phase split by link class: (intra_s, inter_s) for
+        ``batch`` tokens with ``inter_frac`` of the expert traffic crossing
+        node boundaries (EP spanning nodes).  The classes overlap, so the
+        phase time is their max plus the alphas."""
+        if not self.cfg.is_moe or batch <= 0:
+            return 0.0, 0.0
+        bytes_ = batch * self.cfg.num_experts_per_tok * self.cfg.d_model * 2
+        t_intra = bytes_ * (1.0 - inter_frac) / self.inst_link_bw
+        t_inter = bytes_ * inter_frac / self.inst_link_bw_inter
+        return t_intra, t_inter
+
+    def a2a_time(self, batch: float, inter_frac: float = 0.0) -> float:
         """One all-to-all phase (dispatch OR combine) for ``batch`` tokens on
-        the sending instance (Fig. 3b shape)."""
+        the sending instance (Fig. 3b shape).  ``inter_frac`` is the share
+        of expert traffic that crosses a node boundary."""
         if not self.cfg.is_moe or batch <= 0:
             return 0.0
-        bytes_ = batch * self.cfg.num_experts_per_tok * self.cfg.d_model * 2
-        return self.hw.hop_latency * 2 + bytes_ / self.inst_link_bw
+        t_intra, t_inter = self.a2a_link_times(batch, inter_frac)
+        alpha = self.hw.hop_latency * 2
+        if inter_frac > 0:
+            alpha += self.hw.inter_hop_latency * 2
+        return alpha + max(t_intra, t_inter)
 
-    def cp_route_time(self, rounds: int, rows: float) -> float:
+    def cp_route_time(self, rounds: int, rows: float,
+                      inter: bool = False) -> float:
         """Q-routing or Res-routing: ``rounds`` rotation hops carrying
-        ``rows`` bucketed rows each."""
+        ``rows`` bucketed rows each, over the given link class."""
         if rounds <= 0 or rows <= 0:
             return 0.0
-        return rounds * (self.hw.hop_latency
-                         + rows * self.q_row_bytes / self.inst_link_bw)
+        bw, alpha = self._link(inter)
+        return rounds * (alpha + rows * self.q_row_bytes / bw)
 
     def dense_cp_route_time(self, group: int, batch: float) -> float:
         """Helix/NCCL-style uniform CP: all-gather the full batch to the
@@ -164,16 +198,20 @@ class LatencyModel:
                         if k["mixer"] == "attn")
         return self.cfg.num_blocks * per_block
 
-    def kv_reshard_time(self, tokens_moved: float) -> float:
+    def kv_reshard_time(self, tokens_moved: float,
+                        inter: bool = False) -> float:
         """Live KV re-shard (mid-decode CP escalation): gather + scatter the
         moved tokens' KV for EVERY attention layer across instance links —
         one hop out of the donor, one into the receiver — plus the HBM sweep
-        to read and rewrite the pages on both ends."""
+        to read and rewrite the pages on both ends.  ``inter`` charges the
+        cross-node link class for moves whose donor and receiver sit on
+        different nodes."""
         if tokens_moved <= 0:
             return 0.0
+        bw, alpha = self._link(inter)
         bytes_ = tokens_moved * self.kv_bytes_per_token * self.num_attn_layers
-        return (2 * self.hw.hop_latency + self.hw.kernel_base
-                + bytes_ / self.inst_link_bw
+        return (2 * alpha + self.hw.kernel_base
+                + bytes_ / bw
                 + 2 * bytes_ / (self.hw.hbm_bw * self.hw.chips_per_instance))
 
     # ---------------- composite: DCP attention for one request ----------

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.bucketing import ShapeBuckets
+from ..core.comm import ring_round
 from ..core.page_table import KVSpillError
 from ..core.scheduler import BaseScheduler, UniformCPScheduler
 from ..core.state import ClusterState, Request
@@ -62,6 +63,14 @@ class SimResult:
     escalated_pages: int = 0                               # dest frames written
     reshard_time: float = 0.0                              # total seconds charged
     oom_finishes: int = 0                                  # spills nobody could absorb
+    # cross-node (inter link class) accounting: why node boundaries are a
+    # COST — zero for workloads whose bindings stay node-local
+    cross_node_bytes: int = 0                              # bytes over inter links
+    cross_reshard_time: float = 0.0                        # re-shard s on inter links
+    cross_cp_time: float = 0.0                             # Q/Res routing s, inter
+    cross_moe_time: float = 0.0                            # a2a s on inter links
+    cross_escalated_tokens: int = 0                        # KV tokens across nodes
+    cross_bindings: int = 0                                # request-iters spanning >=2 nodes
 
 
 class ClusterSimulator:
@@ -86,35 +95,61 @@ class ClusterSimulator:
         self._uniform_cp = isinstance(scheduler, UniformCPScheduler)
 
     # ------------------------------------------------------------------ #
-    def _iteration_time(self, plan) -> tuple[float, PhaseBreakdown,
-                                             np.ndarray, np.ndarray]:
+    def _iteration_time(self, plan, res: SimResult | None = None
+                        ) -> tuple[float, PhaseBreakdown,
+                                   np.ndarray, np.ndarray]:
         lm, cl = self.latency, self.cluster
         I = cl.num_instances
         W = cl.instances_per_node
+        ring = cl.window
         batch = plan.batch_sizes().astype(float)
         rows = np.array([len(p.work) for p in plan.instances], float)
         kv = plan.kv_tokens().astype(float)
 
-        # per-instance cross-CP traffic (rounds used x bucketed rows),
-        # counted in ONE pass over the work lists
+        # per-instance cross-CP traffic (rounds used x bucketed rows) SPLIT
+        # BY LINK CLASS, counted in ONE pass over the work lists: a row
+        # whose shard owner sits on another node rides the inter links.
+        # Only rounds a step actually uses execute (zig-zag schedule,
+        # RoutingTables.R), so the charge counts DISTINCT rounds used.
         sends = np.zeros(I)
+        sends_x = np.zeros(I)                 # inter-node share of `sends`
+        rounds_i, rounds_x = set(), set()
         for p_ in plan.instances:
             for (_rid, m, _toks) in p_.work:
                 if m != p_.instance:
                     sends[m] += 1
+                    r = ring_round(p_.instance - m, ring)
+                    if cl.same_node(m, p_.instance):
+                        rounds_i.add(r)
+                    else:
+                        sends_x[m] += 1
+                        rounds_x.add(r)
+        r_intra = max(len(rounds_i), 1)
+        r_inter = max(len(rounds_x), 1)
         attn_t = np.zeros(I)
         cp_t = np.zeros(I)
+        cp_x_t = np.zeros(I)
         for s in range(I):
             if self._uniform_cp:
                 group = self.scheduler.cp
                 cp_t[s] = 2 * lm.dense_cp_route_time(group, batch[s])
             elif sends[s] > 0:
-                sh = self.buckets.round_s(
-                    max(1, int(np.ceil(sends[s] / max(W - 1, 1)))))
-                cp_t[s] = 2 * lm.cp_route_time(W - 1, sh)
+                loc = sends[s] - sends_x[s]
+                if loc > 0:
+                    sh = self.buckets.round_s(
+                        max(1, int(np.ceil(loc / r_intra))))
+                    cp_t[s] = 2 * lm.cp_route_time(r_intra, sh)
+                if sends_x[s] > 0:
+                    sx = self.buckets.round_s(
+                        max(1, int(np.ceil(sends_x[s] / r_inter))))
+                    cp_x_t[s] = 2 * lm.cp_route_time(r_inter, sx, inter=True)
+                    cp_t[s] += cp_x_t[s]
             attn_t[s] = lm.qkv_time(batch[s]) + lm.attention_time(kv[s], rows[s])
 
-        a2a_t = np.array([lm.a2a_time(b) for b in batch])
+        # EP spans the cluster: (I - W)/I of each token's expert traffic
+        # crosses node boundaries on a multi-node topology
+        inter_frac = (I - W) / I if cl.num_nodes > 1 else 0.0
+        a2a_t = np.array([lm.a2a_time(b, inter_frac) for b in batch])
         # balanced-expert assumption: each instance's experts see the global
         # token share (expert-level imbalance is orthogonal, §2.2)
         tokens_per_inst = batch.sum() * max(self.cfg.num_experts_per_tok, 1) / I
@@ -129,6 +164,17 @@ class ClusterSimulator:
         )
         n_layers = self.cfg.num_layers
         t_iter = n_layers * ph.layer_total + self.sched_overhead / self.multi_step
+        if res is not None:
+            res.cross_cp_time += n_layers * float(cp_x_t.max(initial=0.0))
+            res.cross_node_bytes += int(
+                n_layers * 2 * sends_x.sum() * lm.q_row_bytes)
+            if inter_frac > 0 and self.cfg.is_moe:
+                a2a_x = max(lm.a2a_link_times(b, inter_frac)[1] for b in batch)
+                res.cross_moe_time += n_layers * 2 * float(a2a_x)
+                res.cross_node_bytes += int(
+                    n_layers * 2 * batch.sum()
+                    * self.cfg.num_experts_per_tok * self.cfg.d_model * 2
+                    * inter_frac)
         return t_iter, ph, attn_t + cp_t, 2 * a2a_t
 
     # ------------------------------------------------------------------ #
@@ -136,13 +182,23 @@ class ClusterSimulator:
                         now: float) -> float:
         if not escalations:
             return now
+        cl, lm = self.cluster, self.latency
         moved = sum(e.tokens_moved for e in escalations)
-        t_resh = self.latency.kv_reshard_time(moved)
-        res.reshard_time += t_resh
+        # split the moved tokens by the link class each move traverses:
+        # cross-node re-shards ride the thin inter links
+        inter = sum(n for e in escalations for (s, d, n) in e.moves
+                    if not cl.same_node(s, d))
+        t_intra = lm.kv_reshard_time(moved - inter)
+        t_inter = lm.kv_reshard_time(inter, inter=True)
+        res.reshard_time += t_intra + t_inter
+        res.cross_reshard_time += t_inter
+        res.cross_escalated_tokens += inter
+        res.cross_node_bytes += int(
+            inter * lm.kv_bytes_per_token * lm.num_attn_layers)
         res.escalations += len(escalations)
         res.escalated_tokens += moved
         res.escalated_pages += sum(e.pages_moved for e in escalations)
-        return now + t_resh
+        return now + t_intra + t_inter
 
     def _relieve_or_oom(self, res: SimResult, cl: ClusterState, r: Request,
                         err: KVSpillError, now: float) -> float:
@@ -200,7 +256,7 @@ class ClusterSimulator:
                     continue
                 break
 
-            t_iter, ph, attn_lat, a2a_lat = self._iteration_time(plan)
+            t_iter, ph, attn_lat, a2a_lat = self._iteration_time(plan, res)
             # head-of-line bookkeeping
             res.free_mem_series.append(cl.page_table.total_free_frames())
             if cl.waiting:
@@ -217,6 +273,8 @@ class ClusterSimulator:
             for r in cl.active.values():
                 d = r.cp_degree
                 res.cp_degree_hist[d] = res.cp_degree_hist.get(d, 0) + 1
+                if len(cl.binding_nodes(r.kv_binding)) > 1:
+                    res.cross_bindings += 1
 
             # run ``multi_step`` decode iterations under this plan.  Each
             # decoded token's KV is APPENDED to the MoE-binding shard — the

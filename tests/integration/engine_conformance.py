@@ -12,8 +12,10 @@ decode replay -> async harvest) on 8 fake host devices and asserts:
   * serve-state donation held: pointers audited, at most one initial
     copy-on-donate per state leaf (the first dispatch commits host state).
 
-Usage: engine_conformance.py ARCH I TP [kvK]  (kvK overrides num_kv_heads,
-e.g. ``kv4`` — used for the tp < num_kv_heads head-grouping shapes).
+Usage: engine_conformance.py ARCH I TP [kvK] [wN]  (kvK overrides
+num_kv_heads, e.g. ``kv4`` — used for the tp < num_kv_heads head-grouping
+shapes; wN sets instances_per_node < I for multi-node W < I topologies —
+the cluster ring spans nodes, short bindings stay node-local).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -37,7 +39,8 @@ def _f32(params):
         params)
 
 
-def build_engine(arch: str, I: int, TP: int, kv: int | None):
+def build_engine(arch: str, I: int, TP: int, kv: int | None,
+                 w: int | None = None):
     over = {"vocab_size": VOCAB}
     if CONFIGS[arch].is_moe:
         over["capacity_factor"] = 8.0     # no dropped tokens in the tiny cfg
@@ -48,7 +51,7 @@ def build_engine(arch: str, I: int, TP: int, kv: int | None):
     mesh = compat.make_mesh((I, TP), ("data", "model"))
     degrees = (1, 2, 3) if I >= 3 else (1, 2, 2)
     eng = NanoCPEngine(
-        cfg, params, mesh, num_instances=I, instances_per_node=I,
+        cfg, params, mesh, num_instances=I, instances_per_node=w or I,
         kv_capacity_tokens=4096, page_size=16,
         buckets=CPBuckets(edges=(64, 160), degrees=degrees),
         shape_buckets=None if (cfg.family in ("ssm", "hybrid")
@@ -59,12 +62,13 @@ def build_engine(arch: str, I: int, TP: int, kv: int | None):
     return cfg, params, eng
 
 
-def run_case(arch: str, I: int, TP: int, kv: int | None = None) -> None:
-    cfg, params, eng = build_engine(arch, I, TP, kv)
+def run_case(arch: str, I: int, TP: int, kv: int | None = None,
+             w: int | None = None) -> None:
+    cfg, params, eng = build_engine(arch, I, TP, kv, w)
     from repro.core.dcp import attn_tp_geometry, kv_group_size
     geom = (attn_tp_geometry(cfg, TP), kv_group_size(cfg, TP))
-    print(f"{arch} I={I} TP={TP} kv={cfg.num_kv_heads} "
-          f"(hp,khs,ps)={geom[0]} kg={geom[1]}")
+    print(f"{arch} I={I} TP={TP} W={eng.cluster.instances_per_node} "
+          f"kv={cfg.num_kv_heads} (hp,khs,ps)={geom[0]} kg={geom[1]}")
 
     rng = np.random.default_rng(0)
     if cfg.is_encoder_decoder:
@@ -137,8 +141,12 @@ def run_case(arch: str, I: int, TP: int, kv: int | None = None) -> None:
 if __name__ == "__main__":
     import sys
     arch, I, TP = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
-    kv = None
-    if len(sys.argv) > 4:
-        assert sys.argv[4].startswith("kv"), sys.argv[4]
-        kv = int(sys.argv[4][2:])
-    run_case(arch, I, TP, kv)
+    kv = w = None
+    for extra in sys.argv[4:]:
+        if extra.startswith("kv"):
+            kv = int(extra[2:])
+        elif extra.startswith("w"):
+            w = int(extra[1:])
+        else:
+            raise SystemExit(f"unknown arg {extra}")
+    run_case(arch, I, TP, kv, w)

@@ -1,0 +1,157 @@
+"""Multi-node (W < I) engine cells: the node boundary is a cost, not a wall.
+
+Each mode drives ``NanoCPEngine`` on a topology whose rotation ring spans
+MULTIPLE nodes (``instances_per_node`` < ``num_instances``) and forces the
+control plane past the old intra-node binding invariant:
+
+  * place    — a request longer than its WHOLE home node admits with a
+               hierarchical two-level fill: the binding spills across the
+               node boundary, while a short co-resident request's binding
+               stays 100% node-local.
+  * escalate — decode KV growth exhausts the home node mid-request; the
+               headroom/spill escalation recruits a REMOTE-node member and
+               the live re-shard crosses the boundary.
+  * drain    — ``drain_instance`` evacuates onto a remote node because the
+               home-node partner cannot absorb the resident KV.
+  * conform  — plain conformance workload (nothing forced): all bindings
+               stay node-local (the inter-node penalty at work) and tokens
+               still match.
+
+All modes assert token-for-token equality with the single-device reference
+plus the donation (audited EVERY step) / transfer-guard invariants — the
+physical path (`migrate.KVReshard`, `PrefillScatter`, zig-zag ring rounds)
+is topology-agnostic over flat instance ids, and these cells pin that.
+
+Usage: engine_multinode.py MODE   (place | escalate | drain | conform)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+VOCAB = 256
+
+# mode: (I, W_node, tp, kv_capacity_tokens, prompt_lens, max_new)
+MODES = {
+    "place":    (8, 4, 1, 64,   (300, 24), 4),
+    "escalate": (4, 2, 2, 48,   (40,), 72),
+    "drain":    (4, 2, 2, 64,   (90, 20), 10),
+    "conform":  (8, 4, 1, 4096, (24, 90, 180), 4),
+}
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def run_case(mode: str) -> None:
+    I, W, tp, cap, plens, max_new = MODES[mode]
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, tp), ("data", "model"))
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=W, tp=tp,
+        kv_capacity_tokens=cap, page_size=16,
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=I),
+        max_slots_per_instance=4,
+        audit_donation_every_step=True)
+    cl = eng.cluster
+    assert cl.num_nodes == I // W and cl.window == I
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, VOCAB, (L,)) for L in plens]
+    rids = [eng.add_request(p, max_new_tokens=max_new) for p in prompts]
+
+    eng.step()                                    # admission + warmup
+    assert not cl.waiting, "all requests must admit at step 1"
+    if mode == "place":
+        # the long request's ADMISSION binding already spans >= 2 nodes —
+        # one node (4 x 64 tokens, minus the growth reserve) cannot hold it
+        long_nodes = cl.binding_nodes(cl.active[rids[0]].kv_binding)
+        assert len(long_nodes) >= 2, cl.active[rids[0]].kv_binding
+        short_nodes = cl.binding_nodes(cl.active[rids[1]].kv_binding)
+        assert len(short_nodes) == 1, cl.active[rids[1]].kv_binding
+    if mode == "conform":
+        for rid in rids:
+            assert len(cl.binding_nodes(cl.active[rid].kv_binding)) == 1, \
+                (rid, cl.active[rid].kv_binding)
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+
+    drained = None
+    with jax.transfer_guard("disallow"):
+        if mode == "drain":
+            # drain the long request's MoE binding: its node partner cannot
+            # absorb the resident KV, so the evacuation crosses the boundary
+            drained = cl.active[rids[0]].moe_binding
+            escs = eng.drain_instance(drained)
+            assert escs, "drain must evacuate resident KV"
+            crossed = [(s, d) for e in escs for (s, d, n) in e.moves
+                       if n and not cl.same_node(s, d)]
+            assert crossed, ("drain stayed node-local", escs)
+            assert cl.page_table.instance_used_tokens(drained) == 0
+            assert len(cl.binding_nodes(cl.active[rids[0]].kv_binding)) >= 2
+        for _ in range(max_new + 32):
+            if not (eng.cluster.active or eng._inflight is not None):
+                break
+            eng.step()
+    assert not eng.cluster.active and eng._inflight is None
+
+    hp = eng.hot_path_stats
+    fin = {r.rid: r for r in eng.finished}
+    print(f"mode={mode}: escalations={hp['escalations']} "
+          f"spill={hp['spill_escalations']} reshard_tokens="
+          f"{hp['reshard_tokens']} drains={hp['drains']}")
+    if mode == "escalate":
+        assert hp["escalations"] + hp["spill_escalations"] >= 1, hp
+        assert hp["reshard_tokens"] > 0
+        # the finished request's binding crossed the node boundary
+        assert len(cl.binding_nodes(fin[rids[0]].kv_binding)) >= 2, \
+            fin[rids[0]].kv_binding
+    if mode == "place":
+        assert len(cl.binding_nodes(fin[rids[0]].kv_binding)) >= 2
+    if mode == "conform":
+        for rid in rids:
+            assert len(cl.binding_nodes(fin[rid].kv_binding)) == 1, \
+                (rid, fin[rid].kv_binding)
+
+    # ---- token-for-token vs the single-device reference ----
+    for rid in rids:
+        res = eng.results[rid]
+        assert not res.oom, (rid, "unexpected OOM")
+        assert len(res.tokens) == max_new, (rid, res.tokens)
+        ref = reference(cfg, params, prompts[rid], max_new)
+        assert res.tokens == ref, (mode, rid, res.tokens, ref)
+        print(f"  rid {rid}: {len(res.tokens)} tokens == ref "
+              f"(binding {sorted(fin[rid].kv_binding)})")
+
+    # ---- donation held across every cross-node re-shard/dispatch ----
+    st = eng.aot.stats
+    n_leaves = len(jax.tree.leaves(eng.state))
+    assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+    assert st.donation_copies <= n_leaves, st.as_dict()
+    assert st.donation_copies == copies_before, \
+        ("cross-node path broke step donation", st.as_dict())
+    print(f"  aot: {st.as_dict()}")
+    print(f"engine_multinode mode={mode} I={I} W={W}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    run_case(sys.argv[1])

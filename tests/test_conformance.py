@@ -83,3 +83,27 @@ def test_engine_fault_drain():
     re-shard, rebalance moves MoE bindings off it, tokens stay equal."""
     out = run_integration("engine_fault.py", "4", "2")
     assert "PASS" in out
+
+
+# multi-node (W < I) cells: the rotation ring spans nodes; a binding may
+# cross the node boundary (hierarchical fill / escalation / drain) while
+# short requests stay node-local — token-for-token vs reference, donation +
+# transfer-guard invariants (tests/integration/engine_multinode.py).
+MULTINODE_CELLS = ["place", "escalate", "drain", "conform"]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mode", MULTINODE_CELLS)
+def test_engine_multinode(mode):
+    out = run_integration("engine_multinode.py", mode)
+    assert "PASS" in out
+
+
+@pytest.mark.conformance
+def test_engine_multinode_conformance_cell():
+    """Full conformance workload on a two-node W=4, I=8 topology (nothing
+    forced across the boundary — the standard assertions must hold with a
+    multi-node ring)."""
+    out = run_integration("engine_conformance.py", "tinyllama-1.1b", "8",
+                          "1", "w4")
+    assert "PASS" in out

@@ -156,14 +156,16 @@ def test_routing_tables_consistency():
         # merge sources == participating shards
         assert (tbl.merge_src[i, b] >= 0).sum() == \
             sum(1 for t in shards.values() if t > 0)
-    # send/recv position symmetry
+    # send/recv position symmetry (zig-zag ring: round d+1 carries delta
+    # ring_delta(d+1), so sender i's round-d buffer lands on i + delta)
+    from repro.core.comm import ring_delta
     for i in range(4):
         for d in range(W - 1):
             for p in range(S):
                 b = tbl.q_send_idx[i, d, p]
                 if b < 0:
                     continue
-                dest = (i // W) * W + (i % W + d + 1) % W
+                dest = (i + ring_delta(d + 1)) % W
                 assert tbl.q_recv_slot[dest, d, p] == b
                 src = M + d * S + p
                 assert (tbl.work_src[dest] == src).sum() == 1

@@ -1,0 +1,322 @@
+"""Multi-node (W < I) topologies: hierarchical placement, cross-node
+escalation/drain, zig-zag ring rounds, and per-link-class costs
+(host-side, no devices)."""
+import numpy as np
+import pytest
+
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.comm import ring_delta, ring_round
+from repro.core.page_table import KVSpillError
+from repro.core.routing import lower_plan
+from repro.core.scheduler import DualBalancedScheduler
+from repro.core.state import ClusterState, Request
+
+
+def mk_cluster(I=8, W=4, cap=4096, page=16, **kw):
+    return ClusterState(num_instances=I, instances_per_node=W,
+                        kv_capacity_tokens=cap, page_size=page, **kw)
+
+
+def decode_until(cl, sched, steps):
+    escs = []
+    for _ in range(steps):
+        plan = sched.schedule(cl)
+        escs.extend(plan.escalations)
+        lower_plan(cl, plan)
+        for req in cl.active.values():
+            req.generated += 1
+    return escs
+
+
+# --------------------------------------------------------------------------- #
+# zig-zag ring schedule
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("size", [2, 3, 4, 7, 8, 16, 32])
+def test_ring_round_bijective(size):
+    rounds = [ring_round(o, size) for o in range(1, size)]
+    assert sorted(rounds) == list(range(1, size))       # bijection
+    for o in range(size):
+        r = ring_round(o, size)
+        assert ring_delta(r) % size == o                # inverse
+    assert ring_round(0, size) == 0 and ring_delta(0) == 0
+
+
+def test_ring_round_node_local_bound():
+    """Node-local offsets (|signed| < W) land in rounds <= 2(W-1): a
+    placement that never crosses a node never pays cluster-diameter
+    rotation rounds."""
+    I, W = 32, 8
+    for m in range(I):
+        for s in range(I):
+            if s != m and m // W == s // W:
+                assert ring_round(s - m, I) <= 2 * (W - 1), (m, s)
+
+
+# --------------------------------------------------------------------------- #
+# hierarchical placement (two-level WaterFill)
+# --------------------------------------------------------------------------- #
+def test_place_stays_node_local_when_home_fits():
+    cl = mk_cluster(I=8, W=4, cap=4096)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 3)))
+    for r in range(8):
+        cl.enqueue(Request(rid=r, prompt_len=400, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 8
+    for req in cl.active.values():
+        assert len(cl.binding_nodes(req.kv_binding)) == 1, req.kv_binding
+
+
+def test_place_spills_binding_across_nodes_when_home_full():
+    """A request larger than its WHOLE home node admits with a binding
+    spanning >= 2 nodes (the old scheduler deferred it forever)."""
+    cl = mk_cluster(I=8, W=4, cap=64)                  # node capacity 256
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=300, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 1
+    req = cl.active[0]
+    assert len(cl.binding_nodes(req.kv_binding)) >= 2, req.kv_binding
+    shards = cl.page_table.shard_tokens(0)
+    assert sum(shards.values()) == 300                 # split conserves
+    assert req.moe_binding in req.kv_binding
+    # the home node is drained before the boundary is crossed: remote
+    # members hold only the overflow
+    home = cl.node_of(req.moe_binding)
+    remote_tokens = sum(t for s, t in shards.items()
+                        if cl.node_of(s) != home)
+    assert 0 < remote_tokens <= 300 - 4 * (64 - sched.kv_reserve) + 64
+
+
+def test_place_cross_node_disabled_keeps_the_wall():
+    cl = mk_cluster(I=8, W=4, cap=64)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)),
+                                  allow_cross_node=False)
+    cl.enqueue(Request(rid=0, prompt_len=300, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert not plan.admitted and plan.deferred == 1
+
+
+def test_place_penalty_prefers_home_under_imbalance():
+    """Remote members look ``inter_node_penalty`` tokens fuller, so a fill
+    that CAN stay home does, even when a remote instance is emptier."""
+    cl = mk_cluster(I=4, W=2, cap=1024)
+    # pre-load the home node (node 0) with background occupancy
+    cl.page_table.allocate(100, {0: 256, 1: 256})
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=200, max_new_tokens=4))
+    sched.schedule(cl)
+    req = cl.active[0]
+    # node 1 is empty but the request fits at home -> stays node-local
+    assert len(cl.binding_nodes(req.kv_binding)) == 1, req.kv_binding
+
+
+# --------------------------------------------------------------------------- #
+# cross-node escalation / spill relief / drain
+# --------------------------------------------------------------------------- #
+def test_headroom_escalation_crosses_node_boundary():
+    """Decode growth exhausts the home node; the promotion recruits a
+    remote-node member (last resort) instead of OOMing at half the
+    cluster's capacity."""
+    cl = mk_cluster(I=4, W=2, cap=96, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=40, max_new_tokens=500))
+    sched.schedule(cl)
+    assert len(cl.binding_nodes(cl.active[0].kv_binding)) == 1
+    escs = decode_until(cl, sched, 220)
+    req = cl.active[0]
+    assert len(cl.binding_nodes(req.kv_binding)) >= 2, req.kv_binding
+    crossed = [e for e in escs
+               if any(n and not cl.same_node(s, d) for s, d, n in e.moves)]
+    assert crossed, "no escalation crossed the node boundary"
+    for e in escs:                                     # invariants hold
+        srcs = {s for s, _, n in e.moves if n}
+        dsts = {d for _, d, n in e.moves if n}
+        assert not (srcs & dsts)
+    total = sum(cl.page_table.shard_tokens(0).values())
+    assert total == 40 + 220                           # no KV lost
+
+
+def test_spill_relief_exhausts_cluster_before_oom():
+    """The typed-spill backstop only OOMs once the CLUSTER is full, not the
+    home node (today's W < I gap)."""
+    cl = mk_cluster(I=4, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=40, max_new_tokens=5000))
+    sched.schedule(cl)
+    oomed = False
+    for _ in range(5000):
+        plan = sched.schedule(cl)
+        try:
+            lower_plan(cl, plan)
+        except KVSpillError as err:
+            if sched.relieve_spill(cl, err.rid, err.instance):
+                lower_plan(cl, plan)
+            else:
+                oomed = True
+                break
+        cl.active[0].generated += 1
+    assert oomed
+    total = sum(cl.page_table.shard_tokens(0).values())
+    # every pool's frames consumed; at most one page-vacating quantum of
+    # tail slack can be stranded (freeing the spiller's last frame needs a
+    # whole page's worth of receiver room)
+    assert total > 4 * 64 - 16, total
+    assert all(cl.page_table.free_frames(s) == 0 for s in range(4))
+    assert len(cl.binding_nodes(cl.active[0].kv_binding)) == 2
+
+
+def test_evacuate_drains_into_remote_node():
+    cl = mk_cluster(I=4, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100_000,),
+                                                    degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=90, max_new_tokens=8))
+    sched.schedule(cl)
+    victim = cl.active[0].moe_binding
+    cl.dead_instances.add(victim)
+    escs = sched.evacuate(cl, victim)
+    assert escs
+    assert cl.page_table.instance_used_tokens(victim) == 0
+    req = cl.active[0]
+    assert victim not in req.kv_binding
+    # instance partner holds ~45 tokens already: the evacuation MUST land
+    # part of the KV on the remote node
+    assert len(cl.binding_nodes(req.kv_binding)) >= 2, req.kv_binding
+    assert sum(cl.page_table.shard_tokens(0).values()) == 90
+
+
+def test_evacuate_infeasible_cluster_wide_raises_untouched():
+    cl = mk_cluster(I=4, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100_000,),
+                                                    degrees=(1, 2)))
+    for r in range(4):
+        cl.enqueue(Request(rid=r, prompt_len=50, max_new_tokens=4))
+    sched.schedule(cl)
+    before = {r: cl.page_table.shard_tokens(r) for r in cl.active}
+    cl.dead_instances.add(0)
+    with pytest.raises(MemoryError):
+        sched.evacuate(cl, 0)
+    assert {r: cl.page_table.shard_tokens(r) for r in cl.active} == before
+
+
+# --------------------------------------------------------------------------- #
+# routing: cross-node bindings lower onto the cluster ring
+# --------------------------------------------------------------------------- #
+def test_lower_plan_cross_node_tables_consistent():
+    cl = mk_cluster(I=8, W=4, cap=64, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)),
+                                  kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=300, max_new_tokens=4))  # crosses
+    cl.enqueue(Request(rid=1, prompt_len=30, max_new_tokens=4))   # local
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 2
+    assert len(cl.binding_nodes(cl.active[0].kv_binding)) >= 2
+    tbl = lower_plan(cl, plan, buckets=ShapeBuckets(
+        m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4), window=8))
+    M, S, N, W = tbl.M, tbl.S, tbl.N, tbl.W
+    assert W == 8 and 0 < tbl.R < W
+    assert tbl.slot_active.sum() == len(cl.active)
+    for rid, req in cl.active.items():
+        i, b = cl.slot_map[rid]
+        shards = cl.page_table.shard_tokens(rid)
+        live = sum(1 for t in shards.values() if t > 0)
+        assert (tbl.merge_src[i, b] >= 0).sum() == live
+    # send/recv position symmetry over the zig-zag cluster ring
+    for i in range(8):
+        for d in range(W - 1):
+            for p in range(S):
+                b = tbl.q_send_idx[i, d, p]
+                if b < 0:
+                    continue
+                dest = (i + ring_delta(d + 1)) % 8
+                assert tbl.q_recv_slot[dest, d, p] == b
+                assert (tbl.work_src[dest] == M + d * S + p).sum() == 1
+
+
+def test_routing_window_confines_bindings():
+    """With a pod-confined ring (routing_window < I), spill recruits stay
+    inside the window segment — collectives cannot cross it."""
+    cl = mk_cluster(I=8, W=2, cap=64, routing_window=4)
+    assert cl.window == 4
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=200, max_new_tokens=4))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 1
+    req = cl.active[0]
+    segs = {s // 4 for s in req.kv_binding}
+    assert len(segs) == 1                               # one window segment
+    assert len(cl.binding_nodes(req.kv_binding)) == 2   # but two nodes
+
+
+# --------------------------------------------------------------------------- #
+# link-class costs: latency model + simulator accounting
+# --------------------------------------------------------------------------- #
+def test_latency_model_inter_link_costs_more():
+    from repro.configs import CONFIGS
+    from repro.serving.latency_model import LatencyModel
+    lm = LatencyModel(CONFIGS["tinyllama-1.1b"])
+    assert lm.kv_reshard_time(4096, inter=True) > lm.kv_reshard_time(4096)
+    assert lm.cp_route_time(3, 8, inter=True) > lm.cp_route_time(3, 8)
+    lm_moe = LatencyModel(CONFIGS["deepseek-v3"])
+    assert lm_moe.a2a_time(64, inter_frac=0.75) > lm_moe.a2a_time(64)
+    assert lm_moe.a2a_link_times(64, 0.0)[1] == 0.0
+
+
+def test_simulator_cross_node_accounting():
+    """Memory pressure on a multi-node cluster: SimResult reports nonzero
+    cross-node reshard/MoE link time; an uncontended short-request run
+    stays 100% node-local (zero cross bytes beyond the EP all-to-all)."""
+    from repro.configs import get_config
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import TraceRequest, Workload
+
+    cfg = get_config("deepseek-v3")
+
+    def run(cap, lens, max_new):
+        sched = DualBalancedScheduler(
+            buckets=CPBuckets(edges=(3000,), degrees=(1, 2)), kv_reserve=64)
+        sim = ClusterSimulator(cfg, sched, num_instances=8,
+                               instances_per_node=4,
+                               kv_capacity_tokens=cap, page_size=64)
+        wl = Workload("x", [TraceRequest(r, 0.01 * r, L, max_new)
+                            for r, L in enumerate(lens)])
+        return sim.run(wl, horizon=300.0)
+
+    # pressure run: an odd request count puts TWO growing requests on one
+    # node (2 x 2500 tokens > 4 x 1024 pool) — their bindings must cross
+    hot = run(1024, [1900] * 3, 600)
+    assert hot.cross_bindings > 0
+    assert hot.cross_reshard_time > 0 or hot.cross_escalated_tokens > 0
+    assert hot.cross_moe_time > 0          # EP spans both nodes
+    assert hot.cross_node_bytes > 0
+    assert hot.oom_finishes == 0           # the cluster absorbed the growth
+
+    # short-request run: everything fits at home -> no cross-node KV at all
+    cold = run(1_000_000, [200] * 4, 32)
+    assert cold.cross_bindings == 0
+    assert cold.cross_reshard_time == 0.0
+    assert cold.cross_cp_time == 0.0
+    assert cold.cross_escalated_tokens == 0
+
+
+def test_simulator_single_node_has_no_cross_costs():
+    from repro.configs import get_config
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import make_workload
+
+    cfg = get_config("deepseek-v3")
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(3000,),
+                                                    degrees=(1, 2)))
+    sim = ClusterSimulator(cfg, sched, num_instances=8, instances_per_node=8,
+                           kv_capacity_tokens=1_000_000)
+    res = sim.run(make_workload("mixed", rate=50, duration=3.0, seed=0),
+                  horizon=30.0)
+    assert res.cross_node_bytes == 0 and res.cross_moe_time == 0.0
+    assert res.cross_bindings == 0

@@ -1,0 +1,42 @@
+"""Merge junit XML files from the sharded conformance matrix into one.
+
+Each CI shard uploads its own ``conformance-junit-<group>.xml``; the merge
+job concatenates every <testsuite> under a single <testsuites> root with
+aggregated counts, so downstream tooling sees ONE report for the matrix.
+
+  python tools/merge_junit.py OUT.xml IN1.xml [IN2.xml ...]
+"""
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def main(out_path: str, in_paths: list[str]) -> int:
+    root = ET.Element("testsuites")
+    totals = {"tests": 0, "failures": 0, "errors": 0, "skipped": 0}
+    time_total = 0.0
+    for path in in_paths:
+        tree = ET.parse(path)
+        r = tree.getroot()
+        suites = [r] if r.tag == "testsuite" else list(r)
+        for suite in suites:
+            root.append(suite)
+            for k in totals:
+                totals[k] += int(suite.get(k, 0) or 0)
+            time_total += float(suite.get("time", 0) or 0)
+    for k, v in totals.items():
+        root.set(k, str(v))
+    root.set("time", f"{time_total:.3f}")
+    ET.ElementTree(root).write(out_path, encoding="utf-8",
+                               xml_declaration=True)
+    print(f"merged {len(in_paths)} junit files -> {out_path} "
+          f"({totals['tests']} tests, {totals['failures']} failures, "
+          f"{totals['errors']} errors)")
+    return 1 if (totals["failures"] or totals["errors"]) else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 3:
+        raise SystemExit(__doc__)
+    sys.exit(main(sys.argv[1], sys.argv[2:]))
