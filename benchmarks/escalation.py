@@ -81,12 +81,52 @@ def run_bench(smoke: bool = False) -> dict:
         print(f"pages={pages:4d} tokens={pages * page:5d}  "
               f"dispatch p50 {cells[-1]['dispatch']['p50_us']:8.1f}us  "
               f"complete p50 {cells[-1]['complete']['p50_us']:8.1f}us")
+
+    # ---- relax cells: reshard-BACK latency vs pages reclaimed, through
+    # the real scheduler relax planner (de-escalation of a 2-wide binding
+    # whose growth has finished: member 1's whole shard consolidates onto
+    # the MoE-binding shard).  Times the planner + the donated collective —
+    # the cost `SimResult.relax_time` models.
+    from repro.core.state import Request
+    cl = eng.cluster
+    sched = eng.scheduler
+    relax_cells = []
+    for pages in page_counts:
+        t = pages * page
+        disp, total = [], []
+        for r in range(reps + 1):        # rep 0 warms the compile bucket
+            rid = 10_000 + pages * 100 + r
+            cl.page_table.allocate(rid, {0: page, 1: t})
+            req = Request(rid=rid, prompt_len=page + t, max_new_tokens=0)
+            req.kv_binding, req.moe_binding, req.node = [0, 1], 0, 0
+            req.status = "running"
+            cl.active[rid] = req
+            t0 = time.perf_counter()
+            recs = sched.relax(cl, force=True)
+            assert recs and recs[0].tokens_moved == t, (pages, recs)
+            eng.state = eng._reshard(eng.state, recs[0].src_coords,
+                                     recs[0].dst_coords)
+            t1 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(eng.state))
+            t2 = time.perf_counter()
+            if r > 0:
+                disp.append((t1 - t0) * 1e6)
+                total.append((t2 - t0) * 1e6)
+            cl.active.pop(rid)
+            cl.page_table.free_request(rid)
+        relax_cells.append({"pages_reclaimed": pages, "tokens_moved": t,
+                            "dispatch": _summ(disp),
+                            "complete": _summ(total)})
+        print(f"relax pages={pages:4d} tokens={t:5d}  "
+              f"dispatch p50 {relax_cells[-1]['dispatch']['p50_us']:8.1f}us  "
+              f"complete p50 {relax_cells[-1]['complete']['p50_us']:8.1f}us")
     return {
         "bench": "kv_reshard_latency_vs_pages",
         "arch": "tinyllama-1.1b(reduced nl=2)",
         "topology": {"instances": 2, "tp": 2, "page_size": page},
         "smoke": smoke,
         "cells": cells,
+        "relax_cells": relax_cells,
     }
 
 

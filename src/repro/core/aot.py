@@ -60,7 +60,8 @@ class AOTGraphEngine:
 
     def __init__(self, step_builder, mb_grid=(8, 16, 32, 64, 128, 256, 512,
                                               1024, 2048, 4096, 8192),
-                 audit_every_step: bool = False):
+                 audit_every_step: bool = False,
+                 r_ladder: tuple | None = None):
         self._builder = step_builder
         self._mb_grid = mb_grid
         self._cache: dict = {}
@@ -70,6 +71,13 @@ class AOTGraphEngine:
         # ``unsafe_buffer_pointer`` is a metadata read; catches a
         # copy-on-donate regression the moment a recompile introduces it.
         self.audit_every_step = audit_every_step
+        # quantisation grid for R (rotation rounds used).  None -> pow2
+        # ladder capped at W-1.  Topology-aware callers pass a ladder that
+        # includes ``comm.node_local_rounds(W_node)`` so a step whose
+        # bindings are (or have RELAXED back to) node-local compiles exactly
+        # the node-local round count instead of jumping to the cluster ring
+        # (pow2 rounds 2(W_node-1) up past the node bound on most shapes).
+        self.r_ladder = tuple(sorted(set(r_ladder))) if r_ladder else None
 
     def should_audit_donation(self) -> bool:
         """Whether the caller should capture pointers for this dispatch."""
@@ -89,7 +97,14 @@ class AOTGraphEngine:
         key = (M, S, _quantize_dim(MB), W)
         if R is None:
             return key
-        rq = 0 if S == 0 else min(_round_pow2(max(R, 1)), W - 1)
+        if S == 0:
+            rq = 0
+        elif self.r_ladder is not None:
+            r = max(R, 1)
+            rq = min((g for g in self.r_ladder if g >= r), default=W - 1)
+            rq = min(rq, W - 1)
+        else:
+            rq = min(_round_pow2(max(R, 1)), W - 1)
         return key + (rq,)
 
     # ---------------- offline capture (Alg. 2 l.7-17) ----------------

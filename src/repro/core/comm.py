@@ -42,6 +42,15 @@ def ring_round(offset: int, size: int) -> int:
     return 2 * o - 1 if o <= back else 2 * back
 
 
+def node_local_rounds(node_width: int) -> int:
+    """Highest zig-zag round a NODE-LOCAL binding can occupy: members within
+    |offset| < W_node of their sender land in rounds <= 2*(W_node - 1).
+    The AOT engine quantises ``RoutingTables.R`` onto a ladder containing
+    this bound, so a cluster whose bindings have relaxed back to node-local
+    re-enters the cheap AOT bucket instead of the cluster-ring one."""
+    return max(2 * (node_width - 1), 0)
+
+
 def node_rotation_pairs(axis_size: int, node: int, delta: int) -> list:
     """Cyclic rotation by ``delta`` within each ``node``-sized segment."""
     return [(a, (a // node) * node + ((a % node) + delta) % node)

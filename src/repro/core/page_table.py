@@ -261,6 +261,25 @@ class GlobalPageTable:
     def shard_frames(self, rid: int, instance: int) -> list[int]:
         return self._frames_by_shard.get(rid, {}).get(instance, [])
 
+    def shard_tail_slack(self, rid: int, instance: int) -> int:
+        """Free token slots inside the request's OWN frames on ``instance``
+        (the partial tail page).  ``move_pages`` appends into this slack
+        without allocating a frame — the relaxation planner's cheapest
+        receiver capacity."""
+        frames = self._frames_by_shard.get(rid, {}).get(instance, ())
+        used = self._last_fill.get(rid, {}).get(instance, 0)
+        return len(frames) * self.page_size - used
+
+    def fragmented_frames(self, rid: int) -> dict[int, int]:
+        """instance -> frames this request holds BEYOND the minimum
+        ``pages_needed`` for its resident tokens there (0 everywhere under
+        the move/append invariants — a nonzero entry means stranded pages)."""
+        out = {}
+        for s, frames in self._frames_by_shard.get(rid, {}).items():
+            t = self._last_fill.get(rid, {}).get(s, 0)
+            out[s] = len(frames) - self.pages_needed(t)
+        return out
+
     def shard_frames_np(self, rid: int, instance: int) -> "np.ndarray":
         """``shard_frames`` as a cached int32 ndarray (do not mutate)."""
         cache = self._frames_np.setdefault(rid, {})

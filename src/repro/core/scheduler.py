@@ -41,7 +41,14 @@ class Escalation:
     moves: list                      # [(src_instance, dst_instance, tokens)]
     src_coords: np.ndarray           # [3, T] (instance, frame, offset)
     dst_coords: np.ndarray
-    reason: str = "bucket"           # bucket | headroom | spill | drain
+    # escalation reasons widen the binding (bucket | headroom | spill |
+    # drain); relaxation reasons shrink or defragment it (relax |
+    # consolidate) — same record, same data-plane contract, opposite sign
+    reason: str = "bucket"
+
+    @property
+    def is_relaxation(self) -> bool:
+        return self.reason in ("relax", "consolidate")
 
     @property
     def tokens_moved(self) -> int:
@@ -93,6 +100,11 @@ class BaseScheduler:
         ``Escalation`` records; page-table bookkeeping already applied)."""
         return []
 
+    def relax(self, cluster: ClusterState, force: bool = False) -> list:
+        """Optionally demote/consolidate running requests' bindings (the
+        inverse of ``escalate``; same record contract)."""
+        return []
+
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
         self.rebalance(cluster)
@@ -100,6 +112,10 @@ class BaseScheduler:
         # escalations run BEFORE admission so new placements see the
         # post-move headroom picture (and never race a planned move's frames)
         plan.escalations = self.escalate(cluster)
+        # relaxations run right after (symmetric pass): a request promoted
+        # THIS step is cooldown-protected, so the two passes never fight —
+        # and admissions see the post-retraction headroom picture too
+        plan.relaxations = self.relax(cluster)
         admitted, still_waiting = [], []
         batch_counts = np.bincount(
             [r.moe_binding for r in cluster.active.values()],
@@ -148,7 +164,10 @@ class DualBalancedScheduler(BaseScheduler):
                  allow_escalation: bool = True,
                  escalate_headroom: int | None = None,
                  allow_cross_node: bool = True,
-                 inter_node_penalty: int | None = None):
+                 inter_node_penalty: int | None = None,
+                 allow_relaxation: bool = True,
+                 relax_guard: int | None = None,
+                 relax_cooldown: int = 4):
         super().__init__(max_batch_per_instance)
         self.buckets = buckets
         self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
@@ -175,6 +194,25 @@ class DualBalancedScheduler(BaseScheduler):
         # shard's free space falls to/below this.  None -> derived per
         # cluster as max(kv_reserve, page_size).
         self.escalate_headroom = escalate_headroom
+        # DCP relaxation (the inverse of escalation): de-escalate bindings
+        # wider than the bucket degree warrants and consolidate fragmented
+        # tail pages back onto the MoE-binding shard once pressure subsides.
+        # Escalation gates it off exactly where escalation itself is off
+        # (no decode KV growth -> nothing ever widened to relax).
+        self.allow_relaxation = allow_relaxation
+        # hysteresis guard band (tokens): a relaxation receiver must keep
+        # MORE than low_water + guard free AFTER absorbing the retracted KV,
+        # so the escalation low-water trigger cannot immediately re-fire.
+        # None -> derived per cluster as max(page_size, kv_reserve).
+        self.relax_guard = relax_guard
+        # hysteresis cooldown (schedule() passes, including the pass that
+        # set it): a request that escalated or relaxed is ineligible for
+        # relaxation for this many passes — escalate<->relax thrash is
+        # bounded to once per cooldown window.  Clamped to >= 1: a relax in
+        # the SAME pass as an escalation would batch into one re-shard
+        # whose gather reads frames the escalation hasn't written yet.
+        self.relax_cooldown = max(relax_cooldown, 1)
+        self._cooldown: dict = {}      # rid -> passes until relax-eligible
 
     def _low_water(self, cluster: ClusterState) -> int:
         if self.escalate_headroom is not None:
@@ -236,6 +274,228 @@ class DualBalancedScheduler(BaseScheduler):
             if esc is not None:
                 out.append(esc)
         return out
+
+    # -- DCP relaxation (the inverse of escalation) -------------------------
+    def relax(self, cluster: ClusterState, force: bool = False) -> list:
+        """Demote running requests whose bindings outgrew their need.
+
+        The mirror of ``escalate``: a request relaxes when (a) its binding
+        is WIDER than its ``CPBuckets`` degree warrants (after headroom/spill
+        escalations or a drain whose pressure has since subsided) — members
+        are retracted cross-node first, then widen-node, the exact mirror of
+        the hierarchical recruitment order — or (b) fragmented partial tail
+        pages strewn across donors can consolidate back onto the MoE-binding
+        shard, reclaiming whole frames.  Both are hysteretic: receivers must
+        keep ``low_water + guard`` free afterwards (the escalation trigger
+        cannot immediately re-fire) and a request never relaxes twice within
+        ``relax_cooldown`` passes (``force`` — the engine's ``compact()``
+        maintenance pass — overrides the cooldown, never the guard band).
+        Page-table bookkeeping happens here; the physical move is the
+        returned records' coordinate tensors, same as escalation.
+        """
+        if not (self.has_kv and self.allow_escalation
+                and self.allow_relaxation):
+            return []
+        out = []
+        low = self._low_water(cluster)
+        guard = self._relax_guard(cluster)
+        touched = set()
+        for rid in sorted(cluster.active):
+            req = cluster.active[rid]
+            if req.moe_binding in cluster.dead_instances:
+                continue
+            if not force and self._cooldown.get(rid, 0) > 0:
+                continue
+            rec = (self._try_deescalate(cluster, req, low, guard)
+                   or self._try_consolidate(cluster, req, low, guard))
+            if rec is not None:
+                out.append(rec)
+                self._cooldown[rid] = self.relax_cooldown
+                touched.add(rid)
+        if not force:
+            # one pass elapses AFTER the eligibility checks: a request
+            # escalated earlier in this very schedule() is blocked HERE
+            # (cooldown >= 1 always — the engine batches this pass's
+            # escalation and relaxation coords into ONE gather->scatter
+            # whose gathers all read pre-move pools, so a same-pass relax
+            # of a just-escalated request would gather frames its own
+            # escalation hasn't physically written yet)
+            self._cooldown = {
+                r: (c if r in touched else c - 1)
+                for r, c in self._cooldown.items()
+                if r in cluster.active and (r in touched or c > 1)}
+        return out
+
+    def _relax_guard(self, cluster: ClusterState) -> int:
+        if self.relax_guard is not None:
+            return self.relax_guard
+        return max(cluster.page_table.page_size, self.kv_reserve)
+
+    def _retract_order(self, cluster: ClusterState, req: Request,
+                       binding: list, shards: dict) -> list:
+        """Retraction candidates, in the MIRROR of the recruitment order:
+        cross-node members first (they were recruited last, as the home
+        node's last resort, and each one retracted drops inter-node rounds),
+        then widen-node members — cheapest-to-vacate (fewest resident
+        tokens) first within each class.  The MoE binding never retracts."""
+        remote = [s for s in binding
+                  if s != req.moe_binding and cluster.node_of(s) != req.node]
+        home = [s for s in binding
+                if s != req.moe_binding and cluster.node_of(s) == req.node]
+        remote.sort(key=lambda s: (shards.get(s, 0), s))
+        home.sort(key=lambda s: (shards.get(s, 0), s))
+        return remote + home
+
+    def _try_deescalate(self, cluster: ClusterState, req: Request,
+                        low: int, guard: int):
+        """Shrink one request's binding back to its bucket degree; None when
+        already at (or below) the profiled degree or no retraction fits
+        under the hysteresis guard band."""
+        pt = cluster.page_table
+        shards = pt.shard_tokens(req.rid)
+        total = sum(shards.values())
+        binding = [s for s in req.kv_binding
+                   if s not in cluster.dead_instances]
+        m = req.moe_binding
+        if m not in binding or total == 0:
+            return None
+        # never below the profiled argmin degree: the bucket IS the cost
+        # gate (latency_model.relax_breakeven_steps documents the payoff)
+        k_want = max(self.buckets.cp_degree(total), 1)
+        n_extra = len(binding) - k_want
+        if n_extra <= 0:
+            return None
+        cand = self._retract_order(cluster, req, binding, shards)
+        for n in range(min(n_extra, len(cand)), 0, -1):
+            drop = cand[:n]
+            keep = [s for s in binding if s not in drop]
+            moves = self._plan_relax_moves(cluster, req, keep, drop, low,
+                                           guard)
+            if moves is None:
+                continue        # receivers lack guard-banded headroom
+            src, dst = pt.move_pages(req.rid, moves)
+            old = sorted(req.kv_binding)
+            # the binding becomes exactly the retained members — a keep
+            # member the WaterFill happened to leave at zero tokens STAYS
+            # (pruning it would drop the degree below the bucket's k_want
+            # and the bucket trigger would re-widen next pass)
+            req.kv_binding = sorted(set(keep))
+            return Escalation(req.rid, old, req.kv_binding, moves, src, dst,
+                              reason="relax")
+        return None
+
+    def _try_consolidate(self, cluster: ClusterState, req: Request,
+                         low: int, guard: int):
+        """Defragment: move partial tail pages strewn across non-MoE members
+        back onto the MoE-binding shard, reclaiming whole donor frames.
+
+        Cost-gated: only applied when it reclaims MORE frames than the
+        receiver allocates (net frame gain >= 1).  A donor holding a single
+        partial page is fully vacated — allowed only while the binding stays
+        at or above the bucket degree, so the bucket trigger cannot re-widen
+        it next pass."""
+        pt = cluster.page_table
+        page = pt.page_size
+        shards = pt.shard_tokens(req.rid)
+        total = sum(shards.values())
+        binding = [s for s in req.kv_binding
+                   if s not in cluster.dead_instances]
+        m = req.moe_binding
+        if m not in binding or total == 0:
+            return None
+        k_want = max(self.buckets.cp_degree(total), 1)
+        spare = len(binding) - k_want            # members we may fully vacate
+        # receiver budget on m: guard-banded + growth-aware (the same cap as
+        # de-escalation receivers — a consolidation must never consume the
+        # MoE shard's append runway)
+        budget = self._receiver_cap(cluster, req, m, low, guard)
+        tails = []                               # (tokens, vacates_member, s)
+        for s in binding:
+            t = shards.get(s, 0)
+            if s == m or t == 0 or t % page == 0:
+                continue
+            tails.append((t % page, t <= page, s))
+        # smallest tails first: most frames reclaimed per token moved
+        tails.sort()
+        moves, moved, vacated = [], 0, set()
+        for t, vac, s in tails:
+            if moved + t > budget or (vac and len(vacated) + 1 > spare):
+                continue
+            moves.append((s, m, t))
+            moved += t
+            if vac:
+                vacated.add(s)
+        if not moves:
+            return None
+        # net frame reclaim: every tail move frees exactly one donor frame
+        need_m = pt.pages_needed(shards.get(m, 0) + moved) \
+            - len(pt.shard_frames(req.rid, m))
+        if len(moves) - max(need_m, 0) < 1:
+            return None
+        src, dst = pt.move_pages(req.rid, moves)
+        old = sorted(req.kv_binding)
+        # only fully-vacated donors leave the binding: pruning an untouched
+        # zero-token member here could drop the degree below k_want
+        req.kv_binding = sorted(set(binding) - vacated)
+        return Escalation(req.rid, old, req.kv_binding, moves, src, dst,
+                          reason="consolidate")
+
+    def _receiver_cap(self, cluster: ClusterState, req: Request, s: int,
+                      low: int, guard: int) -> float:
+        """Tokens shard ``s`` may ABSORB in a relaxation without risking the
+        escalation trigger re-firing: strictly-positive guard-banded frame
+        headroom (plus the request's own free tail slots, which cost no
+        frame).  The MoE-binding shard additionally reserves the request's
+        REMAINING decode growth — every future append lands there, so a
+        relax that fits "right now" on a still-growing request would just
+        re-escalate a few steps later (the thrash the hysteresis exists to
+        prevent).  0 when the shard is at/below the guard band: a relaxation
+        never digs a receiver's headroom hole deeper."""
+        head = cluster.kv_headroom(s) - (low + guard)
+        if s == req.moe_binding:
+            head -= max(req.max_new_tokens - req.generated, 0)
+        if head <= 0:
+            return 0.0
+        return float(cluster.page_table.shard_tail_slack(req.rid, s) + head)
+
+    def _plan_relax_moves(self, cluster: ClusterState, req: Request,
+                          keep: list, drop: list, low: int, guard: int):
+        """Plan the donor->receiver moves that vacate ``drop`` onto ``keep``.
+        Returns None when the retained members cannot absorb the KV while
+        keeping ``low + guard`` headroom (hysteresis), else the move list
+        ([] when the dropped members held no resident tokens)."""
+        pt = cluster.page_table
+        shards = pt.shard_tokens(req.rid)
+        donors = [(s, shards.get(s, 0)) for s in drop if shards.get(s, 0) > 0]
+        move_total = sum(t for _, t in donors)
+        if move_total == 0:
+            return []
+        loads = np.array([cluster.kv_load(s) for s in keep], np.float64)
+        # remote receivers carry the link penalty, mirroring every WaterFill:
+        # retracted KV lands home-first
+        pen = float(self._penalty(cluster))
+        loads += np.array([0.0 if cluster.node_of(s) == req.node else pen
+                           for s in keep])
+        caps = np.array(
+            [self._receiver_cap(cluster, req, s, low, guard)
+             for s in keep], np.float64)
+        if caps.sum() < move_total:
+            return None
+        target = waterfill(loads, move_total, capacities=caps)
+        recvs = [(keep[i], int(t)) for i, t in enumerate(target) if t > 0]
+        moves = []
+        ri = 0
+        for s, have in donors:
+            while have > 0 and ri < len(recvs):
+                d, want = recvs[ri]
+                n = min(have, want)
+                moves.append((s, d, n))
+                have -= n
+                want -= n
+                recvs[ri] = (d, want)
+                if want == 0:
+                    ri += 1
+        return moves
 
     def relieve_spill(self, cluster: ClusterState, rid: int,
                       instance: int) -> list:
@@ -330,6 +590,7 @@ class DualBalancedScheduler(BaseScheduler):
                 set(members[:1]))
             old = sorted(req.kv_binding)
             req.kv_binding = new_binding
+            self._cooldown[req.rid] = self.relax_cooldown
             out.append(Escalation(req.rid, old, new_binding, moves, src, dst,
                                   reason="drain"))
         return out
@@ -394,6 +655,9 @@ class DualBalancedScheduler(BaseScheduler):
         req.kv_binding = sorted(holders | {m})
         reason = ("spill" if force else
                   "bucket" if need_degree else "headroom")
+        # a just-promoted request must not relax within the cooldown window
+        # (escalate<->relax hysteresis)
+        self._cooldown[req.rid] = self.relax_cooldown
         return Escalation(req.rid, old, req.kv_binding, moves, src, dst,
                           reason)
 

@@ -233,6 +233,11 @@ class IterationPlan:
     # records; page-table bookkeeping already applied — the engine owes the
     # device-side KV re-shard before dispatching against these tables)
     escalations: list = field(default_factory=list)
+    # DCP relaxations decided this iteration (same record type, reasons
+    # "relax"/"consolidate"): bindings SHRANK or fragmented KV consolidated
+    # back onto the MoE-binding shard.  Same contract as escalations — the
+    # bookkeeping is applied, the physical re-shard is owed.
+    relaxations: list = field(default_factory=list)
 
     def plan_of(self, instance: int) -> InstancePlan:
         return self.instances[instance]

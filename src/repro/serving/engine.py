@@ -55,6 +55,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..core import dcp, migrate, routing
 from ..core.aot import AOTGraphEngine
+from ..core.comm import node_local_rounds
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
 from ..core.page_table import KVSpillError
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
@@ -173,8 +174,14 @@ class NanoCPEngine:
             jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
                          is_leaf=lambda x: isinstance(x, P)))
         self._tbl_shardings: dict | None = None
+        # R quantisation ladder includes the node-local bound 2(W_node-1):
+        # a steady state whose bindings stay — or RELAX back to — node-local
+        # compiles exactly the node-local rotation rounds, never the
+        # cluster ring (the compiler-visible payoff of DCP relaxation)
         self.aot = AOTGraphEngine(self._build_step,
-                                  audit_every_step=audit_donation_every_step)
+                                  audit_every_step=audit_donation_every_step,
+                                  r_ladder=self._r_ladder(
+                                      ring, instances_per_node))
         self._scatter = migrate.PrefillScatter(cfg, self._dims0,
                                                num_instances)
         # live KV re-shard collective (mid-decode CP escalation / drain);
@@ -193,13 +200,34 @@ class NanoCPEngine:
         # hot-path introspection (benchmarks/decode_step.py, tests)
         self.timings: dict = {}
         self.last_bucket: tuple | None = None
+        # lowered rotation rounds of the last dispatched step
+        # (RoutingTables.R, pre-quantisation): the relaxation cells assert
+        # this returns to <= 2(W_node-1) after a cross-node retraction
+        self.last_rounds_used: int = 0
         self.hot_path_stats: dict = {
             "steps": 0, "async_token_fetches": 0, "speculative_slots": 0,
             "prefill_eos_finishes": 0, "escalations": 0, "reshard_tokens": 0,
-            "spill_escalations": 0, "oom_finishes": 0, "drains": 0}
+            "spill_escalations": 0, "oom_finishes": 0, "drains": 0,
+            "relaxations": 0, "relax_tokens": 0, "compacts": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _r_ladder(ring: int, node_width: int) -> tuple | None:
+        """AOT quantisation grid for rounds-used: pow2 steps plus the
+        node-local bound (and the full ring as the ceiling)."""
+        if ring <= 1:
+            return None
+        lad = {1, ring - 1}
+        v = 1
+        while v < ring - 1:
+            v *= 2
+            lad.add(v)
+        nl = node_local_rounds(node_width)
+        if nl >= 1:
+            lad.add(nl)
+        return tuple(sorted(g for g in lad if 1 <= g <= ring - 1))
+
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
@@ -461,7 +489,12 @@ class NanoCPEngine:
         src = np.concatenate([e.src_coords for e in escalations], axis=1)
         dst = np.concatenate([e.dst_coords for e in escalations], axis=1)
         self.state = self._reshard(self.state, src, dst)
-        self.hot_path_stats["escalations"] += len(escalations)
+        relaxed = [e for e in escalations
+                   if getattr(e, "is_relaxation", False)]
+        self.hot_path_stats["escalations"] += len(escalations) - len(relaxed)
+        self.hot_path_stats["relaxations"] += len(relaxed)
+        self.hot_path_stats["relax_tokens"] += sum(e.tokens_moved
+                                                   for e in relaxed)
         self.hot_path_stats["reshard_tokens"] += int(src.shape[1])
         self.timings["reshard_us"] = (
             self.timings.get("reshard_us", 0.0)
@@ -513,6 +546,26 @@ class NanoCPEngine:
         self.scheduler.rebalance(self.cluster)
         self.hot_path_stats["drains"] += 1
         return escalations
+
+    def compact(self) -> list:
+        """Planned maintenance — the relaxation twin of ``drain_instance``:
+        force ONE cluster-wide relaxation pass (de-escalate every binding
+        wider than its bucket degree, consolidate fragmented tail pages back
+        onto the MoE-binding shards) and apply the live re-shard now.
+
+        ``force=True`` overrides the per-request cooldown — an operator-
+        initiated compaction after a drain/burst should not wait out the
+        hysteresis window — but NEVER the headroom guard band: a shard near
+        its low-water mark keeps its KV spread.  Requires the same
+        rebalance-able attention arch as ``drain_instance`` (the re-shard
+        only covers decoder-only pool layouts)."""
+        assert self._append_tokens, \
+            "compact needs a decoder-only attention arch"
+        records = (self.scheduler.relax(self.cluster, force=True)
+                   if hasattr(self.scheduler, "relax") else [])
+        self._apply_escalations(records)
+        self.hot_path_stats["compacts"] += 1
+        return records
 
     # ------------------------------------------------------------------ #
     def _harvest(self, now: float) -> list:
@@ -567,10 +620,13 @@ class NanoCPEngine:
 
         # -- schedule + admit (prefill -> on-device KV migration) ----------
         plan = self.scheduler.schedule(self.cluster, now)
-        # mid-decode CP escalations decided by the scheduler: dispatch the
-        # live KV re-shard FIRST so the gather reads the pools before this
-        # step's admissions scatter into (possibly just-freed) frames
-        self._apply_escalations(plan.escalations)
+        # mid-decode CP escalations AND relaxations decided by the
+        # scheduler: dispatch the live KV re-shard FIRST so the gather reads
+        # the pools before this step's admissions scatter into (possibly
+        # just-freed) frames.  One batched gather->scatter covers both —
+        # escalation records precede relaxation records, matching the order
+        # the scheduler applied their page-table bookkeeping.
+        self._apply_escalations(plan.escalations + plan.relaxations)
         prefill_done = []
         if plan.admitted:
             t0 = time.perf_counter()
@@ -667,6 +723,7 @@ class NanoCPEngine:
         self._inflight = _Inflight(toks, snapshot)
         self.iterations += 1
         self.last_bucket = key
+        self.last_rounds_used = tbl.R
         self.hot_path_stats["steps"] += 1
         if not self.pipeline:
             # non-pipelined reference semantics: harvest this very iteration

@@ -214,6 +214,26 @@ class LatencyModel:
                 + bytes_ / bw
                 + 2 * bytes_ / (self.hw.hbm_bw * self.hw.chips_per_instance))
 
+    def relax_breakeven_steps(self, tokens_moved: float, rounds_saved: int,
+                              rows: float = 1.0,
+                              inter: bool = False) -> float:
+        """Decode steps after which a relaxation's ONE-TIME re-shard cost is
+        repaid by the PER-STEP Q/Res routing rounds it removes (both
+        directions, every attention layer).
+
+        This is the analytic form of the relax cost gate: retracting a
+        cross-node member pays for itself within a handful of steps (thin
+        inter links make ``rounds_saved`` expensive), so the scheduler's
+        structural gates (never below the profiled bucket degree; net frame
+        reclaim for consolidation) approximate `breakeven << remaining
+        decode'.  inf when nothing is saved (``rounds_saved == 0`` moves are
+        pure defragmentation — gated on frame reclaim instead)."""
+        saved = (2 * self.cp_route_time(rounds_saved, rows, inter=inter)
+                 * self.num_attn_layers)
+        if saved <= 0.0:
+            return float("inf")
+        return self.kv_reshard_time(tokens_moved, inter=inter) / saved
+
     # ---------------- composite: DCP attention for one request ----------
     def dcp_attention_latency(self, length: int, cp: int) -> float:
         """Offline-profiling objective for Bucket(len) derivation: one

@@ -63,6 +63,14 @@ class SimResult:
     escalated_pages: int = 0                               # dest frames written
     reshard_time: float = 0.0                              # total seconds charged
     oom_finishes: int = 0                                  # spills nobody could absorb
+    # DCP relaxation accounting (the inverse pass: de-escalation + KV
+    # consolidation once pressure subsides — its re-shard is charged into
+    # sim time exactly like escalation's, so relaxing policies pay for the
+    # KV they move home)
+    relaxations: int = 0                                   # demotion/consolidation events
+    relaxed_tokens: int = 0                                # KV tokens moved back
+    relax_time: float = 0.0                                # re-shard s charged to relax
+    reclaimed_cross_bindings: int = 0                      # bindings back to one node
     # cross-node (inter link class) accounting: why node boundaries are a
     # COST — zero for workloads whose bindings stay node-local
     cross_node_bytes: int = 0                              # bytes over inter links
@@ -178,26 +186,48 @@ class ClusterSimulator:
         return t_iter, ph, attn_t + cp_t, 2 * a2a_t
 
     # ------------------------------------------------------------------ #
-    def _charge_reshard(self, res: SimResult, escalations: list,
+    def _charge_reshard(self, res: SimResult, records: list,
                         now: float) -> float:
-        if not escalations:
+        """Charge escalation AND relaxation re-shards (same collective, same
+        link-class split; the accounting is kept per direction)."""
+        if not records:
             return now
         cl, lm = self.cluster, self.latency
-        moved = sum(e.tokens_moved for e in escalations)
+        moved = sum(e.tokens_moved for e in records)
         # split the moved tokens by the link class each move traverses:
         # cross-node re-shards ride the thin inter links
-        inter = sum(n for e in escalations for (s, d, n) in e.moves
+        inter = sum(n for e in records for (s, d, n) in e.moves
                     if not cl.same_node(s, d))
         t_intra = lm.kv_reshard_time(moved - inter)
         t_inter = lm.kv_reshard_time(inter, inter=True)
         res.reshard_time += t_intra + t_inter
         res.cross_reshard_time += t_inter
-        res.cross_escalated_tokens += inter
         res.cross_node_bytes += int(
             inter * lm.kv_bytes_per_token * lm.num_attn_layers)
-        res.escalations += len(escalations)
-        res.escalated_tokens += moved
-        res.escalated_pages += sum(e.pages_moved for e in escalations)
+        relaxed = [e for e in records if getattr(e, "is_relaxation", False)]
+        escs = [e for e in records
+                if not getattr(e, "is_relaxation", False)]
+        res.escalations += len(escs)
+        res.escalated_tokens += sum(e.tokens_moved for e in escs)
+        res.escalated_pages += sum(e.pages_moved for e in escs)
+        # only ESCALATION moves count as cross-node escalated KV — a
+        # relaxation moving KV home over the boundary is a reclaim, not
+        # more escalation pressure
+        res.cross_escalated_tokens += sum(
+            n for e in escs for (s, d, n) in e.moves
+            if not cl.same_node(s, d))
+        res.relaxations += len(relaxed)
+        res.relaxed_tokens += sum(e.tokens_moved for e in relaxed)
+        if relaxed:
+            rt = sum(e.tokens_moved for e in relaxed)
+            ri = sum(n for e in relaxed for (s, d, n) in e.moves
+                     if not cl.same_node(s, d))
+            res.relax_time += (lm.kv_reshard_time(rt - ri)
+                               + lm.kv_reshard_time(ri, inter=True))
+            res.reclaimed_cross_bindings += sum(
+                1 for e in relaxed
+                if len(cl.binding_nodes(e.old_binding)) > 1
+                and len(cl.binding_nodes(e.new_binding)) == 1)
         return now + t_intra + t_inter
 
     def _relieve_or_oom(self, res: SimResult, cl: ClusterState, r: Request,
@@ -246,10 +276,11 @@ class ClusterSimulator:
             t0 = _time.perf_counter()
             plan = self.scheduler.schedule(cl, now)
             res.sched_wall += _time.perf_counter() - t0
-            # escalations: page-table bookkeeping already applied by the
-            # scheduler; the simulator charges the data-plane re-shard time
-            # (the engine instead dispatches migrate.KVReshard here)
-            now = self._charge_reshard(res, plan.escalations, now)
+            # escalations + relaxations: page-table bookkeeping already
+            # applied by the scheduler; the simulator charges the data-plane
+            # re-shard time (the engine instead dispatches migrate.KVReshard)
+            now = self._charge_reshard(
+                res, plan.escalations + plan.relaxations, now)
             if not cl.active:
                 if ai < len(arrivals):
                     now = max(now, arrivals[ai].arrival)

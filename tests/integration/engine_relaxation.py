@@ -1,0 +1,175 @@
+"""DCP relaxation engine cells: bindings RETURN to cheap shapes when load
+shrinks (the inverse of the escalation cells).
+
+Each mode drives ``NanoCPEngine`` through a pressure burst that widens a
+request's KV binding (headroom escalation, cross-node recruitment, or a
+drain), lets the pressure subside (co-residents finish), and asserts the
+scheduler's ``relax`` pass pulls the binding back — de-escalation +
+consolidation riding the SAME donated ``migrate.KVReshard`` collective —
+with tokens still bit-for-bit equal to the single-device reference:
+
+  * deescalate — I=2: a bounded-growth request escalates under a big
+                 co-resident's pressure; the co-resident finishes; relax
+                 retracts the extra member and the request finishes at CP
+                 degree 1.  Runs pipelined and (``nopipe``) non-pipelined.
+  * crossnode  — I=8, W=4 (two nodes): decode growth exhausts the home
+                 node and recruits remote members; once the co-resident
+                 finishes, retraction drops the cross-node members FIRST
+                 and the lowered steps' rounds_used returns to the
+                 node-local bound 2(W-1) — steady state re-enters the
+                 cheap node-local AOT bucket.
+  * compact    — post-drain maintenance: ``drain_instance`` spreads KV
+                 wide; ``NanoCPEngine.compact()`` (force relax, cooldown
+                 overridden, guard band kept) shrinks the bindings back.
+
+All modes assert donation (audited EVERY step, ``donation_copies`` stable
+across the relax re-shards) + transfer-guard invariants.
+
+Usage: engine_relaxation.py MODE [nopipe]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.comm import node_local_rounds
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+VOCAB = 256
+
+# mode: (I, W_node, tp, cap, edges, degrees, [(prompt_len, max_new), ...])
+# the LAST request is the one whose binding must widen then relax back
+MODES = {
+    "deescalate": (2, 2, 2, 256, (100_000,), (1, 2),
+                   [(330, 24), (48, 48)]),
+    "crossnode":  (8, 4, 1, 128, (100_000,), (1, 2),
+                   [(420, 40), (16, 4), (24, 64)]),
+    "compact":    (4, 4, 2, 4096, (64, 160), (1, 2, 3),
+                   [(24, 12), (90, 12), (180, 12)]),
+}
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def run_case(mode: str, pipeline: bool) -> None:
+    I, W, tp, cap, edges, degrees, reqs = MODES[mode]
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, tp), ("data", "model"))
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=W, tp=tp,
+        kv_capacity_tokens=cap, page_size=16,
+        buckets=CPBuckets(edges=edges, degrees=degrees),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=I),
+        max_slots_per_instance=4, pipeline=pipeline,
+        audit_donation_every_step=True)
+    cl = eng.cluster
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, VOCAB, (L,)) for L, _ in reqs]
+    rids = [eng.add_request(p, max_new_tokens=n)
+            for p, (_, n) in zip(prompts, reqs)]
+    watched = rids[-1]
+    max_steps = max(n for _, n in reqs) + 48
+
+    eng.step()                                    # admission + warmup
+    assert not cl.waiting, "all requests must admit at step 1"
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+
+    peak_nodes = peak_deg = 0
+    compacted = []
+    with jax.transfer_guard("disallow"):
+        if mode == "compact":
+            eng.step()
+            victim = int(np.bincount(
+                [r.moe_binding for r in cl.active.values()],
+                minlength=I).argmax())
+            eng.drain_instance(victim)
+            pre = {r: sorted(cl.active[r].kv_binding) for r in cl.active}
+            compacted = eng.compact()
+            assert compacted, "post-drain compact must relax something"
+            for rec in compacted:
+                assert set(rec.new_binding) <= set(rec.old_binding), rec
+                assert sorted(rec.old_binding) == pre[rec.rid], rec
+            # compact overrides the drain's hysteresis cooldown (force),
+            # and shrinks at least one binding
+            assert any(len(r.new_binding) < len(r.old_binding)
+                       or r.tokens_moved for r in compacted)
+        for _ in range(max_steps):
+            if not (cl.active or eng._inflight is not None):
+                break
+            if watched in cl.active:
+                b = cl.active[watched].kv_binding
+                peak_nodes = max(peak_nodes, len(cl.binding_nodes(b)))
+                peak_deg = max(peak_deg, len(b))
+            eng.step()
+    assert not cl.active and eng._inflight is None
+
+    hp = eng.hot_path_stats
+    fin = {r.rid: r for r in eng.finished}
+    print(f"mode={mode} pipeline={pipeline}: escalations={hp['escalations']} "
+          f"relaxations={hp['relaxations']} relax_tokens={hp['relax_tokens']} "
+          f"compacts={hp['compacts']} peak_deg={peak_deg} "
+          f"peak_nodes={peak_nodes} last_R={eng.last_rounds_used}")
+
+    if mode == "deescalate":
+        # the watched request widened under pressure, then relaxed back and
+        # FINISHED at CP degree 1 (binding on the record it finished with)
+        assert hp["escalations"] + hp["spill_escalations"] >= 1, hp
+        assert hp["relaxations"] >= 1 and hp["relax_tokens"] > 0, hp
+        assert peak_deg >= 2, "watched request never escalated"
+        assert len(fin[watched].kv_binding) == 1, fin[watched].kv_binding
+    if mode == "crossnode":
+        # pressure recruited a remote node; relaxation retracted it and the
+        # lowered steady state returned to the node-local round bound
+        assert peak_nodes >= 2, "watched request never crossed the boundary"
+        assert hp["relaxations"] >= 1, hp
+        assert len(cl.binding_nodes(fin[watched].kv_binding)) == 1, \
+            fin[watched].kv_binding
+        assert eng.last_rounds_used <= node_local_rounds(W), \
+            (eng.last_rounds_used, node_local_rounds(W))
+    if mode == "compact":
+        assert hp["compacts"] == 1 and hp["relaxations"] >= 1, hp
+
+    # ---- token-for-token vs the single-device reference ----
+    for rid in rids:
+        res = eng.results[rid]
+        assert not res.oom, (rid, "unexpected OOM")
+        assert len(res.tokens) == reqs[rid][1], (rid, res.tokens)
+        ref = reference(cfg, params, prompts[rid], reqs[rid][1])
+        assert res.tokens == ref, (mode, rid, res.tokens, ref)
+        print(f"  rid {rid}: {len(res.tokens)} tokens == ref "
+              f"(binding {sorted(fin[rid].kv_binding)})")
+
+    # ---- donation held across every relax re-shard/dispatch ----
+    st = eng.aot.stats
+    n_leaves = len(jax.tree.leaves(eng.state))
+    assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+    assert st.donation_copies <= n_leaves, st.as_dict()
+    assert st.donation_copies == copies_before, \
+        ("relaxation broke step donation", st.as_dict())
+    print(f"  aot: {st.as_dict()}")
+    print(f"mode={mode} pipeline={pipeline}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1]
+    pipeline = "nopipe" not in sys.argv[2:]
+    run_case(mode, pipeline)

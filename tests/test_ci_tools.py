@@ -1,0 +1,132 @@
+"""CI tooling gates, run as tier-1 tests: the conformance shard partition
+must cover every cell exactly once (tools/check_matrix.py) and the junit
+merge must degrade loudly, not crash, on broken shard reports
+(tools/merge_junit.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_matrix  # noqa: E402
+import merge_junit  # noqa: E402
+
+
+# --------------------------------------------------------------------------- #
+# check_matrix: the real partition, end to end
+# --------------------------------------------------------------------------- #
+def test_shard_partition_exactly_once():
+    """The committed workflow's -k expressions cover the CURRENT conformance
+    matrix exactly once — the gate that stops a new cell from silently
+    falling out of CI."""
+    assert check_matrix.main([]) == 0
+
+
+def test_match_k_agrees_with_pytest():
+    """The tool's -k evaluator selects the same cells as pytest itself for
+    a real compound shard expression."""
+    expr = "test_engine_multinode or test_engine_fault"
+    cells = check_matrix.collect_cells()
+    ours = {c for c in cells if check_matrix.match_k(expr, c)}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-m", "conformance", "-k", expr,
+         os.path.join(REPO, "tests")],
+        capture_output=True, text=True, cwd=REPO, env=env)
+    theirs = {ln.strip() for ln in proc.stdout.splitlines() if "::" in ln}
+    assert ours == theirs and ours
+
+
+# --------------------------------------------------------------------------- #
+# check_matrix: partition-violation detection (synthetic)
+# --------------------------------------------------------------------------- #
+CELLS = [
+    "tests/test_conformance.py::test_engine_conformance[tinyllama-I4-TP2]",
+    "tests/test_conformance.py::test_engine_escalation[bucket-pipe]",
+    "tests/test_conformance.py::test_engine_relaxation[deescalate-pipe]",
+]
+
+
+def test_check_flags_uncovered_cell():
+    shards = [("a", "test_engine_conformance"), ("b", "test_engine_escalation")]
+    problems = check_matrix.check(shards, CELLS)
+    assert any("UNCOVERED" in p and "relaxation" in p for p in problems)
+
+
+def test_check_flags_double_covered_cell():
+    shards = [("a", "test_engine"), ("b", "escalation or relaxation")]
+    problems = check_matrix.check(shards, CELLS)
+    assert any("DOUBLE-COVERED" in p for p in problems)
+
+
+def test_check_flags_empty_shard():
+    shards = [("a", "test_engine"), ("dead", "no_such_cell_anywhere")]
+    problems = check_matrix.check(shards, CELLS)
+    assert any("EMPTY SHARD" in p and "dead" in p for p in problems)
+
+
+def test_match_k_grammar():
+    nid = CELLS[0]
+    assert check_matrix.match_k("tinyllama and not TP4", nid)
+    assert not check_matrix.match_k("tinyllama and TP4", nid)
+    assert check_matrix.match_k("(mamba2 or tinyllama) and I4", nid)
+
+
+# --------------------------------------------------------------------------- #
+# merge_junit: defensive merge
+# --------------------------------------------------------------------------- #
+SUITE = ('<?xml version="1.0"?><testsuites><testsuite name="s{n}" '
+         'tests="{t}" failures="0" errors="0" skipped="0" time="1.5">'
+         '</testsuite></testsuites>')
+
+
+def _write(tmp_path, name, content):
+    p = tmp_path / name
+    p.write_text(content)
+    return str(p)
+
+
+def test_merge_ok(tmp_path):
+    ins = [_write(tmp_path, f"in{i}.xml", SUITE.format(n=i, t=3))
+           for i in range(2)]
+    out = str(tmp_path / "out.xml")
+    assert merge_junit.main(out, ins) == 0
+    import xml.etree.ElementTree as ET
+    root = ET.parse(out).getroot()
+    assert root.get("tests") == "6" and len(list(root)) == 2
+
+
+@pytest.mark.parametrize("breakage", ["missing", "empty", "invalid", "zero"])
+def test_merge_fails_loudly_but_writes_valid_xml(tmp_path, breakage, capsys):
+    """A broken shard report fails the merge with a CLEAR message naming the
+    shard — and the merged XML of the healthy shards is still written and
+    still parses (the old script crashed with a bare ParseError, or merged
+    a zero-test shard silently)."""
+    good = _write(tmp_path, "good.xml", SUITE.format(n=0, t=4))
+    if breakage == "missing":
+        bad = str(tmp_path / "never_written.xml")
+    elif breakage == "empty":
+        bad = _write(tmp_path, "empty.xml", "")
+    elif breakage == "invalid":
+        bad = _write(tmp_path, "invalid.xml", "<testsuite tests=")
+    else:
+        bad = _write(tmp_path, "zero.xml", SUITE.format(n=9, t=0))
+    out = str(tmp_path / "out.xml")
+    assert merge_junit.main(out, [good, bad]) == 1
+    msg = capsys.readouterr().out
+    assert os.path.basename(bad) in msg and "FAILED" in msg
+    import xml.etree.ElementTree as ET
+    root = ET.parse(out).getroot()          # merged output is valid XML
+    assert root.get("tests") == "4"
+
+
+def test_merge_propagates_test_failures(tmp_path):
+    bad = ('<?xml version="1.0"?><testsuite name="s" tests="2" failures="1" '
+           'errors="0" skipped="0" time="1"></testsuite>')
+    out = str(tmp_path / "out.xml")
+    assert merge_junit.main(out, [_write(tmp_path, "f.xml", bad)]) == 1

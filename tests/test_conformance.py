@@ -77,6 +77,28 @@ def test_engine_escalation(mode, pipeline):
     assert "PASS" in out
 
 
+# DCP relaxation cells (the inverse of the escalation cells): a pressure
+# burst widens a request's binding, the pressure subsides, and the relax
+# pass pulls it back — de-escalation, cross-node retraction (I=8/W=4:
+# lowered rounds_used returns to <= 2(W-1)), post-drain compact() — with
+# tokens token-for-token equal to the reference and donation_copies == 0.
+RELAXATION_CELLS = [
+    ("deescalate", True), ("deescalate", False),
+    ("crossnode", True),
+    ("compact", True),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mode,pipeline", RELAXATION_CELLS,
+                         ids=[f"{m}-{'pipe' if p else 'nopipe'}"
+                              for m, p in RELAXATION_CELLS])
+def test_engine_relaxation(mode, pipeline):
+    args = [mode] + ([] if pipeline else ["nopipe"])
+    out = run_integration("engine_relaxation.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_fault_drain():
     """Fault cell: drain an instance mid-run — KV evacuates via the live

@@ -288,6 +288,244 @@ def test_latency_model_counts_whole_stack():
 
 
 # --------------------------------------------------------------------------- #
+# relaxation: de-escalation, consolidation, hysteresis
+# --------------------------------------------------------------------------- #
+def _pressure_then_release(relax_cooldown=2):
+    """Tiny 2-instance cluster: a big co-resident forces request 1 to
+    escalate; finishing the co-resident releases the pressure.  Returns
+    (cluster, scheduler) with request 1 escalated (degree 2) and growth
+    finished."""
+    cl = mk_cluster(I=2, W=2, cap=256, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=16,
+        relax_cooldown=relax_cooldown)
+    cl.enqueue(Request(rid=0, prompt_len=330, max_new_tokens=64))
+    cl.enqueue(Request(rid=1, prompt_len=48, max_new_tokens=16))
+    sched.schedule(cl)
+    assert cl.active[1].cp_degree == 1
+    escs = decode_until(cl, sched, 16)
+    assert any(e.rid == 1 for e in escs), "pressure never escalated rid 1"
+    assert cl.active[1].cp_degree == 2
+    assert cl.active[1].generated == cl.active[1].max_new_tokens
+    return cl, sched
+
+
+def test_relax_deescalates_after_pressure_subsides():
+    cl, sched = _pressure_then_release()
+    total = sum(cl.page_table.shard_tokens(1).values())
+    cl.finish(cl.active[0])                        # release the pressure
+    relaxed = []
+    for _ in range(6):
+        relaxed += sched.schedule(cl).relaxations
+    assert [e.rid for e in relaxed] == [1]
+    e = relaxed[0]
+    assert e.reason == "relax" and e.is_relaxation
+    assert set(e.new_binding) < set(e.old_binding)
+    assert cl.active[1].cp_degree == 1
+    # tokens conserved; moves donor/receiver-disjoint; nothing stranded
+    assert sum(cl.page_table.shard_tokens(1).values()) == total
+    srcs = {s for s, _, n in e.moves if n}
+    dsts = {d for _, d, n in e.moves if n}
+    assert not (srcs & dsts)
+    assert all(v == 0 for v in cl.page_table.fragmented_frames(1).values())
+
+
+def test_relax_respects_escalation_cooldown():
+    """A freshly escalated request must sit out the cooldown window before
+    it may relax (escalate<->relax hysteresis) — even when a relax is
+    already feasible."""
+    cl, sched = _pressure_then_release(relax_cooldown=4)
+    cl.finish(cl.active[0])
+    # re-arm the cooldown as if the escalation JUST happened
+    sched._cooldown[1] = sched.relax_cooldown
+    waits = 0
+    while not sched.schedule(cl).relaxations:
+        waits += 1
+        assert waits < 10, "cooldown never expired"
+    assert waits >= 1                              # at least one pass blocked
+    assert cl.active[1].cp_degree == 1
+
+
+def test_relax_force_overrides_cooldown_not_guard():
+    """force=True (engine compact()) ignores the cooldown but keeps the
+    guard band: a receiver at/below low+guard still refuses the KV."""
+    cl, sched = _pressure_then_release()
+    cl.finish(cl.active[0])
+    sched._cooldown[1] = 99
+    assert sched.schedule(cl).relaxations == []    # cooldown blocks
+    recs = sched.relax(cl, force=True)             # compact path
+    assert len(recs) == 1 and recs[0].rid == 1
+    assert cl.active[1].cp_degree == 1
+
+
+def test_relax_growth_aware_guard():
+    """A still-growing request does NOT relax (its remaining decode would
+    just re-trigger the escalation); once growth completes, it does."""
+    cl, sched = _pressure_then_release()
+    req = cl.active[1]
+    cl.finish(cl.active[0])
+    req.max_new_tokens += 300                      # lots of growth remaining
+    for _ in range(6):
+        assert sched.schedule(cl).relaxations == []
+    req.max_new_tokens = req.generated             # growth done
+    recs = []
+    for _ in range(4):
+        recs += sched.schedule(cl).relaxations
+    assert len(recs) == 1 and cl.active[1].cp_degree == 1
+
+
+def test_relax_guard_band_blocks_refill():
+    """No relax when pulling the KV home would leave the receiver at or
+    below low_water + guard — the escalation trigger would re-fire."""
+    cl, sched = _pressure_then_release()
+    cl.finish(cl.active[0])
+    # background load pins instance headrooms at the guard band
+    for s in range(2):
+        free = cl.kv_headroom(s)
+        pin = free - (sched._low_water(cl) + sched._relax_guard(cl))
+        if pin > 0:
+            cl.page_table.allocate(100 + s, {s: pin})
+    for _ in range(6):
+        assert sched.schedule(cl).relaxations == []
+    assert cl.active[1].cp_degree == 2
+
+
+def test_relax_never_below_bucket_degree():
+    """De-escalation stops AT the profiled bucket degree (the cost gate):
+    a request whose length warrants degree 2 keeps degree 2."""
+    cl = mk_cluster(I=4, W=4, cap=4096, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(32,), degrees=(1, 2)), kv_reserve=16)
+    cl.enqueue(Request(rid=0, prompt_len=100, max_new_tokens=0))
+    sched.schedule(cl)
+    assert cl.active[0].cp_degree == 2
+    recs = sched.relax(cl, force=True)
+    assert all(len(r.new_binding) >= 2 for r in recs)
+    assert cl.active[0].cp_degree == 2
+
+
+def test_relax_retracts_cross_node_members_first():
+    """Retraction order is the MIRROR of PR 4's recruitment order: the
+    remote-node member leaves the binding before any widen-node member."""
+    cl = mk_cluster(I=4, W=2, cap=4096, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=16)
+    pt = cl.page_table
+    pt.allocate(0, {0: 64, 1: 64, 2: 64})          # spans both nodes
+    req = Request(rid=0, prompt_len=192, max_new_tokens=0, status="running")
+    req.kv_binding, req.moe_binding, req.node = [0, 1, 2], 0, 0
+    cl.active[0] = req
+    # cap the home receivers so only ONE member can retract per pass:
+    # the cross-node member (instance 2) must be the one that leaves first
+    for s in (0, 1):
+        pin = cl.kv_headroom(s) - (sched._low_water(cl)
+                                   + sched._relax_guard(cl) + 64)
+        pt.allocate(100 + s, {s: pin})
+    recs = sched.relax(cl, force=True)
+    assert len(recs) == 1
+    assert 2 not in recs[0].new_binding, recs[0]
+    assert set(recs[0].new_binding) == {0, 1}
+    assert len(cl.binding_nodes(req.kv_binding)) == 1
+
+
+def test_consolidate_tail_pages_onto_moe_binding():
+    """Fragmented partial tails strewn across donors consolidate back onto
+    the MoE-binding shard, reclaiming whole donor frames (cost-gated on a
+    NET frame gain)."""
+    cl = mk_cluster(I=4, W=4, cap=4096, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(8,), degrees=(1, 3)), kv_reserve=16)
+    pt = cl.page_table
+    # degree 3 is the bucket degree (len 300 > 8): no de-escalation applies;
+    # members 1 and 2 each hold a partial tail (3 tokens) past full pages
+    pt.allocate(0, {0: 226, 1: 35, 2: 35})
+    req = Request(rid=0, prompt_len=296, max_new_tokens=0, status="running")
+    req.kv_binding, req.moe_binding, req.node = [0, 1, 2], 0, 0
+    cl.active[0] = req
+    frames_before = pt.total_free_frames()
+    recs = sched.relax(cl, force=True)
+    assert len(recs) == 1 and recs[0].reason == "consolidate"
+    assert sorted(recs[0].moves) == [(1, 0, 3), (2, 0, 3)]
+    # two donor frames freed, zero new frames on m (tail slack absorbed it)
+    assert pt.total_free_frames() == frames_before + 2
+    assert pt.shard_tokens(0) == {0: 232, 1: 32, 2: 32}
+    assert req.kv_binding == [0, 1, 2]              # degree preserved
+    # idempotent: nothing fragmented remains
+    assert sched.relax(cl, force=True) == []
+
+
+def test_consolidate_cost_gate_requires_net_frame_gain():
+    """Moving a tail that makes the receiver allocate as many frames as the
+    donors free is pure churn — the cost gate refuses it."""
+    cl = mk_cluster(I=4, W=4, cap=4096, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(8,), degrees=(1, 2)), kv_reserve=16)
+    pt = cl.page_table
+    # m's pages are exactly full (no tail slack): absorbing the donor's
+    # 15-token tail would allocate one frame on m while freeing one on the
+    # donor — net 0, refused
+    pt.allocate(0, {0: 64, 1: 47})
+    req = Request(rid=0, prompt_len=111, max_new_tokens=0, status="running")
+    req.kv_binding, req.moe_binding, req.node = [0, 1], 0, 0
+    cl.active[0] = req
+    assert sched.relax(cl, force=True) == []
+
+
+def test_relax_disabled_flags():
+    cl, _ = _pressure_then_release()
+    cl.finish(cl.active[0])
+    for kw in ({"allow_relaxation": False}, {"allow_escalation": False},
+               {"has_kv": False}):
+        sched2 = DualBalancedScheduler(
+            buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), **kw)
+        assert sched2.relax(cl, force=True) == []
+
+
+# --------------------------------------------------------------------------- #
+# simulator: relaxation cost is charged
+# --------------------------------------------------------------------------- #
+def test_simulator_charges_relaxation():
+    from repro.configs import get_config
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import TraceRequest, Workload
+
+    cfg = get_config("deepseek-v3")
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=64)
+    sim = ClusterSimulator(cfg, sched, num_instances=4, instances_per_node=4,
+                           kv_capacity_tokens=7_680, page_size=64)
+    # four big short-lived requests pressure one long-lived small one into
+    # an escalation; when they finish, the survivor relaxes back.  The
+    # long-lived one is rid 0 so its co-resident pressure escalates IT.
+    wl = Workload("burst-then-drain",
+                  [TraceRequest(0, 0.0, 1_500, 600)]
+                  + [TraceRequest(r, 0.001 * r, 6_000, 120)
+                     for r in range(1, 5)])
+    res = sim.run(wl, horizon=600.0)
+    assert res.escalations > 0
+    assert res.relaxations > 0
+    assert res.relaxed_tokens > 0
+    assert res.relax_time > 0
+    assert res.relax_time <= res.reshard_time       # relax is a share of it
+    assert res.oom_finishes == 0
+
+
+def test_latency_model_relax_breakeven():
+    from repro.configs import CONFIGS
+    from repro.serving.latency_model import LatencyModel
+    lm = LatencyModel(CONFIGS["tinyllama-1.1b"])
+    # removing rounds pays back; pure defrag (0 rounds saved) never does
+    be = lm.relax_breakeven_steps(1_024, rounds_saved=2)
+    assert 0 < be < float("inf")
+    assert lm.relax_breakeven_steps(1_024, rounds_saved=0) == float("inf")
+    # cross-node rounds are costlier to keep: retracting them breaks even
+    # sooner per token than intra-node ones
+    assert lm.relax_breakeven_steps(1_024, 2, inter=True) < be
+    # monotone in tokens moved
+    assert lm.relax_breakeven_steps(4_096, 2) > lm.relax_breakeven_steps(512, 2)
+
+
+# --------------------------------------------------------------------------- #
 # waterfill sanity for the escalation planner
 # --------------------------------------------------------------------------- #
 def test_waterfill_respects_caps_for_moves():

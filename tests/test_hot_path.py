@@ -223,6 +223,36 @@ def test_ssm_engine_prefill_scatter_e2e():
 
 
 # --------------------------------------------------------------------------- #
+# AOT R quantisation: node-aware ladder vs legacy pow2
+# --------------------------------------------------------------------------- #
+def test_quantise_r_ladder_node_local_bucket():
+    """With the engine's topology-aware R ladder, a step whose bindings
+    stay (or relaxed back to) node-local compiles 2(W_node-1) rotation
+    rounds — the legacy pow2 ladder jumps straight to the cluster ring."""
+    from repro.core.aot import AOTGraphEngine
+    from repro.core.comm import node_local_rounds
+    from repro.serving.engine import NanoCPEngine
+    builder = lambda key: (_ for _ in ()).throw(RuntimeError)  # noqa: E731
+    I, W = 8, 4                                  # two-node topology
+    assert node_local_rounds(W) == 6
+    legacy = AOTGraphEngine(builder)
+    aware = AOTGraphEngine(builder, r_ladder=NanoCPEngine._r_ladder(I, W))
+    assert aware.r_ladder == (1, 2, 4, 6, 7)
+    # node-local worst case (R=5 or 6): pow2 pays the full ring, the
+    # ladder pays the node bound
+    for R in (5, 6):
+        assert legacy.quantise(4, 1, 8, I, R)[-1] == 7
+        assert aware.quantise(4, 1, 8, I, R)[-1] == 6
+    # everything else matches the legacy behavior
+    assert aware.quantise(4, 1, 8, I, 1)[-1] == 1
+    assert aware.quantise(4, 1, 8, I, 3)[-1] == 4
+    assert aware.quantise(4, 1, 8, I, 7)[-1] == 7
+    assert aware.quantise(4, 0, 8, I, 7)[-1] == 0      # S=0: no collectives
+    # single-instance topologies have no ladder at all
+    assert NanoCPEngine._r_ladder(1, 1) is None
+
+
+# --------------------------------------------------------------------------- #
 # donation audit: copy-on-donate detection + every-step debug mode
 # --------------------------------------------------------------------------- #
 def test_note_donation_detects_copy_on_donate():

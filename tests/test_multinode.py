@@ -306,6 +306,56 @@ def test_simulator_cross_node_accounting():
     assert cold.cross_escalated_tokens == 0
 
 
+def test_relax_retraction_mirrors_recruitment_order():
+    """INVARIANT: the relax retraction order is the mirror of the
+    hierarchical recruitment order — with both a cross-node and a
+    widen-node member retractable, the cross-node one leaves first even
+    when it holds MORE resident KV."""
+    cl = mk_cluster(I=4, W=2, cap=4096, page=16)
+    sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,),
+                                                    degrees=(1, 2)))
+    pt = cl.page_table
+    pt.allocate(0, {0: 32, 1: 16, 2: 48})          # remote member 2: most KV
+    req = Request(rid=0, prompt_len=96, max_new_tokens=0, status="running")
+    req.kv_binding, req.moe_binding, req.node = [0, 1, 2], 0, 0
+    cl.active[0] = req
+    # allow only ONE retraction per pass: pin receiver headroom (in whole
+    # frames) so retracting BOTH candidates (64 tokens) cannot fit but the
+    # remote one's 48 can — guard band is 2 frames, so leave 4 free on the
+    # MoE shard (head 32) and 3 on the home member (head 16)
+    pt.allocate(100, {0: (pt.free_frames(0) - 4) * 16})
+    pt.allocate(101, {1: (pt.free_frames(1) - 3) * 16})
+    recs = sched.relax(cl, force=True)
+    assert len(recs) == 1
+    assert 2 not in recs[0].new_binding, recs[0]    # remote retracted first
+    assert 1 in recs[0].new_binding                 # home member kept
+
+
+def test_simulator_reclaims_cross_bindings():
+    """Multi-node burst-then-drain: escalations push a long-lived request
+    across the node boundary; once the burst finishes, SimResult records
+    the relaxation pulling it back (reclaimed_cross_bindings)."""
+    from repro.configs import get_config
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import TraceRequest, Workload
+
+    cfg = get_config("deepseek-v3")
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100_000,), degrees=(1, 2)), kv_reserve=64)
+    sim = ClusterSimulator(cfg, sched, num_instances=4, instances_per_node=2,
+                           kv_capacity_tokens=7_040, page_size=64)
+    wl = Workload("cross-burst",
+                  [TraceRequest(0, 0.0, 1_500, 600)]
+                  + [TraceRequest(r, 0.001 * r, 6_000, 250)
+                     for r in range(1, 5)])
+    res = sim.run(wl, horizon=600.0)
+    assert res.cross_bindings > 0                  # the burst crossed nodes
+    assert res.relaxations > 0
+    assert res.reclaimed_cross_bindings > 0        # ...and came back
+    assert res.relaxed_tokens > 0 and res.relax_time > 0
+    assert res.oom_finishes == 0
+
+
 def test_simulator_single_node_has_no_cross_costs():
     from repro.configs import get_config
     from repro.serving.simulator import ClusterSimulator

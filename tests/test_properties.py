@@ -138,8 +138,79 @@ def test_group_by_expert_invariants(T, k, E, seed):
 
 
 # --------------------------------------------------------------------------- #
-# head-grouped / striped KV layout (tp < Hkv and tp > Hkv; core/dcp.py)
+# escalate -> relax round trip (scheduler + page table, host-side)
 # --------------------------------------------------------------------------- #
+@SET
+@given(st.sampled_from([(2, 2), (4, 2), (4, 4), (8, 4)]),
+       st.integers(8, 24),            # frames per instance
+       st.integers(1, 3),             # forced escalations
+       st.data())
+def test_escalate_relax_round_trip(topo, frames, n_escal, data):
+    """Any escalate->relax round trip preserves per-request token placement
+    validity (tokens conserved, binding == shards actually held, frames ==
+    pages needed — no stranded pages) and restores the request's rotation
+    rounds to <= the pre-escalation value."""
+    from repro.core.comm import ring_round
+    from repro.core.scheduler import DualBalancedScheduler
+    from repro.core.state import ClusterState, Request
+
+    I, W = topo
+    page = 16
+    cap = frames * page
+    cl = ClusterState(num_instances=I, instances_per_node=W,
+                      kv_capacity_tokens=cap, page_size=page)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(10 ** 9,), degrees=(1, 2)), kv_reserve=page)
+    # footprint bounded so full retraction is always guard-feasible:
+    # cap - footprint >= low + guard + one page
+    prompt = data.draw(st.integers(1, max(cap - 3 * page - 8, 1)))
+    growth = data.draw(st.integers(0, cap - 3 * page - prompt))
+    cl.enqueue(Request(rid=0, prompt_len=prompt, max_new_tokens=growth))
+    plan = sched.schedule(cl)
+    assert len(plan.admitted) == 1
+    req = cl.active[0]
+    pt = cl.page_table
+    m = req.moe_binding
+
+    def rounds_of():
+        return max((ring_round(s - m, cl.window) for s in req.kv_binding),
+                   default=0)
+
+    def check_validity():
+        shards = pt.shard_tokens(0)
+        assert sum(shards.values()) == prompt + req.generated
+        holders = {s for s, t in shards.items() if t > 0}
+        assert holders <= set(req.kv_binding)
+        assert m in req.kv_binding
+        assert all(v == 0 for v in pt.fragmented_frames(0).values())
+        total_frames = sum(len(pt.shard_frames(0, s))
+                           for s in range(I)) + sum(
+            pt.free_frames(s) for s in range(I))
+        assert total_frames == I * frames
+
+    r_pre = rounds_of()
+    assert r_pre == 0                               # degree-1 admission
+    # interleave decode appends with FORCED escalations (the spill-relief
+    # path widens the binding deterministically, no organic pressure needed)
+    for _ in range(n_escal):
+        for _ in range(data.draw(st.integers(0, max(growth // n_escal, 0)))):
+            if req.generated < growth:
+                pt.append_token(0, m)
+                req.generated += 1
+        if pt.shard_tokens(0).get(m, 0) > 0:
+            sched.relieve_spill(cl, 0, m)
+        check_validity()
+    # growth finishes; relax passes run until quiescent
+    req.max_new_tokens = req.generated
+    for _ in range(6):
+        if not sched.relax(cl, force=True):
+            break
+        check_validity()
+    assert sched.relax(cl, force=True) == []        # quiescent
+    check_validity()
+    # full retraction: binding back to the bucket degree, rounds restored
+    assert req.kv_binding == [m]
+    assert rounds_of() <= r_pre
 @SET
 @given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4),
        st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4))

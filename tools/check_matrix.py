@@ -1,0 +1,142 @@
+"""CI shard-coverage gate: every conformance cell in EXACTLY one shard.
+
+The conformance job shards `pytest -m conformance` across a strategy.matrix
+of ``-k`` expressions (.github/workflows/ci.yml).  That partition used to be
+verified by hand ("6+8+8+6=28") — which silently rots: a new cell whose name
+matches no shard expression simply never runs in CI, and a cell matching two
+shards burns double budget and double-reports.
+
+This tool re-derives the partition on every run:
+
+  1. collects the current ``-m conformance`` cell ids via
+     ``pytest --collect-only``,
+  2. extracts the shard ``-k`` expressions from the workflow file,
+  3. evaluates each expression against each cell (pytest keyword
+     semantics: and/or/not over substring matches) and FAILS unless every
+     cell is covered exactly once and every shard is non-empty.
+
+Runs as a tier-1 test (tests/test_ci_tools.py) and as its own CI step, so
+the build breaks the moment a cell falls out of — or doubles up in — the
+matrix.
+
+  PYTHONPATH=src python tools/check_matrix.py [--workflow PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+_TOKEN = re.compile(r"\(|\)|\w+")
+_KEYWORDS = {"and", "or", "not"}
+
+
+def parse_shards(workflow_path: str) -> list[tuple[str, str]]:
+    """[(group, -k expression)] from the conformance strategy.matrix."""
+    with open(workflow_path) as f:
+        text = f.read()
+    shards = re.findall(
+        r"-\s+group:\s*(\S+)\s*\n\s*expr:\s*\"([^\"]+)\"", text)
+    if not shards:
+        raise SystemExit(
+            f"no `- group:/expr:` matrix entries found in {workflow_path} — "
+            f"did the conformance job layout change?")
+    return shards
+
+
+def collect_cells(repo: str = REPO) -> list[str]:
+    """Current conformance cell nodeids, via pytest's own collector.
+
+    Collects over the WHOLE tests/ tree (not just test_conformance.py) so a
+    ``conformance``-marked cell added in any other file is still covered by
+    the exactly-once check — the CI shard commands collect the same way."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-m", "conformance", os.path.join(repo, "tests")],
+        capture_output=True, text=True, cwd=repo, env=env)
+    cells = [ln.strip() for ln in proc.stdout.splitlines()
+             if "::" in ln and not ln.startswith("=")]
+    if proc.returncode not in (0,) or not cells:
+        raise SystemExit(
+            f"pytest collection failed (rc={proc.returncode}) or found no "
+            f"conformance cells:\n{proc.stdout[-2000:]}\n"
+            f"{proc.stderr[-2000:]}")
+    return cells
+
+
+def match_k(expr: str, nodeid: str) -> bool:
+    """Evaluate a pytest ``-k`` expression against a cell nodeid.
+
+    pytest's keyword grammar: and/or/not/parentheses over bare identifiers,
+    each matching as a substring of the test name + parametrisation id.
+    The shard expressions only use word identifiers, so substring-in-nodeid
+    reproduces pytest's selection for them exactly (pinned by the tier-1
+    test comparing against pytest's own ``--collect-only -k`` output).
+    """
+    name = nodeid.split("::", 1)[-1]
+    py = []
+    for tok in _TOKEN.findall(expr):
+        if tok in _KEYWORDS or tok in "()":
+            py.append(tok)
+        else:
+            py.append(repr(tok) + " in " + repr(name))
+    try:
+        return bool(eval(" ".join(py), {"__builtins__": {}}, {}))
+    except SyntaxError:
+        raise SystemExit(f"unparsable -k expression: {expr!r}")
+
+
+def check(shards: list[tuple[str, str]], cells: list[str]) -> list[str]:
+    """Exactly-once partition check; returns human-readable violations."""
+    problems = []
+    per_shard = {g: [] for g, _ in shards}
+    for cell in cells:
+        owners = [g for g, expr in shards if match_k(expr, cell)]
+        for g in owners:
+            per_shard[g].append(cell)
+        if not owners:
+            problems.append(f"UNCOVERED: {cell} matches no shard expression")
+        elif len(owners) > 1:
+            problems.append(
+                f"DOUBLE-COVERED: {cell} matches shards {owners}")
+    for g, owned in per_shard.items():
+        if not owned:
+            problems.append(
+                f"EMPTY SHARD: group '{g}' selects no conformance cell")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workflow", default=WORKFLOW)
+    args = ap.parse_args(argv)
+    shards = parse_shards(args.workflow)
+    cells = collect_cells()
+    problems = check(shards, cells)
+    counts = {g: sum(1 for c in cells if match_k(e, c)) for g, e in shards}
+    total = sum(counts.values())
+    print(f"conformance cells: {len(cells)}; shard partition: "
+          + " + ".join(f"{g}={n}" for g, n in counts.items())
+          + f" = {total}")
+    if problems:
+        print("\nCI shard coverage check FAILED:")
+        for p in problems:
+            print(f"  {p}")
+        print("\n(fix the strategy.matrix -k expressions in "
+              f"{args.workflow} so every `-m conformance` cell runs in "
+              f"exactly one shard)")
+        return 1
+    print("CI shard coverage: every cell in exactly one shard — OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,35 +4,76 @@ Each CI shard uploads its own ``conformance-junit-<group>.xml``; the merge
 job concatenates every <testsuite> under a single <testsuites> root with
 aggregated counts, so downstream tooling sees ONE report for the matrix.
 
+Defensive by design: a shard that crashed before pytest wrote its report
+leaves a MISSING or zero-byte file, and a shard whose ``-k`` expression
+selects nothing produces a suite with ``tests="0"`` — all three used to
+either crash this script with a bare ``ParseError`` or slip through as a
+"successful" merge of nothing.  Now every input problem is collected, the
+merged XML of the healthy shards is STILL written (always valid XML), and
+the job fails with one clear message listing exactly which shard broke.
+
   python tools/merge_junit.py OUT.xml IN1.xml [IN2.xml ...]
 """
 from __future__ import annotations
 
+import os
 import sys
 import xml.etree.ElementTree as ET
 
 
-def main(out_path: str, in_paths: list[str]) -> int:
+def merge(out_path: str, in_paths: list[str]) -> tuple[dict, list[str]]:
+    """Merge what can be merged; returns (totals, problems).  The merged
+    file is always written and always valid XML."""
     root = ET.Element("testsuites")
     totals = {"tests": 0, "failures": 0, "errors": 0, "skipped": 0}
     time_total = 0.0
+    problems = []
     for path in in_paths:
-        tree = ET.parse(path)
+        if not os.path.exists(path):
+            problems.append(f"{path}: missing (shard crashed before "
+                            f"pytest wrote its junit report?)")
+            continue
+        if os.path.getsize(path) == 0:
+            problems.append(f"{path}: zero-byte file (shard killed "
+                            f"mid-write?)")
+            continue
+        try:
+            tree = ET.parse(path)
+        except ET.ParseError as e:
+            problems.append(f"{path}: invalid XML ({e})")
+            continue
         r = tree.getroot()
         suites = [r] if r.tag == "testsuite" else list(r)
+        n_tests = 0
         for suite in suites:
             root.append(suite)
             for k in totals:
                 totals[k] += int(suite.get(k, 0) or 0)
+            n_tests += int(suite.get("tests", 0) or 0)
             time_total += float(suite.get("time", 0) or 0)
+        if n_tests == 0:
+            problems.append(
+                f"{path}: shard ran ZERO tests — its -k expression selects "
+                f"nothing (see tools/check_matrix.py)")
     for k, v in totals.items():
         root.set(k, str(v))
     root.set("time", f"{time_total:.3f}")
     ET.ElementTree(root).write(out_path, encoding="utf-8",
                                xml_declaration=True)
+    return totals, problems
+
+
+def main(out_path: str, in_paths: list[str]) -> int:
+    totals, problems = merge(out_path, in_paths)
     print(f"merged {len(in_paths)} junit files -> {out_path} "
           f"({totals['tests']} tests, {totals['failures']} failures, "
           f"{totals['errors']} errors)")
+    if problems:
+        print("\njunit merge FAILED (merged report of the healthy shards "
+              "was still written):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
     return 1 if (totals["failures"] or totals["errors"]) else 0
 
 
