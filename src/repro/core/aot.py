@@ -147,6 +147,11 @@ class AOTGraphEngine:
     def num_graphs(self) -> int:
         return len(self._cache)
 
+    def cached_keys(self) -> list:
+        """The captured bucket keys (elastic-join pre-warm enumerates these
+        to compile their wider-ring variants off the hot path)."""
+        return list(self._cache.keys())
+
     # ---------------- donation accounting ----------------
     @staticmethod
     def buffer_ptrs(tree) -> list:

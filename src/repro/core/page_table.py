@@ -106,6 +106,14 @@ class GlobalPageTable:
     # rid at the top level so request teardown drops every cached view,
     # including zero-frame shards that never entered _frames_by_shard.
     _frames_np: dict = field(default_factory=dict)
+    # rid -> {instance: [[start, len], ...]} — ABSOLUTE token-position ranges
+    # (0-based over the request's full context) held by each shard, in the
+    # shard's fill order.  Decode attention is position-agnostic past the
+    # LSE merge, so the hot path never reads this; it exists so an abrupt
+    # instance failure can report the EXACT positions that died with the
+    # instance (``drop_instance``) for a partial-shard re-prefill
+    # (``restore_ranges``) — surviving shards untouched.
+    _ranges: dict = field(default_factory=dict)
 
     def __post_init__(self):
         self.pools = [FramePool(i, self.frames_per_instance, self.stripes)
@@ -142,6 +150,13 @@ class GlobalPageTable:
         self._frames_by_shard[rid] = by_shard
         for s_, t in shard_fill.items():
             self._used[s_] += t
+        # positions: shard s holds the contiguous prefix range assigned by
+        # migrate.shard_ranges/prefill_coords — sorted-instance order
+        ranges, start = {}, 0
+        for s_ in sorted(shard_fill):
+            ranges[s_] = [[start, shard_fill[s_]]]
+            start += shard_fill[s_]
+        self._ranges[rid] = ranges
 
     def append_needs_frame(self, rid: int, instance: int) -> bool:
         """Whether the next ``append_token(rid, instance)`` must grow a page."""
@@ -172,7 +187,39 @@ class GlobalPageTable:
         offset = used % self.page_size
         shard_fill[instance] = used + 1
         self._used[instance] += 1
+        # the appended token's absolute position is the request's total fill
+        pos = sum(shard_fill.values()) - 1
+        rr = self._ranges.setdefault(rid, {}).setdefault(instance, [])
+        if rr and rr[-1][0] + rr[-1][1] == pos:
+            rr[-1][1] += 1
+        else:
+            rr.append([pos, 1])
         return frame, offset
+
+    def pop_token(self, rid: int, instance: int) -> None:
+        """Roll back the MOST RECENT ``append_token(rid, instance)`` — the
+        in-flight-discard path: a failure between dispatch and harvest voids
+        the iteration, so the KV slot appended for its input token must be
+        un-reserved before the failure accounting runs (the next dispatch
+        re-appends the same token at the same position).  Frees the tail
+        frame if the pop fully vacates it."""
+        shard_fill = self._last_fill[rid]
+        used = shard_fill.get(instance, 0)
+        assert used > 0, (rid, instance, "pop_token on empty shard")
+        shard_fill[instance] = used - 1
+        self._used[instance] -= 1
+        rr = self._ranges[rid][instance]
+        rr[-1][1] -= 1
+        if rr[-1][1] == 0:
+            rr.pop()
+        if not rr:
+            del self._ranges[rid][instance]
+        frames = self._frames_by_shard[rid][instance]
+        if len(frames) > self.pages_needed(used - 1):
+            f = frames.pop()
+            self.pools[instance].free([f])
+            self._pages[rid].remove((instance, f))
+            self._frames_np.get(rid, {}).pop(instance, None)
 
     def move_pages(self, rid: int, moves) -> tuple["np.ndarray", "np.ndarray"]:
         """Re-shard bookkeeping: move KV tokens of ``rid`` between instances.
@@ -239,6 +286,28 @@ class GlobalPageTable:
             shard_fill[dst] = used_d + n
             self._used[src] -= n
             self._used[dst] += n
+            # position bookkeeping: the moved tail's position ranges leave
+            # the source's tail and append to the destination in fill order
+            rmap = self._ranges.setdefault(rid, {})
+            rr_s = rmap.get(src, [])
+            taken, need = [], n
+            while need > 0:
+                st, ln = rr_s[-1]
+                take = min(ln, need)
+                if take == ln:
+                    rr_s.pop()
+                else:
+                    rr_s[-1][1] = ln - take
+                taken.append([st + ln - take, take])
+                need -= take
+            if not rr_s:
+                rmap.pop(src, None)
+            rr_d = rmap.setdefault(dst, [])
+            for st, ln in reversed(taken):
+                if rr_d and rr_d[-1][0] + rr_d[-1][1] == st:
+                    rr_d[-1][1] += ln
+                else:
+                    rr_d.append([st, ln])
         if not s_cols:
             z = np.zeros((3, 0), np.int32)
             return z, z
@@ -252,6 +321,7 @@ class GlobalPageTable:
             self._used[s] -= t
         self._frames_by_shard.pop(rid, None)
         self._frames_np.pop(rid, None)
+        self._ranges.pop(rid, None)
 
     # ---------------- queries ----------------
     def shard_tokens(self, rid: int) -> dict[int, int]:
@@ -301,20 +371,139 @@ class GlobalPageTable:
     def total_free_frames(self) -> int:
         return sum(p.free_frames for p in self.pools)
 
-    def drop_instance(self, instance: int) -> list[int]:
-        """Instance failure: drop its frames; returns affected request ids
-        (their KV is incomplete and they must be re-prefetched/re-prefilled)."""
-        affected = [rid for rid, pages in self._pages.items()
-                    if any(s == instance for s, _ in pages)]
-        for rid in affected:
-            self.free_request(rid)
+    def request_positions(self, rid: int) -> dict[int, list]:
+        """instance -> [(start, len), ...] absolute token-position ranges the
+        request's KV occupies on each shard (fill order).  The union across
+        shards partitions [0, total_resident) for an intact request; after a
+        partial drop, the holes are exactly the lost ranges."""
+        return {s: [tuple(r) for r in rr]
+                for s, rr in self._ranges.get(rid, {}).items() if rr}
+
+    def frame_audit(self) -> dict[int, tuple[int, int]]:
+        """instance -> (free_frames, held_frames): the leak check.  For every
+        alive instance free+held must equal ``frames_per_instance``; a dead
+        (drained) instance must show (0, 0) — any other total is a leaked or
+        aliased frame."""
+        held = [0] * self.num_instances
+        for pages in self._pages.values():
+            for s, _ in pages:
+                held[s] += 1
+        return {s: (self.pools[s].free_frames, held[s])
+                for s in range(self.num_instances)}
+
+    def drop_instance(self, instance: int) -> dict[int, list]:
+        """Abrupt instance failure: PARTIAL-SHARD drop.  Frees ONLY the dead
+        instance's frames — surviving shards stay untouched — and returns
+        ``{rid: [(start, len), ...]}``: the exact absolute token-position
+        ranges whose KV died with the instance, i.e. the ranges a recovery
+        re-prefill (``restore_ranges``) must replay.  The instance's pool is
+        replaced and drained so nothing allocates there until
+        ``join_instance`` brings it back."""
+        lost = {}
+        for rid, pages in self._pages.items():
+            fill = self._last_fill.get(rid, {})
+            t = fill.pop(instance, None)
+            ranges = self._ranges.get(rid, {}).pop(instance, None)
+            dropped = self._frames_by_shard.get(rid, {}).pop(instance, None)
+            if t is None and not dropped:
+                continue
+            if t:
+                lost[rid] = [tuple(r) for r in (ranges or [])]
+                assert sum(l for _, l in lost[rid]) == t, (rid, t, ranges)
+            self._frames_np.pop(rid, None)
+            self._pages[rid] = [(s, f) for s, f in pages if s != instance]
         self._used[instance] = 0
         self.pools[instance] = FramePool(instance, self.frames_per_instance,
                                          self.stripes)
         # mark the dead instance's pool as empty so nothing allocates there
         self.pools[instance].drain()
-        return affected
+        return lost
 
-    def restore_instance(self, instance: int) -> None:
+    def restore_ranges(self, rid: int, split: dict[int, int],
+                       ranges) -> tuple["np.ndarray", "np.ndarray"]:
+        """Failure recovery: re-home the lost absolute-position ``ranges``
+        onto the alive shards per the replacement WaterFill ``split``
+        (instance -> tokens), appending to each shard's EXISTING fill —
+        surviving KV is never touched or re-read.
+
+        Returns ``(positions, coords)`` in matching token order: positions
+        int64 [T] (the absolute context positions to replay) and coords
+        int32 [3, T] (instance, frame, offset) — the scatter target for the
+        re-prefilled KV.  Positions are assigned to shards in sorted-instance
+        order.  Raises ``MemoryError`` if a shard cannot allocate (callers
+        plan against ``free_frames``/``shard_tail_slack``)."""
+        total = sum(l for _, l in ranges)
+        assert sum(split.values()) == total, (split, ranges)
+        if total == 0:
+            z = np.zeros(0, np.int64)
+            return z, np.zeros((3, 0), np.int32)
+        positions = np.concatenate(
+            [np.arange(st, st + ln) for st, ln in sorted(ranges)])
+        self._frames_np.pop(rid, None)
+        pages = self._pages.setdefault(rid, [])
+        by_shard = self._frames_by_shard.setdefault(rid, {})
+        fill = self._last_fill.setdefault(rid, {})
+        rmap = self._ranges.setdefault(rid, {})
+        page = self.page_size
+        cols, k = [], 0
+        for s in sorted(split):
+            t = split[s]
+            if t <= 0:
+                continue
+            used = fill.get(s, 0)
+            fr = by_shard.setdefault(s, [])
+            need = self.pages_needed(used + t) - len(fr)
+            if need > 0:
+                if self.pools[s].free_frames < need:
+                    raise MemoryError(
+                        f"recovery of request {rid}: instance {s} lacks "
+                        f"{need} frames")
+                new = self.pools[s].alloc(need)
+                pages.extend((s, f) for f in new)
+                fr.extend(new)
+            j = np.arange(used, used + t)
+            cols.append(np.stack([np.full(t, s),
+                                  np.asarray(fr)[j // page], j % page]))
+            rr = rmap.setdefault(s, [])
+            for p in positions[k:k + t]:
+                p = int(p)
+                if rr and rr[-1][0] + rr[-1][1] == p:
+                    rr[-1][1] += 1
+                else:
+                    rr.append([p, 1])
+            fill[s] = used + t
+            self._used[s] += t
+            k += t
+        coords = np.concatenate(cols, axis=1).astype(np.int32)
+        return positions, coords
+
+    def add_instance(self) -> int:
+        """Elastic growth: append a brand-new instance with a full pool."""
+        i = self.num_instances
+        self.num_instances += 1
+        self.pools.append(FramePool(i, self.frames_per_instance, self.stripes))
+        self._used.append(0)
+        return i
+
+    def join_instance(self, instance: int) -> None:
+        """Elastic (re)join: give the instance a FRESH, fully-free pool.
+
+        Guarded against frame aliasing: resetting the pool while ANY request
+        still maps frames on the instance would hand those frames out twice.
+        Failure (``drop_instance``) and drain both leave the instance
+        frame-free, so a legitimate join never trips this."""
+        held = [rid for rid, pages in self._pages.items()
+                if any(s == instance for s, _ in pages)]
+        if held:
+            raise RuntimeError(
+                f"join_instance({instance}): frames still mapped by "
+                f"requests {held} — joining would alias them")
+        self._used[instance] = 0
         self.pools[instance] = FramePool(instance, self.frames_per_instance,
                                          self.stripes)
+
+    def restore_instance(self, instance: int) -> None:
+        """Deprecated spelling of the elastic-join path.  Kept so old call
+        sites inherit the aliasing guard instead of the unconditional pool
+        reset they were written against."""
+        self.join_instance(instance)

@@ -105,6 +105,38 @@ class BaseScheduler:
         inverse of ``escalate``; same record contract)."""
         return []
 
+    def place_recovery(self, cluster: ClusterState, req: Request,
+                       tokens: int, ledger: dict | None = None):
+        """Replacement placement for ``tokens`` lost KV tokens of an ACTIVE
+        request after an instance failure (the partial-shard re-prefill
+        path).  Returns ``{instance: tokens}`` or None when the alive
+        cluster lacks headroom — the caller then degrades the request.
+        ``ledger``: optional shared {instance: free_frames} so a batch of
+        recoveries cannot jointly over-commit one pool.  The base policy
+        re-homes the lost tokens onto the single alive shard with the most
+        headroom inside the MoE binding's rotation-window segment."""
+        pt = cluster.page_table
+        page = pt.page_size
+        m = req.moe_binding
+        if m < 0 or tokens <= 0:
+            return None
+        if ledger is None:
+            ledger = {s: pt.free_frames(s) for s in cluster.alive_instances()}
+        win = cluster.window
+        best, best_cap = None, -1
+        for s in cluster.alive_instances():
+            if s // win != m // win:
+                continue
+            cap = ledger.get(s, 0) * page + pt.shard_tail_slack(req.rid, s)
+            if cap > best_cap:
+                best, best_cap = s, cap
+        if best is None or best_cap < tokens:
+            return None
+        slack = pt.shard_tail_slack(req.rid, best)
+        ledger[best] = ledger.get(best, 0) - pt.pages_needed(
+            max(tokens - slack, 0))
+        return {best: tokens}
+
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
         self.rebalance(cluster)
@@ -521,7 +553,8 @@ class DualBalancedScheduler(BaseScheduler):
                 return [esc]
         return []
 
-    def evacuate(self, cluster: ClusterState, instance: int) -> list:
+    def evacuate(self, cluster: ClusterState, instance: int,
+                 partial: bool = False) -> list:
         """Drain ``instance``: move every active request's resident KV off it
         (live re-shard, no data loss) and drop it from their bindings.  The
         caller marks the instance dead and lets ``rebalance`` move MoE
@@ -529,7 +562,13 @@ class DualBalancedScheduler(BaseScheduler):
         the page table UNTOUCHED (two-phase plan/apply — a mid-drain failure
         must not leave earlier requests' tables pointing at frames whose KV
         was never physically moved; callers that tolerate loss use
-        ``ClusterState.fail_instance`` instead)."""
+        ``ClusterState.fail_instance`` instead).
+
+        ``partial=True`` is the drain-deadline fallback: requests whose KV
+        cannot be evacuated are SKIPPED instead of aborting the drain, and
+        the return value becomes ``(records, straggler_rids)`` — the caller
+        applies fail-semantics (partial drop + recovery) to the stragglers
+        so the drain always completes."""
         pt = cluster.page_table
         page = pt.page_size
         # phase 1: plan every request's moves against a FRAME ledger (each
@@ -537,7 +576,7 @@ class DualBalancedScheduler(BaseScheduler):
         # consumed at page granularity — conservatively ceil per request)
         head_frames = {s: pt.free_frames(s)
                        for s in range(cluster.num_instances)}
-        plans = []
+        plans, stragglers = [], []
         for rid in sorted(cluster.active):
             req = cluster.active[rid]
             tokens_on = pt.shard_tokens(rid).get(instance, 0)
@@ -560,6 +599,9 @@ class DualBalancedScheduler(BaseScheduler):
                         members.append(s)
                         home_cap += head_frames[s] * page
                 if not members:
+                    if partial:
+                        stragglers.append(rid)
+                        continue
                     raise MemoryError(
                         f"evacuate({instance}): request {rid} has no "
                         f"surviving member to hold its KV")
@@ -569,6 +611,9 @@ class DualBalancedScheduler(BaseScheduler):
                 caps = np.array([head_frames[s] * page for s in members],
                                 np.float64)
                 if caps.sum() < tokens_on:
+                    if partial:
+                        stragglers.append(rid)
+                        continue
                     raise MemoryError(
                         f"evacuate({instance}): request {rid} needs "
                         f"{tokens_on} tokens, cluster headroom "
@@ -593,7 +638,61 @@ class DualBalancedScheduler(BaseScheduler):
             self._cooldown[req.rid] = self.relax_cooldown
             out.append(Escalation(req.rid, old, new_binding, moves, src, dst,
                                   reason="drain"))
+        if partial:
+            return out, stragglers
         return out
+
+    def place_recovery(self, cluster: ClusterState, req: Request,
+                       tokens: int, ledger: dict | None = None):
+        """NanoCP recovery placement (overrides the single-shard base
+        policy): WaterFill the lost tokens over the surviving home-node
+        members first, recruiting penalty-priced remote members of the same
+        rotation-window segment only for the overflow — the dead shard's
+        replacement stays node-local whenever the home node has headroom.
+        Receiver capacity counts the request's own partial tail pages on
+        surviving shards (``restore_ranges`` appends into that slack without
+        a frame alloc) plus the ledgered free frames."""
+        pt = cluster.page_table
+        page = pt.page_size
+        m = req.moe_binding
+        if m < 0 or m in cluster.dead_instances or tokens <= 0:
+            return None
+        if ledger is None:
+            ledger = {s: pt.free_frames(s) for s in cluster.alive_instances()}
+        node = cluster.node_of(m)
+        members = cluster.node_instances(node)
+        cands = list(members)
+        for s in self._remote_members(cluster, node):
+            if s not in cands:
+                cands.append(s)
+        if not cands:
+            return None
+        n_home = len(members)
+
+        def caps_of(reserve):
+            caps = np.array([ledger.get(s, 0) * page
+                             + pt.shard_tail_slack(req.rid, s)
+                             for s in cands], np.float64)
+            if m in cands:
+                mi = cands.index(m)
+                caps[mi] = max(caps[mi] - reserve, 0.0)
+            return caps
+
+        caps = caps_of(self.kv_reserve)
+        if caps.sum() < tokens:
+            # the growth reserve is a soft preference; a degraded finish is
+            # worse than a tight MoE shard, so retry without it
+            caps = caps_of(0)
+        if caps.sum() < tokens:
+            return None
+        loads = np.array([cluster.kv_load(s) for s in cands], np.float64)
+        loads[n_home:] += float(self._penalty(cluster))
+        split_arr = waterfill(loads, tokens, capacities=caps)
+        split = {s: int(t) for s, t in zip(cands, split_arr) if t > 0}
+        for s, t in split.items():
+            slack = pt.shard_tail_slack(req.rid, s)
+            ledger[s] = ledger.get(s, 0) - pt.pages_needed(max(t - slack, 0))
+        return split
 
     def _try_escalate(self, cluster: ClusterState, req: Request, low: int,
                       relieve: int | None = None):

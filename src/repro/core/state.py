@@ -52,6 +52,22 @@ class Request:
 
 
 @dataclass
+class FailureRecord:
+    """One affected ACTIVE request of an instance failure.
+
+    ``lost``: [(start, len)] absolute token-position ranges whose KV died
+    with the instance (empty when only the binding/slot was touched — or
+    when the request lost EVERYTHING, which the caller detects as zero
+    resident tokens).  ``slot_lost``: the request's decode slot / MoE
+    binding sat on the dead instance; ``ClusterState.fail_instance`` already
+    re-homed it onto a surviving binding member when one existed
+    (``req.moe_binding == -1`` means nothing survived)."""
+    req: "Request"
+    lost: list
+    slot_lost: bool
+
+
+@dataclass
 class ClusterState:
     """Unified view over instances, requests, and the global page table.
 
@@ -96,7 +112,9 @@ class ClusterState:
     # ---------------- topology ----------------
     @property
     def num_nodes(self) -> int:
-        return self.num_instances // self.instances_per_node
+        # ceil: elastic growth (``join_instance`` past the initial topology)
+        # may leave the last node partially populated
+        return -(-self.num_instances // self.instances_per_node)
 
     @property
     def window(self) -> int:
@@ -117,7 +135,8 @@ class ClusterState:
 
     def node_instances(self, node: int) -> list[int]:
         w = self.instances_per_node
-        return [i for i in range(node * w, (node + 1) * w)
+        return [i for i in range(node * w, min((node + 1) * w,
+                                               self.num_instances))
                 if i not in self.dead_instances]
 
     def alive_instances(self) -> list[int]:
@@ -184,27 +203,74 @@ class ClusterState:
         self.finished.append(req)
 
     def fail_instance(self, instance: int) -> list:
-        """Node-failure event: drop the instance, re-enqueue affected requests
-        (their KV shards are gone; they need re-prefill/migration).  Returns
-        the affected requests (now at the FRONT of the waiting queue)."""
+        """Abrupt instance failure: mark it dead, PARTIAL-drop its frames
+        (surviving shards untouched), prune it from every binding, and
+        re-home orphaned decode slots onto a surviving binding member.
+
+        Returns a ``FailureRecord`` per affected ACTIVE request.  Requests
+        stay active — nothing is silently re-enqueued; the caller (engine /
+        simulator) chooses the typed recovery path per record: partial-shard
+        re-prefill of the lost ranges into a replacement placement, or a
+        degraded finish when the cluster lacks headroom."""
         self.dead_instances.add(instance)
-        affected_ids = self.page_table.drop_instance(instance)
-        affected = []
-        for rid in affected_ids:
-            req = self.active.pop(rid, None)
-            self.free_slot(rid)
-            if req is None:
+        lost = self.page_table.drop_instance(instance)
+        records = []
+        for rid, req in self.active.items():
+            slot_lost = (self.slot_map.get(rid, (-1, -1))[0] == instance
+                         or req.moe_binding == instance)
+            ranges = lost.get(rid, [])
+            if not ranges and not slot_lost and instance not in req.kv_binding:
                 continue
-            req.status = "waiting"
-            req.kv_binding, req.moe_binding, req.node = [], -1, -1
-            affected.append(req)
-        for req in reversed(affected):
-            self.waiting.appendleft(req)
-        return affected
+            if instance in req.kv_binding:
+                req.kv_binding = [s for s in req.kv_binding if s != instance]
+            if slot_lost:
+                self.slot_map.pop(rid, None)
+                alive = [s for s in req.kv_binding
+                         if s not in self.dead_instances]
+                if alive:
+                    m = min(alive, key=self.kv_load)
+                    req.moe_binding = m
+                    req.node = self.node_of(m)
+                    self.move_slot(rid, m)
+                else:
+                    # nothing of the binding survived: full KV loss.  Pick a
+                    # fresh home so recovery has a valid MoE binding to plan
+                    # around (-1 only when the whole cluster is dead).
+                    cands = self.alive_instances()
+                    if cands:
+                        m = min(cands, key=self.kv_load)
+                        req.moe_binding = m
+                        req.node = self.node_of(m)
+                        req.kv_binding = [m]
+                        self.move_slot(rid, m)
+                    else:
+                        req.moe_binding, req.node = -1, -1
+                        req.kv_binding = []
+            records.append(FailureRecord(req, ranges, slot_lost))
+        return records
+
+    def join_instance(self, instance: int) -> None:
+        """Elastic scale-up / rejoin: the instance (re)enters the zig-zag
+        ring with a FRESH pool via the page table's aliasing-guarded join
+        path.  ``instance == num_instances`` GROWS the cluster by one
+        (host-side topologies — simulator and tests; an engine's mesh is
+        fixed at construction, so it only rejoins standby/failed members)."""
+        if instance == self.num_instances:
+            assert not self.routing_window, \
+                "cluster growth under a fixed routing window"
+            self.page_table.add_instance()
+            self.num_instances += 1
+            self.moe_batch = np.zeros(self.num_instances, dtype=np.int64)
+            return
+        assert 0 <= instance < self.num_instances, instance
+        self.dead_instances.discard(instance)
+        self.page_table.join_instance(instance)
 
     def recover_instance(self, instance: int) -> None:
-        self.dead_instances.discard(instance)
-        self.page_table.restore_instance(instance)
+        """Deprecated spelling of ``join_instance`` — routed through the
+        elastic-join path so a returning instance cannot alias frames still
+        referenced by in-flight recovery plans (the page-table guard)."""
+        self.join_instance(instance)
 
 
 @dataclass

@@ -55,7 +55,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..core import dcp, migrate, routing
 from ..core.aot import AOTGraphEngine
-from ..core.comm import node_local_rounds
+from ..core.comm import node_local_rounds, ring_round
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
 from ..core.page_table import KVSpillError
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
@@ -71,6 +71,20 @@ class GenResult:
     # True when the request was finished early by a clean request-level OOM
     # (KV spill with no shard headroom anywhere to escalate into)
     oom: bool = False
+    # failure-recovery outcome: None = never touched by an instance failure;
+    # True = affected and recovered (partial-shard re-prefill — final tokens
+    # match a from-scratch run); False = degraded finish (the cluster lacked
+    # headroom or the arch pins unrecoverable per-slot state — the request
+    # completed early with the tokens it had, never hanging)
+    recovered: bool | None = None
+
+
+class UnsupportedDrainError(RuntimeError):
+    """``drain_instance`` on an arch whose per-slot device state cannot be
+    migrated with the slot (SSM recurrent state, whisper's per-slot self-attn
+    caches): a graceful drain would silently corrupt the pinned state, so the
+    engine refuses with a typed error instead.  ``fail_instance`` remains
+    available (crash semantics: affected requests degrade cleanly)."""
 
 
 @dataclass
@@ -80,6 +94,11 @@ class _Inflight:
     # (rid, request, instance, slot, is_last) snapshot at dispatch time —
     # immune to later rebalancing/slot reuse
     slots: list
+    # rid -> frozenset of instances this iteration's computation touched for
+    # the request (KV shard holders + the slot instance) at dispatch time:
+    # the exact blast radius of an instance failure between dispatch and
+    # harvest — entries outside it harvest normally
+    holders: dict = field(default_factory=dict)
 
 
 class NanoCPEngine:
@@ -116,6 +135,7 @@ class NanoCPEngine:
         # caches) pins the slot dimension of the serve state: ONE fixed M
         # bucket and no MoE-binding rebalance
         pinned_slots = cfg.family in ("ssm", "hybrid") or self.is_encdec
+        self._pinned_slots = pinned_slots
         self.scheduler = scheduler or DualBalancedScheduler(
             buckets=buckets, allow_rebalance=not pinned_slots,
             max_batch_per_instance=max_slots_per_instance,
@@ -208,7 +228,9 @@ class NanoCPEngine:
             "steps": 0, "async_token_fetches": 0, "speculative_slots": 0,
             "prefill_eos_finishes": 0, "escalations": 0, "reshard_tokens": 0,
             "spill_escalations": 0, "oom_finishes": 0, "drains": 0,
-            "relaxations": 0, "relax_tokens": 0, "compacts": 0}
+            "relaxations": 0, "relax_tokens": 0, "compacts": 0,
+            "failures": 0, "recovered_tokens": 0, "reprefill_tokens": 0,
+            "degraded_finishes": 0, "joins": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -521,31 +543,268 @@ class NanoCPEngine:
         self.hot_path_stats["oom_finishes"] += 1
         return [req]
 
-    def drain_instance(self, instance: int) -> list:
+    def drain_instance(self, instance: int, force: bool = False) -> list:
         """Planned drain (live migration, zero data loss): evacuate every
         request's resident KV off ``instance`` through the re-shard
         collective, mark the instance dead, and rebalance MoE bindings off
-        it.  Unlike ``ClusterState.fail_instance`` (crash semantics: KV lost,
+        it.  Unlike ``fail_instance`` (crash semantics: KV lost, affected
         requests re-prefill), a drained instance's requests keep decoding
-        with unchanged tokens.  Requires a rebalance-able decode arch
-        (decoder-only attention; pinned-slot families cannot move their MoE
-        binding without a state migration)."""
-        assert self._append_tokens and self.scheduler.allow_rebalance, \
-            "drain needs a rebalance-able attention arch"
+        with unchanged tokens.
+
+        ``force=True`` is the drain-DEADLINE fallback: requests whose KV
+        cannot be evacuated gracefully take fail-semantics — their resident
+        KV on the instance is partial-dropped and recovered (re-prefill or
+        degraded finish) — so a forced drain ALWAYS completes with the
+        instance empty and dead.
+
+        Raises ``UnsupportedDrainError`` for archs whose per-slot device
+        state is pinned (SSM recurrent state, whisper self-attn caches) —
+        the slot cannot move without a state migration, so a graceful drain
+        is impossible; the refusal leaves the cluster untouched."""
+        if not (self._append_tokens
+                and getattr(self.scheduler, "allow_rebalance", True)):
+            raise UnsupportedDrainError(
+                f"drain_instance({instance}): {self.cfg.family}/"
+                f"{'encdec' if self.is_encdec else 'dec'} pins per-slot "
+                f"device state — the MoE binding cannot move without a slot "
+                f"state migration (use fail_instance for crash semantics)")
         # dead first so the evacuation planner never picks it as a receiver;
         # rolled back if the node lacks headroom (evacuate raises with the
         # page table untouched) — a failed drain must leave the instance
         # serving, not dead-with-resident-KV
         self.cluster.dead_instances.add(instance)
+        stragglers = []
         try:
-            escalations = self.scheduler.evacuate(self.cluster, instance)
+            if force:
+                escalations, stragglers = self.scheduler.evacuate(
+                    self.cluster, instance, partial=True)
+            else:
+                escalations = self.scheduler.evacuate(self.cluster, instance)
         except MemoryError:
             self.cluster.dead_instances.discard(instance)
             raise
         self._apply_escalations(escalations)
+        if stragglers:
+            # deadline expired with KV still resident: fail-semantics for
+            # the stragglers.  The in-flight iteration stays VALID (the
+            # instance is healthy until we stop routing to it — this is a
+            # planned drop, not a crash), so only the cluster-level partial
+            # drop runs; the lost ranges re-prefill or degrade like a crash.
+            records = self.cluster.fail_instance(instance)
+            self._recover(records, self._now())
         self.scheduler.rebalance(self.cluster)
         self.hot_path_stats["drains"] += 1
         return escalations
+
+    # ------------------------------------------------------------------ #
+    def fail_instance(self, instance: int, now: float | None = None) -> list:
+        """Abrupt instance failure (crash semantics) — safe at ANY point of
+        the pipelined loop, including between dispatch and harvest.
+
+        Three phases: (1) in-flight discard — snapshot entries whose
+        computation touched the dead instance (a KV shard or the decode slot
+        lived there) are voided and their dispatch-time bookkeeping rolled
+        back, so a dead instance's speculative token is never applied and no
+        slot double-frees; (2) cluster-level partial drop —
+        ``ClusterState.fail_instance`` frees ONLY the dead instance's frames
+        and reports the exact lost token ranges; (3) typed recovery per
+        affected request — partial-shard re-prefill of just those ranges
+        into a replacement WaterFill placement (surviving shards untouched),
+        or a degraded finish when the alive cluster lacks headroom.  Never
+        hangs, never leaks frames.  Returns the requests finished (degraded)
+        here."""
+        now = self._now() if now is None else now
+        cl = self.cluster
+        assert 0 <= instance < cl.num_instances, instance
+        if instance in cl.dead_instances:
+            return []
+        self.hot_path_stats["failures"] += 1
+        if self._inflight is not None:
+            keep = []
+            for ent in self._inflight.slots:
+                rid, req, i, b, last = ent
+                holders = self._inflight.holders.get(rid, frozenset())
+                if i != instance and instance not in holders:
+                    keep.append(ent)
+                    continue
+                # discard the speculative result: roll back the dispatch-time
+                # bookkeeping (the next dispatch re-derives the same token
+                # deterministically from next_tok)
+                req.generated -= 1
+                if last:
+                    # length-finished at dispatch: pages/slot already freed —
+                    # resurrect; its ENTIRE context is a lost range now, so
+                    # recovery below re-prefills (or degrades) it
+                    cl.finished.remove(req)
+                    req.status = "running"
+                    req.finish_time = -1.0
+                    cl.active[rid] = req
+                    if (req.moe_binding >= 0
+                            and req.moe_binding != instance
+                            and req.moe_binding not in cl.dead_instances):
+                        cl.move_slot(rid, req.moe_binding)
+                elif self._append_tokens:
+                    # un-append the input token's KV entry written at this
+                    # step's lowering (i is the dispatch-time MoE shard)
+                    cl.page_table.pop_token(rid, i)
+            self._inflight = _Inflight(self._inflight.toks, keep,
+                                       self._inflight.holders)
+        records = cl.fail_instance(instance)
+        return self._recover(records, now)
+
+    def _discard_inflight(self, rids: set) -> None:
+        """Drop the given rids' entries from the in-flight snapshot (their
+        speculative token is never applied).  Used when recovery finishes a
+        request that is still in flight — its pages are freed wholesale, so
+        no per-token rollback is needed, only the harvest suppression."""
+        if self._inflight is None:
+            return
+        self._inflight = _Inflight(
+            self._inflight.toks,
+            [e for e in self._inflight.slots if e[0] not in rids],
+            self._inflight.holders)
+
+    def _recover(self, records: list, now: float) -> list:
+        """Typed recovery for ``ClusterState.fail_instance`` records:
+        partial-shard re-prefill into a replacement WaterFill placement, or
+        a degraded finish.  Returns the requests finished (degraded) here."""
+        cl = self.cluster
+        pt = cl.page_table
+        ledger = {s: pt.free_frames(s) for s in cl.alive_instances()}
+        items, finished = [], []
+        for rec in records:
+            req = rec.req
+            rid = req.rid
+            if rid not in cl.active:
+                continue
+            resident = sum(pt.shard_tokens(rid).values())
+            ranges = list(rec.lost)
+            if resident == 0 and not ranges and req.length > 0:
+                # nothing survived anywhere (or the request was resurrected
+                # from a dispatch-time finish): the whole context is lost
+                ranges = [(0, req.prompt_len + req.generated)]
+            lost = sum(n for _, n in ranges)
+            # full recovery = replaying lost ranges through the reference
+            # forward and scattering their KV: decoder-only attention archs
+            # only, and never when pinned per-slot state died with the slot
+            recoverable = (self._append_tokens
+                           and not (rec.slot_lost and self._pinned_slots))
+            split = None
+            ok = req.moe_binding >= 0 and (lost == 0 or recoverable)
+            if ok and lost > 0:
+                split = self.scheduler.place_recovery(cl, req, lost, ledger) \
+                    if hasattr(self.scheduler, "place_recovery") else None
+                ok = split is not None
+            if not ok:
+                # degraded finish: complete NOW with the tokens it has —
+                # a failure must never hang a request or leak its frames
+                self.results[rid].recovered = False
+                self._discard_inflight({rid})
+                cl.finish(req, now)
+                self.finished.append(req)
+                finished.append(req)
+                self.hot_path_stats["degraded_finishes"] += 1
+                continue
+            if lost == 0:
+                continue                 # only the binding/slot was touched
+            self.results[rid].recovered = True
+            self.hot_path_stats["recovered_tokens"] += resident
+            self.hot_path_stats["reprefill_tokens"] += lost
+            positions, coords = pt.restore_ranges(rid, split, ranges)
+            req.kv_binding = sorted(set(req.kv_binding) | set(split)
+                                    | {req.moe_binding})
+            items.append((req, positions, coords))
+        if items:
+            self._reprefill_ranges(items)
+        return finished
+
+    def _reprefill_ranges(self, items: list) -> None:
+        """Partial-shard re-prefill: replay ONLY the lost token ranges of
+        each recovering request through the reference forward and scatter
+        their KV into the replacement placement — surviving shards are never
+        read or rewritten, and the scatter is the same donated collective
+        the admission path uses (one batched call for all requests)."""
+        pattern = self.cfg.block_pattern()
+        ps = self._scatter.ps
+        kv_k, kv_v, kv_coords = [], [], []
+        for req, positions, coords in items:
+            # prompt + every token recorded so far covers ALL existing KV
+            # positions [0, prompt+generated) at any pipeline point
+            seq = self._prompts[req.rid] + self.results[req.rid].tokens
+            toks = jnp.asarray(seq)[None, :]
+            _, caches = transformer.forward(self.cfg, self.params, toks,
+                                            collect_kv=True)
+            ks, vs, lats = [], [], []
+            for li, kind in enumerate(pattern):
+                if kind["mixer"] != "attn":
+                    continue
+                a, b = caches[li]["kv"]
+                if self.cfg.is_mla:
+                    lats.append(jnp.concatenate([a[:, 0], b[:, 0]], axis=-1))
+                else:
+                    ks.append(a[:, 0])
+                    vs.append(b[:, 0])
+            pos = jnp.asarray(positions)
+            if lats:
+                kv_k.append(jnp.stack(lats, axis=1)[:, :, pos][..., None, :])
+            else:
+                khs = self._scatter.khs
+                k3 = jnp.stack(ks, axis=1)[:, :, pos]  # [nb, na, T, Hkv, hd]
+                v3 = jnp.stack(vs, axis=1)[:, :, pos]
+                kv_k.append(k3.reshape(*k3.shape[:3], khs, -1))
+                kv_v.append(v3.reshape(*v3.shape[:3], khs, -1))
+            inst, frame, off = coords
+            kv_coords.append(np.stack([inst, frame % ps, frame // ps,
+                                       off]).astype(np.int32))
+        k = jnp.concatenate(kv_k, axis=2)
+        v = jnp.concatenate(kv_v, axis=2) if kv_v else None
+        coords = np.concatenate(kv_coords, axis=1)
+        self.state = self._scatter.scatter_kv(self.state, k, v, coords)
+
+    def join_instance(self, instance: int, prewarm: bool = True) -> None:
+        """Elastic scale-up: a standby/failed/drained instance (re)enters
+        the zig-zag ring.  The engine's mesh is fixed at construction, so it
+        joins only instances within it (``ClusterState.join_instance`` can
+        also GROW host-side topologies).  The page-table join path guards
+        against frame aliasing; ``relax``/consolidation then spread load
+        onto the joiner naturally, and ``prewarm`` compiles the AOT buckets
+        the wider ring reach makes reachable OFF the hot path — the first
+        post-join step that recruits the joiner replays instead of
+        compiling."""
+        cl = self.cluster
+        assert 0 <= instance < cl.num_instances, \
+            "engine mesh is fixed: join a standby/failed instance"
+        cl.join_instance(instance)
+        self.hot_path_stats["joins"] += 1
+        if prewarm:
+            self._prewarm_join(instance)
+
+    def _prewarm_join(self, instance: int) -> None:
+        """Pre-compile the cached buckets at the ring reach the joiner adds
+        (max zig-zag rounds between it and any alive peer in its window
+        segment), so post-join recruitment stays a dict-lookup replay."""
+        cl = self.cluster
+        win = cl.window
+        seg = instance // win
+        need = 0
+        for p in cl.alive_instances():
+            if p == instance or p // win != seg:
+                continue
+            need = max(need, ring_round(instance - p, win),
+                       ring_round(p - instance, win))
+        if need <= 0:
+            return
+        have = set(self.aot.cached_keys())
+        new_keys = []
+        for key in sorted(have):
+            M, S, MB, W, R = key
+            if S == 0:
+                continue
+            k2 = self.aot.quantise(M, S, MB, W, max(R, need))
+            if k2 not in have and k2 not in new_keys:
+                new_keys.append(k2)
+        if new_keys:
+            self.aot.capture(new_keys)
 
     def compact(self) -> list:
         """Planned maintenance — the relaxation twin of ``drain_instance``:
@@ -710,17 +969,25 @@ class NanoCPEngine:
         #    free their pages/slots for the next schedule immediately ------
         snapshot = []
         length_done = []
+        holders = {}
+        pt = self.cluster.page_table
         for rid in list(self.cluster.active):
             req = self.cluster.active[rid]
             i, b = self.cluster.slot_map[rid]
             req.generated += 1
             last = len(self.results[rid].tokens) + 1 >= req.max_new_tokens
             snapshot.append((rid, req, i, b, last))
+            # the iteration's blast radius for this request: every instance
+            # holding one of its KV shards, plus the decode-slot instance —
+            # recorded BEFORE length-finishes free the pages, so a failure
+            # between dispatch and harvest can still identify affected rows
+            holders[rid] = frozenset(
+                s for s, t in pt.shard_tokens(rid).items() if t > 0) | {i}
             if last:
                 length_done.append(req)
         for req in length_done:
             self.cluster.finish(req, now)
-        self._inflight = _Inflight(toks, snapshot)
+        self._inflight = _Inflight(toks, snapshot, holders)
         self.iterations += 1
         self.last_bucket = key
         self.last_rounds_used = tbl.R

@@ -214,6 +214,32 @@ class LatencyModel:
                 + bytes_ / bw
                 + 2 * bytes_ / (self.hw.hbm_bw * self.hw.chips_per_instance))
 
+    def reprefill_time(self, tokens: int) -> float:
+        """Failure-recovery re-prefill: replay ``tokens`` lost positions
+        through the full forward (prefill-class compute, FLOPs-bound at
+        recovery chunk sizes) and scatter their KV into the replacement
+        placement.  Charged once per recovery event — the cost knob that
+        makes the simulator's chaos sweeps price partial-shard recovery
+        against degraded finishes."""
+        if tokens <= 0:
+            return 0.0
+        c = self.cfg
+        # per-token forward FLOPs ~ 2 * activated params; attention's
+        # quadratic term stays negligible at recovery chunk sizes
+        if c.is_moe:
+            ffn = 6 * c.d_model * c.moe_d_ff_ * (
+                max(c.num_experts_per_tok, 1) + (c.num_shared_experts or 0))
+        else:
+            ffn = 6 * c.d_model * c.d_ff
+        qkv = 2 * c.d_model * (c.num_heads + 2 * c.num_kv_heads) * c.head_dim_ \
+            if c.has_attention and not c.is_mla else 4 * c.d_model * c.d_model
+        flops = tokens * self.cfg.num_layers * (ffn + qkv)
+        compute = flops / (self.hw.peak_flops * self.hw.chips_per_instance)
+        # scatter the re-computed KV into the pools (HBM write, all layers)
+        scatter = tokens * self.kv_bytes_per_token * self.num_attn_layers / (
+            self.hw.hbm_bw * self.hw.chips_per_instance)
+        return self.hw.kernel_base + compute + scatter
+
     def relax_breakeven_steps(self, tokens_moved: float, rounds_saved: int,
                               rows: float = 1.0,
                               inter: bool = False) -> float:

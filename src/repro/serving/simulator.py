@@ -79,6 +79,14 @@ class SimResult:
     cross_moe_time: float = 0.0                            # a2a s on inter links
     cross_escalated_tokens: int = 0                        # KV tokens across nodes
     cross_bindings: int = 0                                # request-iters spanning >=2 nodes
+    # fault-tolerance / elasticity accounting (mirrors the engine's
+    # hot_path_stats counters so chaos sweeps price recovery cost)
+    failures: int = 0                                      # instances killed
+    recovered_tokens: int = 0                              # KV tokens that survived a kill
+    reprefill_tokens: int = 0                              # lost tokens replayed
+    degraded_finishes: int = 0                             # requests finished early
+    joins: int = 0                                         # instances (re)joined
+    reprefill_time: float = 0.0                            # recovery s charged
 
 
 class ClusterSimulator:
@@ -248,24 +256,89 @@ class ClusterSimulator:
         return now
 
     # ------------------------------------------------------------------ #
+    def _recover(self, res: SimResult, records: list, now: float) -> float:
+        """Mirror of ``NanoCPEngine._recover`` minus the device scatter:
+        per affected request, partial-shard re-prefill of the lost ranges
+        into a replacement WaterFill placement (charged at
+        ``LatencyModel.reprefill_time``) or a degraded finish.  Recovery
+        never hangs a request — every record resolves here."""
+        cl, pt = self.cluster, self.cluster.page_table
+        append_ok = (self.cfg.has_attention
+                     and not self.cfg.is_encoder_decoder)
+        pinned = (self.cfg.family in ("ssm", "hybrid")
+                  or self.cfg.is_encoder_decoder)
+        ledger = {s: pt.free_frames(s) for s in cl.alive_instances()}
+        replayed = 0
+        for rec in records:
+            req = rec.req
+            if req.rid not in cl.active:
+                continue
+            resident = sum(pt.shard_tokens(req.rid).values())
+            ranges = list(rec.lost)
+            if resident == 0 and not ranges and req.length > 0:
+                ranges = [(0, req.prompt_len + req.generated)]
+            lost = sum(n for _, n in ranges)
+            recoverable = append_ok and not (rec.slot_lost and pinned)
+            split = None
+            ok = req.moe_binding >= 0 and (lost == 0 or recoverable)
+            if ok and lost > 0:
+                split = (self.scheduler.place_recovery(cl, req, lost, ledger)
+                         if hasattr(self.scheduler, "place_recovery")
+                         else None)
+                ok = split is not None
+            if not ok:
+                cl.finish(req, now)
+                req.status = "degraded"
+                res.finished.append(req)
+                res.degraded_finishes += 1
+                continue
+            if lost == 0:
+                continue
+            pt.restore_ranges(req.rid, split, ranges)
+            req.kv_binding = sorted(set(req.kv_binding) | set(split)
+                                    | {req.moe_binding})
+            res.recovered_tokens += resident
+            res.reprefill_tokens += lost
+            replayed += lost
+        if replayed:
+            t = self.latency.reprefill_time(replayed)
+            res.reprefill_time += t
+            now += t
+        return now
+
+    # ------------------------------------------------------------------ #
     def run(self, workload: Workload, horizon: float | None = None,
-            failure_events: list | None = None) -> SimResult:
-        """failure_events: optional [(time, instance), ...] — fault injection."""
+            failure_events: list | None = None,
+            chaos_events: list | None = None) -> SimResult:
+        """failure_events: optional [(time, instance), ...] — kill injection
+        (back-compat spelling).  chaos_events: optional
+        [(time, action, instance), ...] with action in {"kill", "join"} —
+        the full membership-change schedule (``serving.chaos`` builds seeded
+        ones); merged with failure_events in time order."""
         import time as _time
         res = SimResult()
         cl = self.cluster
         arrivals = sorted(workload.requests, key=lambda r: r.arrival)
         ai = 0
-        failures = sorted(failure_events or [])
+        events = [(t, "kill", i) for (t, i) in (failure_events or [])]
+        events += [tuple(e) for e in (chaos_events or [])]
+        events.sort(key=lambda e: e[0])
         fi = 0
         now = 0.0
         horizon = horizon or float("inf")
 
         while now < horizon:
-            # fault injection
-            while fi < len(failures) and failures[fi][0] <= now:
-                cl.fail_instance(failures[fi][1])
+            # fault injection / elastic membership changes
+            while fi < len(events) and events[fi][0] <= now:
+                _, action, inst = events[fi]
                 fi += 1
+                if action == "join":
+                    cl.join_instance(inst)
+                    res.joins += 1
+                elif inst not in cl.dead_instances:
+                    records = cl.fail_instance(inst)
+                    res.failures += 1
+                    now = self._recover(res, records, now)
             # admit arrivals whose (post-prefill) ready time has passed
             while ai < len(arrivals) and arrivals[ai].arrival <= now:
                 tr = arrivals[ai]

@@ -1,0 +1,303 @@
+"""Chaos engine cells: abrupt instance failure + elastic membership, live.
+
+Each mode drives ``NanoCPEngine`` through a scripted membership change fired
+in the MID-FLIGHT window (between a step's dispatch and its harvest — the
+worst case for the pipelined engine's bookkeeping) and asserts the
+fault-tolerance contract end to end:
+
+  * kill       — I=4 single node: an instance crashes mid-flight
+                 (``ChaosSchedule`` + ``run_engine_with_chaos``, the bounded
+                 harness).  Affected requests take partial-shard re-prefill
+                 and STILL finish token-for-token equal to the reference;
+                 unaffected requests never notice.
+  * killnode   — I=8, W=4 (two nodes, W < I): the crashed instance carries a
+                 cap-widened binding AND the MoE slot of the watched request;
+                 recovery re-homes the slot and replays only the lost ranges.
+  * degraded   — I=2, tight pools: the survivor lacks headroom, so the big
+                 request finishes DEGRADED (``recovered=False``, tokens a
+                 prefix of the reference) instead of hanging; the co-resident
+                 finishes exactly.
+  * join       — crossnode pressure topology: a node-0 member crashes, decode
+                 growth recruits the remote node, the dead instance REJOINS
+                 (fresh pool, AOT pre-warmed off the hot path), escalation +
+                 relax move load onto it and the lowered steady state returns
+                 to the node-local round bound 2(W-1).
+  * drainforce — scale-down under deadline: ``drain_instance(force=True)``
+                 evacuates what fits and applies fail-semantics to the
+                 stragglers — the drain ALWAYS completes, nothing hangs.
+  * refusal    — attention-free archetype (mamba2): per-slot state cannot
+                 migrate, so drain raises typed ``UnsupportedDrainError`` and
+                 a crash degrades ONLY the slot-bound request, cleanly.
+
+All modes assert zero leaked frames (``frame_audit``), bounded step counts
+(a hung recovery is an assertion, not a timeout), and — on the attention
+archetypes — step donation held across the chaos (``donation_copies``
+stable).
+
+Usage: engine_chaos.py MODE [nopipe]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.comm import node_local_rounds
+from repro.models import init_params, transformer
+from repro.serving.chaos import (KILL, ChaosEvent, ChaosSchedule,
+                                 run_engine_with_chaos)
+from repro.serving.engine import NanoCPEngine, UnsupportedDrainError
+
+VOCAB = 256
+
+# mode: (arch, I, W_node, tp, cap, edges, degrees, [(prompt, max_new), ...])
+MODES = {
+    "kill":       ("tinyllama-1.1b", 4, 4, 2, 4096, (64, 160), (1, 2, 3),
+                   [(24, 12), (90, 12), (180, 12)]),
+    "killnode":   ("tinyllama-1.1b", 8, 4, 1, 256, (100_000,), (1, 2),
+                   [(420, 24), (16, 8), (24, 48)]),
+    "degraded":   ("tinyllama-1.1b", 2, 2, 2, 256, (100_000,), (1, 2),
+                   [(330, 24), (48, 12)]),
+    "join":       ("tinyllama-1.1b", 8, 4, 1, 128, (100_000,), (1, 2),
+                   [(420, 40), (16, 4), (24, 64)]),
+    "drainforce": ("tinyllama-1.1b", 2, 2, 2, 256, (100_000,), (1, 2),
+                   [(330, 24), (48, 24)]),
+    "refusal":    ("mamba2-370m", 2, 2, 2, 4096, (100_000,), (1, 1),
+                   [(24, 8), (48, 8)]),
+}
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def check_frames(cl):
+    """No leaked or aliased frame anywhere after the run."""
+    for s, (free, held) in cl.page_table.frame_audit().items():
+        if s in cl.dead_instances:
+            assert held == 0, (s, free, held)
+            assert free in (0, cl.page_table.frames_per_instance), \
+                (s, free, held)
+        else:
+            assert free + held == cl.page_table.frames_per_instance, \
+                (s, free, held)
+
+
+def check_tokens(mode, cfg, params, eng, prompts, reqs, degraded_ok=()):
+    """Every request is either exact (full length, token-for-token — whether
+    untouched OR recovered) or an allowed degraded finish whose tokens are a
+    PREFIX of the reference (a degraded request never emits a wrong token)."""
+    for rid, (_, n) in enumerate(reqs):
+        res = eng.results[rid]
+        ref = reference(cfg, params, prompts[rid], n)
+        if res.recovered is False:
+            assert rid in degraded_ok, (mode, rid, "unexpected degrade")
+            assert len(res.tokens) < n, (rid, res.tokens)
+            assert res.tokens == ref[:len(res.tokens)], (mode, rid)
+            print(f"  rid {rid}: DEGRADED at {len(res.tokens)}/{n} tokens "
+                  f"(prefix == ref)")
+        else:
+            assert len(res.tokens) == n, (mode, rid, res.tokens)
+            assert res.tokens == ref, (mode, rid, res.tokens, ref)
+            tag = " (recovered)" if res.recovered else ""
+            print(f"  rid {rid}: {n} tokens == ref{tag}")
+
+
+def drain_engine(eng, max_steps, guard=True, on_step=None):
+    """Step to completion, bounded; a hung recovery fails the assertion."""
+    cl = eng.cluster
+    for step in range(max_steps):
+        if not (cl.active or cl.waiting or eng._inflight is not None):
+            return
+        if on_step is not None:
+            on_step(step)                       # may fire chaos (no guard)
+        if guard:
+            with jax.transfer_guard("disallow"):
+                eng.step()
+        else:
+            eng.step()
+    raise AssertionError(f"chaos run exceeded {max_steps} steps")
+
+
+def build(mode, pipeline):
+    arch, I, W, tp, cap, edges, degrees, reqs = MODES[mode]
+    cfg = reduced(CONFIGS[arch], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, tp), ("data", "model"))
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=W, tp=tp,
+        kv_capacity_tokens=cap, page_size=16,
+        buckets=CPBuckets(edges=edges, degrees=degrees),
+        shape_buckets=None if cfg.family in ("ssm", "hybrid")
+        else ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                          window=I),
+        max_slots_per_instance=4, pipeline=pipeline,
+        audit_donation_every_step=True)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, VOCAB, (L,)) for L, _ in reqs]
+    for p, (_, n) in zip(prompts, reqs):
+        eng.add_request(p, max_new_tokens=n)
+    return cfg, params, eng, prompts, reqs
+
+
+def run_case(mode: str, pipeline: bool) -> None:
+    cfg, params, eng, prompts, reqs = build(mode, pipeline)
+    cl = eng.cluster
+    I = cl.num_instances
+    W = cl.instances_per_node
+    max_steps = max(n for _, n in reqs) + 64
+
+    eng.step()                                  # admission + warmup
+    assert not cl.waiting, "all requests must admit at step 1"
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+    # kill: the degree-3 long request; elsewhere the big/cap-widened rid 0
+    watched = len(reqs) - 1 if mode == "kill" else 0
+    degraded_ok = ()
+
+    if mode in ("kill", "killnode"):
+        # crash the instance carrying the watched request's MoE slot — the
+        # worst case: partial KV drop + slot re-home + in-flight rollback
+        victim = cl.active[watched].moe_binding
+        held_before = cl.page_table.shard_tokens(watched).get(victim, 0)
+        assert held_before > 0, "victim must hold watched KV"
+        if mode == "kill":
+            if pipeline:
+                assert eng._inflight is not None, "kill must hit mid-flight"
+            sched = ChaosSchedule([ChaosEvent(0, KILL, victim)])
+            run_engine_with_chaos(eng, sched, max_steps)
+        else:
+            with jax.transfer_guard("disallow"):
+                eng.step()
+            if pipeline:
+                assert eng._inflight is not None, "kill must hit mid-flight"
+            eng.fail_instance(victim)
+            assert victim in cl.dead_instances
+            drain_engine(eng, max_steps)
+        hp = eng.hot_path_stats
+        assert hp["failures"] == 1, hp
+        assert hp["degraded_finishes"] == 0, hp
+        assert hp["recovered_tokens"] > 0 and hp["reprefill_tokens"] > 0, hp
+        assert eng.results[watched].recovered is True
+        fin = {r.rid: r for r in eng.finished}
+        assert victim not in fin[watched].kv_binding
+        assert fin[watched].moe_binding != victim
+
+    elif mode in ("degraded", "drainforce"):
+        # victim = the instance holding MOST of the big request's KV; the
+        # survivor lacks headroom for the lost shard, so rid 0 must finish
+        # degraded rather than hang (and rid 1 must not notice)
+        shards = cl.page_table.shard_tokens(0)
+        victim = max(shards, key=shards.get)
+        if pipeline:
+            assert eng._inflight is not None, "chaos must hit mid-flight"
+        if mode == "degraded":
+            degraded = eng.fail_instance(victim)
+            assert eng.hot_path_stats["failures"] == 1
+        else:
+            escs = eng.drain_instance(victim, force=True)
+            assert eng.hot_path_stats["drains"] == 1
+            degraded = [cl_r for cl_r in eng.finished
+                        if eng.results[cl_r.rid].recovered is False]
+            print(f"  forced drain: {len(escs)} evacuations, "
+                  f"{len(degraded)} degraded stragglers")
+        assert victim in cl.dead_instances
+        assert cl.page_table.instance_used_tokens(victim) == 0
+        assert any(r.rid == 0 for r in degraded), \
+            "big request must degrade under no-headroom recovery"
+        assert eng.results[0].recovered is False
+        assert eng.hot_path_stats["degraded_finishes"] >= 1
+        degraded_ok = tuple(r.rid for r in degraded)
+        drain_engine(eng, max_steps)
+
+    elif mode == "join":
+        # crash a node-0 holder, let growth recruit the remote node, then
+        # REJOIN the dead instance: escalation + relax spread load back onto
+        # it and steady state returns to the node-local round bound
+        victim = cl.active[watched].moe_binding
+        with jax.transfer_guard("disallow"):
+            eng.step()
+        if pipeline:
+            assert eng._inflight is not None
+        eng.fail_instance(victim)
+        state = {"peak_nodes": 0, "joined": False, "joiner_loaded": False}
+
+        def on_step(step):
+            if step == 8 and not state["joined"]:
+                eng.join_instance(victim)
+                state["joined"] = True
+                assert victim not in cl.dead_instances
+            if watched in cl.active:
+                b = cl.active[watched].kv_binding
+                state["peak_nodes"] = max(state["peak_nodes"],
+                                          len(cl.binding_nodes(b)))
+            if state["joined"] and cl.kv_load(victim) > 0:
+                state["joiner_loaded"] = True
+
+        drain_engine(eng, max_steps, on_step=on_step)
+        hp = eng.hot_path_stats
+        assert hp["failures"] == 1 and hp["joins"] == 1, hp
+        assert hp["degraded_finishes"] == 0, hp
+        assert state["joined"]
+        assert state["peak_nodes"] >= 2, \
+            "pressure never recruited the remote node"
+        assert state["joiner_loaded"], \
+            "no load ever spread onto the rejoined instance"
+        assert eng.last_rounds_used <= node_local_rounds(W), \
+            (eng.last_rounds_used, node_local_rounds(W))
+
+    elif mode == "refusal":
+        # attention-free: per-slot SSM state cannot migrate -> typed refusal
+        try:
+            eng.drain_instance(0)
+            raise AssertionError("drain must refuse on attention-free arch")
+        except UnsupportedDrainError as e:
+            print(f"  drain refused: {e}")
+        assert not cl.dead_instances, "refused drain must not mutate"
+        # a crash still degrades ONLY the slot-bound requests, cleanly
+        victim = cl.active[0].moe_binding
+        degraded = eng.fail_instance(victim)
+        assert eng.results[0].recovered is False
+        degraded_ok = tuple(r.rid for r in degraded)
+        assert 0 in degraded_ok
+        drain_engine(eng, max_steps)
+        hp = eng.hot_path_stats
+        assert hp["failures"] == 1 and hp["degraded_finishes"] >= 1, hp
+
+    assert not cl.active and not cl.waiting and eng._inflight is None
+    check_frames(cl)
+    hp = eng.hot_path_stats
+    print(f"mode={mode} pipeline={pipeline}: failures={hp['failures']} "
+          f"recovered_tokens={hp['recovered_tokens']} "
+          f"reprefill_tokens={hp['reprefill_tokens']} "
+          f"degraded_finishes={hp['degraded_finishes']} joins={hp['joins']} "
+          f"drains={hp['drains']} last_R={eng.last_rounds_used}")
+
+    check_tokens(mode, cfg, params, eng, prompts, reqs, degraded_ok)
+
+    if mode != "refusal":
+        # step donation held across crash recovery / join / forced drain
+        st = eng.aot.stats
+        assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+        assert st.donation_copies == copies_before, \
+            ("chaos broke step donation", st.as_dict())
+        print(f"  aot: {st.as_dict()}")
+    print(f"mode={mode} pipeline={pipeline}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1]
+    pipeline = "nopipe" not in sys.argv[2:]
+    run_case(mode, pipeline)

@@ -99,6 +99,33 @@ def test_engine_relaxation(mode, pipeline):
     assert "PASS" in out
 
 
+# chaos cells: abrupt instance failure fired MID-FLIGHT (between a step's
+# dispatch and its harvest), degraded finish under no-headroom recovery,
+# elastic re-join with load spreading back onto the joiner, forced
+# scale-down drain with fail-semantics stragglers, and the typed drain
+# refusal on attention-free archetypes — unaffected requests stay
+# token-for-token, recovered requests equal a from-scratch run, zero leaked
+# frames, bounded step counts (tests/integration/engine_chaos.py).
+CHAOS_CELLS = [
+    ("kill", True), ("kill", False),
+    ("killnode", True),                # multi-node W < I topology
+    ("degraded", True), ("degraded", False),
+    ("join", True),
+    ("drainforce", True),
+    ("refusal", True),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mode,pipeline", CHAOS_CELLS,
+                         ids=[f"{m}-{'pipe' if p else 'nopipe'}"
+                              for m, p in CHAOS_CELLS])
+def test_engine_chaos(mode, pipeline):
+    args = [mode] + ([] if pipeline else ["nopipe"])
+    out = run_integration("engine_chaos.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_fault_drain():
     """Fault cell: drain an instance mid-run — KV evacuates via the live

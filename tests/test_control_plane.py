@@ -112,18 +112,37 @@ def test_least_cache_picks_min_kv():
     assert cl.active[1].moe_binding != first
 
 
-def test_instance_failure_requeues():
+def test_instance_failure_partial_drop():
+    """Failure is a partial-shard event now: affected requests STAY ACTIVE
+    (nothing silently re-enqueues), their bindings are pruned, orphaned slots
+    re-home onto a surviving member, and each FailureRecord reports the exact
+    lost token ranges — the typed recovery contract the engine builds on."""
     cl = mk_cluster()
     sched = DualBalancedScheduler(buckets=CPBuckets(edges=(100,), degrees=(1, 2)))
     for r in range(6):
         cl.enqueue(Request(rid=r, prompt_len=300, max_new_tokens=4))
     sched.schedule(cl)
+    pt = cl.page_table
+    resident_before = {rid: pt.shard_tokens(rid) for rid in cl.active}
     victim = cl.active[0].moe_binding
-    affected = cl.fail_instance(victim)
-    assert affected                                          # some requeued
-    for req in affected:
-        assert req.status == "waiting" and req.rid not in cl.active
-    plan = sched.schedule(cl)                                # re-place them
+    records = cl.fail_instance(victim)
+    assert records
+    for rec in records:
+        req = rec.req
+        assert req.status == "running" and req.rid in cl.active
+        assert victim not in req.kv_binding
+        # lost ranges are exactly the victim's resident tokens
+        assert sum(l for _, l in rec.lost) == \
+            resident_before[req.rid].get(victim, 0)
+        # surviving shards untouched
+        for s, t in pt.shard_tokens(req.rid).items():
+            assert t == resident_before[req.rid][s]
+        if rec.slot_lost:
+            assert req.moe_binding >= 0
+            assert req.moe_binding != victim
+            assert cl.slot_map[req.rid][0] == req.moe_binding
+    # next schedule never touches the dead instance
+    plan = sched.schedule(cl)
     for req in cl.active.values():
         assert victim not in req.kv_binding
     assert not plan.deferred

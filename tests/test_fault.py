@@ -1,0 +1,411 @@
+"""Fault tolerance & elasticity: host-side unit tests.
+
+Partial-shard drop accounting (lost token ranges exact, surviving shards
+untouched, ``_used`` consistent), rollback of in-flight appends, recovery
+placement/restore, the elastic-join aliasing guard, partial evacuation, and
+deterministic seeded kill/join sweeps over the whole control plane.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bucketing import CPBuckets
+from repro.core.page_table import GlobalPageTable
+from repro.core.scheduler import DualBalancedScheduler
+from repro.core.state import ClusterState, Request
+from repro.serving.chaos import KILL, JOIN, ChaosEvent, ChaosSchedule
+
+
+def mk_cluster(I=8, W=4, cap=4096, page=16):
+    return ClusterState(num_instances=I, instances_per_node=W,
+                        kv_capacity_tokens=cap, page_size=page)
+
+
+def check_frames(cl):
+    """No leaked or aliased frame anywhere: alive pools account for every
+    frame; dead pools are empty-and-drained."""
+    for s, (free, held) in cl.page_table.frame_audit().items():
+        if s in cl.dead_instances:
+            # crashed (drop_instance): pool drained -> (0, 0);
+            # drained (evacuate): pool intact but empty -> (fpi, 0)
+            assert held == 0, (s, free, held)
+            assert free in (0, cl.page_table.frames_per_instance), \
+                (s, free, held)
+        else:
+            assert free + held == cl.page_table.frames_per_instance, \
+                (s, free, held)
+
+
+def check_placement(cl):
+    for rid, req in cl.active.items():
+        shards = cl.page_table.shard_tokens(rid)
+        holders = {s for s, t in shards.items() if t > 0}
+        assert holders <= set(req.kv_binding), (rid, holders, req.kv_binding)
+        assert not holders & cl.dead_instances
+        assert req.moe_binding in req.kv_binding
+        assert req.moe_binding not in cl.dead_instances
+        # position ranges across shards partition [0, resident)
+        pos = sorted(
+            r for rr in cl.page_table.request_positions(rid).values()
+            for r in rr)
+        covered = 0
+        for st_, ln in pos:
+            assert st_ == covered, (rid, pos)
+            covered += ln
+        assert covered == sum(shards.values())
+
+
+# --------------------------------------------------------------------------- #
+# page table: partial drop / pop / restore
+# --------------------------------------------------------------------------- #
+def test_partial_drop_exact_ranges():
+    pt = GlobalPageTable(3, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {0: 40, 1: 30, 2: 20})       # positions 0-39 | 40-69 | 70-89
+    pt.allocate(1, {1: 50})                     # positions 0-49
+    for _ in range(5):
+        pt.append_token(0, 1)                   # positions 90-94 on shard 1
+    lost = pt.drop_instance(1)
+    assert lost[0] == [(40, 30), (90, 5)]
+    assert lost[1] == [(0, 50)]
+    # surviving shards untouched, _used consistent
+    assert pt.shard_tokens(0) == {0: 40, 2: 20}
+    assert pt.instance_used_tokens(0) == 40
+    assert pt.instance_used_tokens(2) == 20
+    assert pt.instance_used_tokens(1) == 0
+    assert pt.free_frames(1) == 0               # drained until join
+    assert pt.request_positions(0) == {0: [(0, 40)], 2: [(70, 20)]}
+
+
+def test_drop_instance_empty_shards_not_reported():
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {0: 10})
+    lost = pt.drop_instance(1)
+    assert lost == {}
+
+
+def test_pop_token_rollback():
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=4)
+    pt.allocate(0, {0: 4})                       # exactly one full page
+    frames_before = list(pt.shard_frames(0, 0))
+    f, o = pt.append_token(0, 0)                 # grows a second page
+    assert len(pt.shard_frames(0, 0)) == 2
+    pt.pop_token(0, 0)
+    assert pt.shard_tokens(0) == {0: 4}
+    assert pt.shard_frames(0, 0) == frames_before     # tail frame freed
+    assert pt.instance_used_tokens(0) == 4
+    assert pt.request_positions(0) == {0: [(0, 4)]}
+    # re-append lands at the same position
+    assert pt.append_token(0, 0)[1] == o
+
+
+def test_restore_ranges_positions_and_coords():
+    pt = GlobalPageTable(3, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {0: 20, 1: 30, 2: 10})
+    lost = pt.drop_instance(1)[0]                # positions [20, 50)
+    positions, coords = pt.restore_ranges(0, {0: 12, 2: 18}, lost)
+    assert positions.tolist() == list(range(20, 50))
+    assert coords.shape == (3, 30)
+    # sorted-instance order: first 12 tokens onto shard 0, next 18 onto 2
+    assert (coords[0, :12] == 0).all() and (coords[0, 12:] == 2).all()
+    # appended AFTER the existing fill: shard 0's first restored token sits
+    # at in-shard index 20 (frame 1, offset 4)
+    fr0 = pt.shard_frames(0, 0)
+    assert coords[1, 0] == fr0[20 // 16] and coords[2, 0] == 20 % 16
+    assert pt.shard_tokens(0) == {0: 32, 2: 28}
+    # every position accounted for again (fill-order ranges, union partitions)
+    allpos = sorted(r for rr in pt.request_positions(0).values() for r in rr)
+    covered = 0
+    for st_, ln in allpos:
+        assert st_ == covered
+        covered += ln
+    assert covered == 60
+
+
+def test_restore_ranges_raises_without_headroom():
+    pt = GlobalPageTable(2, frames_per_instance=2, page_size=16)
+    pt.allocate(0, {0: 32, 1: 16})               # shard 0 full
+    lost = pt.drop_instance(1)[0]
+    with pytest.raises(MemoryError):
+        pt.restore_ranges(0, {0: 16}, lost)
+
+
+def test_join_aliasing_guard():
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {1: 20})
+    with pytest.raises(RuntimeError):
+        pt.join_instance(1)                      # frames still mapped
+    # restore_instance is the same guarded path now
+    with pytest.raises(RuntimeError):
+        pt.restore_instance(1)
+    pt.free_request(0)
+    pt.join_instance(1)
+    assert pt.free_frames(1) == 8
+
+
+def test_join_after_drop_gives_fresh_pool():
+    pt = GlobalPageTable(2, frames_per_instance=8, page_size=16)
+    pt.allocate(0, {0: 10, 1: 20})
+    pt.drop_instance(1)
+    pt.join_instance(1)                          # rid 0's shard-1 frames gone
+    assert pt.free_frames(1) == 8
+    pt.allocate(1, {1: 8 * 16})                  # full pool allocatable
+
+
+def test_cluster_growth_add_instance():
+    cl = mk_cluster(I=4, W=4)
+    cl.join_instance(4)                          # grow by one
+    assert cl.num_instances == 5
+    assert cl.page_table.free_frames(4) == cl.page_table.frames_per_instance
+    assert len(cl.moe_batch) == 5
+    assert 4 in cl.alive_instances()
+
+
+# --------------------------------------------------------------------------- #
+# cluster-level failure records
+# --------------------------------------------------------------------------- #
+def test_fail_instance_rehomes_orphaned_slot():
+    cl = mk_cluster()
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100,), degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=300, max_new_tokens=4))
+    sched.schedule(cl)
+    req = cl.active[0]
+    m = req.moe_binding
+    assert len(req.kv_binding) == 2
+    records = cl.fail_instance(m)
+    rec = next(r for r in records if r.req.rid == 0)
+    assert rec.slot_lost
+    assert req.moe_binding in req.kv_binding and req.moe_binding != m
+    assert cl.slot_map[0][0] == req.moe_binding
+    check_frames(cl)
+
+
+def test_fail_instance_full_loss_picks_fresh_home():
+    cl = mk_cluster(I=2, W=2)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(10 ** 9,), degrees=(1, 1)))
+    cl.enqueue(Request(rid=0, prompt_len=50, max_new_tokens=4))
+    sched.schedule(cl)
+    victim = cl.active[0].moe_binding
+    records = cl.fail_instance(victim)
+    req = records[0].req
+    assert req.moe_binding >= 0 and req.moe_binding != victim
+    assert req.kv_binding == [req.moe_binding]
+    assert sum(cl.page_table.shard_tokens(0).values()) == 0   # all lost
+    assert sum(l for _, l in records[0].lost) == 50
+
+
+# --------------------------------------------------------------------------- #
+# recovery placement
+# --------------------------------------------------------------------------- #
+def test_place_recovery_stays_in_window_segment():
+    cl = mk_cluster(I=8, W=4, cap=4096)
+    cl.routing_window = 4                        # two independent segments
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100,), degrees=(1, 2)))
+    cl.enqueue(Request(rid=0, prompt_len=300, max_new_tokens=4))
+    sched.schedule(cl)
+    req = cl.active[0]
+    victim = next(s for s in req.kv_binding if s != req.moe_binding)
+    records = cl.fail_instance(victim)
+    lost = sum(l for _, l in records[0].lost)
+    split = sched.place_recovery(cl, req, lost)
+    assert split is not None and sum(split.values()) == lost
+    seg = req.moe_binding // cl.window
+    for s in split:
+        assert s // cl.window == seg
+        assert s not in cl.dead_instances
+
+
+def test_place_recovery_ledger_prevents_overcommit():
+    cl = mk_cluster(I=2, W=2, cap=64, page=16)   # 4 frames per instance
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(10 ** 9,), degrees=(1, 1)), kv_reserve=0)
+    cl.enqueue(Request(rid=0, prompt_len=16, max_new_tokens=0))
+    cl.enqueue(Request(rid=1, prompt_len=16, max_new_tokens=0))
+    sched.schedule(cl)
+    pt = cl.page_table
+    ledger = {s: pt.free_frames(s) for s in cl.alive_instances()}
+    free_tokens = sum(ledger.values()) * 16
+    ask = free_tokens // 2 + 8
+    r0, r1 = cl.active[0], cl.active[1]
+    s0 = sched.place_recovery(cl, r0, ask, ledger)
+    s1 = sched.place_recovery(cl, r1, ask, ledger)
+    # jointly the two asks exceed the pool: the shared ledger must refuse
+    # the second (or both individually fit — never both over-commit)
+    granted = [s for s in (s0, s1) if s]
+    need = sum(pt.pages_needed(t) for s in granted for t in s.values())
+    assert need <= sum(pt.free_frames(i) for i in cl.alive_instances())
+    assert s1 is None or s0 is None or free_tokens >= 2 * ask
+
+
+def test_place_recovery_none_without_headroom():
+    cl = mk_cluster(I=2, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(10 ** 9,), degrees=(1, 1)), kv_reserve=0)
+    cl.enqueue(Request(rid=0, prompt_len=64, max_new_tokens=0))
+    cl.enqueue(Request(rid=1, prompt_len=64, max_new_tokens=0))
+    sched.schedule(cl)
+    assert len(cl.active) == 2
+    req = cl.active[0]
+    victim = next(s for s in cl.alive_instances() if s != req.moe_binding)
+    cl.fail_instance(victim)
+    # the alive half of the cluster is full: no placement
+    assert sched.place_recovery(cl, req, 64) is None
+
+
+# --------------------------------------------------------------------------- #
+# partial evacuation (drain-deadline fallback)
+# --------------------------------------------------------------------------- #
+def test_partial_evacuate_reports_stragglers():
+    cl = mk_cluster(I=2, W=2, cap=64, page=16)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(10 ** 9,), degrees=(1, 1)), kv_reserve=0)
+    cl.enqueue(Request(rid=0, prompt_len=64, max_new_tokens=0))
+    cl.enqueue(Request(rid=1, prompt_len=64, max_new_tokens=0))
+    sched.schedule(cl)
+    victim = cl.active[0].moe_binding
+    cl.dead_instances.add(victim)
+    with pytest.raises(MemoryError):
+        sched.evacuate(cl, victim)               # strict drain refuses
+    records, stragglers = sched.evacuate(cl, victim, partial=True)
+    assert stragglers                            # nothing fits: all stragglers
+    assert records == []
+    # the forced-drain caller now applies fail-semantics to the stragglers;
+    # with zero headroom they degrade-finish and nothing leaks
+    cl.dead_instances.discard(victim)
+    _recover_host(cl, sched, cl.fail_instance(victim), 0.0)
+    assert all(r not in cl.active or cl.active[r].status == "running"
+               for r in stragglers)
+    check_frames(cl)
+    check_placement(cl)
+
+
+def test_evacuate_tolerates_grown_dead_set():
+    """escalate/relax/evacuate run after dead_instances grew between passes
+    (a second failure mid-maintenance) without touching dead shards."""
+    cl = mk_cluster(I=8, W=4, cap=4096)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100,), degrees=(1, 2)))
+    for r in range(6):
+        cl.enqueue(Request(rid=r, prompt_len=200, max_new_tokens=4))
+    sched.schedule(cl)
+    first = cl.active[0].moe_binding
+    _recover_host(cl, sched, cl.fail_instance(first), 0.0)
+    second = next(s for s in cl.alive_instances()
+                  if cl.node_of(s) == cl.node_of(first))
+    _recover_host(cl, sched, cl.fail_instance(second), 0.0)
+    # maintenance passes on the shrunken cluster
+    sched.relax(cl, force=True)
+    sched.escalate(cl)
+    plan = sched.schedule(cl)
+    for req in cl.active.values():
+        assert not set(req.kv_binding) & cl.dead_instances
+    check_frames(cl)
+    check_placement(cl)
+    # drain a third, alive instance of the OTHER node: planner must route
+    # around both dead ones
+    third = next(s for s in cl.alive_instances()
+                 if cl.node_of(s) != cl.node_of(first))
+    cl.dead_instances.add(third)
+    recs = sched.evacuate(cl, third)
+    for rec in recs:
+        assert not set(rec.new_binding) & cl.dead_instances
+    check_frames(cl)
+
+
+# --------------------------------------------------------------------------- #
+# chaos schedules: determinism
+# --------------------------------------------------------------------------- #
+def test_chaos_schedule_seeded_deterministic():
+    a = ChaosSchedule.seeded(7, num_instances=8, horizon=20, kills=2, joins=1)
+    b = ChaosSchedule.seeded(7, num_instances=8, horizon=20, kills=2, joins=1)
+    assert a.events == b.events
+    kills = [e for e in a.events if e.action == KILL]
+    joins = [e for e in a.events if e.action == JOIN]
+    assert len(kills) == 2 and len(joins) == 1
+    assert len({e.instance for e in kills}) == 2
+    # a join revives a previously killed instance, strictly later
+    j = joins[0]
+    k = next(e for e in kills if e.instance == j.instance)
+    assert j.step > k.step
+    assert ChaosSchedule.seeded(8, 8, 20, kills=2, joins=1).events != a.events
+
+
+def test_chaos_schedule_respects_protect():
+    s = ChaosSchedule.seeded(3, num_instances=4, horizon=10, kills=3,
+                             protect=(0,))
+    assert all(e.instance != 0 for e in s.events)
+
+
+def test_chaos_event_validation():
+    with pytest.raises(AssertionError):
+        ChaosEvent(0, "explode", 1)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic seeded kill/join sweep (host-side mirror of the sim recovery)
+# --------------------------------------------------------------------------- #
+def _recover_host(cl, sched, records, now):
+    """The simulator's recovery path, inlined for host-only sweeps."""
+    pt = cl.page_table
+    ledger = {s: pt.free_frames(s) for s in cl.alive_instances()}
+    for rec in records:
+        req = rec.req
+        if req.rid not in cl.active:
+            continue
+        resident = sum(pt.shard_tokens(req.rid).values())
+        ranges = list(rec.lost)
+        if resident == 0 and not ranges and req.length > 0:
+            ranges = [(0, req.prompt_len + req.generated)]
+        lost = sum(n for _, n in ranges)
+        split = (sched.place_recovery(cl, req, lost, ledger)
+                 if lost > 0 and req.moe_binding >= 0 else None)
+        if lost > 0 and split is None:
+            cl.finish(req, now)                  # degraded
+            continue
+        if lost == 0:
+            continue
+        pt.restore_ranges(req.rid, split, ranges)
+        req.kv_binding = sorted(set(req.kv_binding) | set(split)
+                                | {req.moe_binding})
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_seeded_kill_join_sweep_never_strands_frames(seed):
+    """A random kill/join/decode schedule (seeded, reproducible) never leaks
+    or aliases a frame and never leaves an invalid placement."""
+    rng = np.random.default_rng(seed)
+    I, W, page = 8, 4, 16
+    cl = mk_cluster(I=I, W=W, cap=1024, page=page)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100,), degrees=(1, 2)), kv_reserve=page)
+    for r in range(10):
+        cl.enqueue(Request(rid=r, prompt_len=int(rng.integers(20, 400)),
+                           max_new_tokens=int(rng.integers(1, 30))))
+    now = 0.0
+    for step in range(60):
+        now += 1.0
+        sched.schedule(cl, now)
+        roll = rng.random()
+        if roll < 0.15 and len(cl.alive_instances()) > 2:
+            victim = int(rng.choice(cl.alive_instances()))
+            records = cl.fail_instance(victim)
+            _recover_host(cl, sched, records, now)
+        elif roll < 0.3 and cl.dead_instances:
+            cl.join_instance(int(rng.choice(sorted(cl.dead_instances))))
+        # decode appends + finishes (the simulator's inner loop, minimal)
+        for req in list(cl.active.values()):
+            req.generated += 1
+            try:
+                cl.page_table.append_token(req.rid, req.moe_binding)
+            except MemoryError:
+                cl.finish(req, now)
+                continue
+            if req.done:
+                cl.finish(req, now)
+        check_frames(cl)
+        check_placement(cl)
+        if not cl.active and not cl.waiting:
+            break
+    # every request resolved — a chaos schedule must never hang one
+    assert not cl.active and not cl.waiting

@@ -211,6 +211,58 @@ def test_escalate_relax_round_trip(topo, frames, n_escal, data):
     # full retraction: binding back to the bucket degree, rounds restored
     assert req.kv_binding == [m]
     assert rounds_of() <= r_pre
+
+# --------------------------------------------------------------------------- #
+# fault tolerance: random kill/join schedules (control plane, host-side)
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.sampled_from([(4, 2), (4, 4), (8, 4)]),
+       st.integers(0, 2 ** 31 - 1),       # request-mix seed
+       st.data())
+def test_kill_join_schedule_never_strands_frames(topo, seed, data):
+    """ANY interleaving of kills, joins, decode appends, and recovery passes
+    keeps the cluster leak-free (every frame free or held, dead pools empty)
+    and every active placement valid (holders within the binding, no dead
+    member, position ranges partitioning the resident prefix).  Requests
+    either keep running, recover, or degrade — none strand."""
+    from repro.core.scheduler import DualBalancedScheduler
+    from repro.core.state import ClusterState, Request
+    from test_fault import _recover_host, check_frames, check_placement
+
+    I, W = topo
+    page = 16
+    cl = ClusterState(num_instances=I, instances_per_node=W,
+                      kv_capacity_tokens=1024, page_size=page)
+    sched = DualBalancedScheduler(
+        buckets=CPBuckets(edges=(100,), degrees=(1, 2)), kv_reserve=page)
+    rng = np.random.default_rng(seed)
+    for r in range(6):
+        cl.enqueue(Request(rid=r, prompt_len=int(rng.integers(20, 300)),
+                           max_new_tokens=int(rng.integers(1, 20))))
+    now = 0.0
+    for _ in range(data.draw(st.integers(1, 25))):
+        now += 1.0
+        sched.schedule(cl, now)
+        action = data.draw(st.sampled_from(["kill", "join", "decode"]))
+        if action == "kill" and len(cl.alive_instances()) > 2:
+            victim = data.draw(st.sampled_from(cl.alive_instances()))
+            _recover_host(cl, sched, cl.fail_instance(victim), now)
+        elif action == "join" and cl.dead_instances:
+            cl.join_instance(
+                data.draw(st.sampled_from(sorted(cl.dead_instances))))
+        for req in list(cl.active.values()):
+            req.generated += 1
+            try:
+                cl.page_table.append_token(req.rid, req.moe_binding)
+            except MemoryError:
+                cl.finish(req, now)
+                continue
+            if req.done:
+                cl.finish(req, now)
+        check_frames(cl)
+        check_placement(cl)
+
+
 @SET
 @given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4),
        st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4))
