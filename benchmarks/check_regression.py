@@ -43,7 +43,13 @@ BASE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 DEFAULTS = {
     "decode": ("BENCH_decode_step.json", "BENCH_decode_step.smoke.json"),
     "escalation": ("BENCH_escalation.json", "BENCH_escalation.smoke.json"),
+    "slo_sweep": ("BENCH_slo_sweep.json", "BENCH_slo_sweep.smoke.json"),
 }
+
+# metrics where BIGGER is better (sustainable rate, attainment, goodput):
+# the regression ratio inverts (baseline/current), so a DROP fails the gate
+# and an improvement never does.  Prefix match on "file:key".
+HIGHER_IS_BETTER_PREFIXES = ("slo_sweep:",)
 
 # built-in per-metric EXTRA tolerance (prefix of "file:key" -> added ON
 # TOP of the global --tol, so a looser global gate — the nightly's
@@ -102,6 +108,22 @@ def escalation_metrics(rep: dict) -> dict:
     return out
 
 
+def slo_metrics(rep: dict) -> dict:
+    """Gate the sweep's HEADLINE shape, not its latency noise: per
+    (tier, mix, policy) the max sustainable rate and the attainment at
+    that knee.  Both are higher-is-better (see HIGHER_IS_BETTER_PREFIXES);
+    a drop in either means the closed loop lost serving capacity."""
+    out = {}
+    for tier, mixes in rep.get("curves", {}).items():
+        for mix, policies in mixes.items():
+            for pol, row in policies.items():
+                out[f"{tier}.{mix}.{pol}.max_rate"] = float(row["max_rate"])
+                knee = row.get("knee_attainment")
+                if knee is not None:
+                    out[f"{tier}.{mix}.{pol}.knee_attainment"] = float(knee)
+    return out
+
+
 def compare(name: str, cur: dict, base: dict, tol: float,
             metric_tol: dict | None = None) -> list[str]:
     failures = []
@@ -112,14 +134,24 @@ def compare(name: str, cur: dict, base: dict, tol: float,
             failures.append(f"{name}:{k}: metric missing from current run")
             continue
         t = tol_for(name, k, tol, metric_tol)
-        ratio = c / b if b > 0 else float("inf")
+        hib = any(f"{name}:{k}".startswith(p)
+                  for p in HIGHER_IS_BETTER_PREFIXES)
+        if hib:
+            # a higher-is-better metric regresses when it FALLS: the
+            # ratio inverts so the same ">1+tol fails" rule applies
+            ratio = b / c if c > 0 else (float("inf") if b > 0 else 1.0)
+            unit = ""
+        else:
+            ratio = c / b if b > 0 else float("inf")
+            unit = "us"
         verdict = "FAIL" if ratio > 1.0 + t else "ok"
-        print(f"  {name}:{k:30s} base={b:10.1f}us cur={c:10.1f}us "
+        print(f"  {name}:{k:30s} base={b:10.1f}{unit} cur={c:10.1f}{unit} "
               f"ratio={ratio:5.2f} tol={t:4.2f}  {verdict}")
         if verdict == "FAIL":
             failures.append(
-                f"{name}:{k}: {c:.1f}us vs baseline {b:.1f}us "
-                f"(+{(ratio - 1) * 100:.0f}% > {t * 100:.0f}%)")
+                f"{name}:{k}: {c:.1f}{unit} vs baseline {b:.1f}{unit} "
+                f"({'-' if hib else '+'}{abs(ratio - 1) * 100:.0f}% "
+                f"> {t * 100:.0f}%)")
     return failures
 
 
@@ -127,6 +159,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--decode", default=DEFAULTS["decode"][0])
     ap.add_argument("--escalation", default=DEFAULTS["escalation"][0])
+    ap.add_argument("--slo-sweep", dest="slo_sweep",
+                    default=DEFAULTS["slo_sweep"][0])
     ap.add_argument("--tol", type=float, default=float(
         os.environ.get("BENCH_REGRESSION_TOL", "0.25")))
     ap.add_argument("--metric-tol", action="append", default=[],
@@ -157,7 +191,8 @@ def main() -> int:
 
     failures = []
     for key, extract in (("decode", decode_metrics),
-                         ("escalation", escalation_metrics)):
+                         ("escalation", escalation_metrics),
+                         ("slo_sweep", slo_metrics)):
         cur_path = getattr(args, key)
         base_path = os.path.join(BASE_DIR, DEFAULTS[key][1])
         if not os.path.exists(base_path):

@@ -63,6 +63,104 @@ class Escalation:
         return int(np.unique(key).size)
 
 
+class AdmissionController:
+    """SLO-aware admission control for the closed serving loop (§6).
+
+    State machine (every submitted request ends in EXACTLY one typed
+    outcome — there is no silent drop):
+
+        submitted -> queued -> admitted -> finished | oom | degraded
+                          \\-> shed      (TTFT deadline expired while queued:
+                                          even an immediate admission would
+                                          violate, so the capacity goes to
+                                          requests that can still make it)
+                          \\-> rejected  (queue overflow: backpressure —
+                                          lowest-priority newest entries
+                                          still queued beyond ``max_queue``
+                                          AFTER the placement loop bounce)
+
+    Priority tiers: short (interactive) requests are tier 0 and admit ahead
+    of long (batch, ``prompt_len >= long_threshold``) tier-1 requests; each
+    tier carries its own TTFT deadline.  ``preempt`` arms
+    preemption-by-relaxation in ``BaseScheduler.schedule``: before a tier-0
+    request is left to queue (and eventually shed), the scheduler force-runs
+    one cost-gated relax pass — retracting long requests' remote members,
+    cross-node first, NEVER below their profiled ``CPBuckets`` degree — and
+    retries the placement against the freed headroom.
+    """
+
+    def __init__(self, ttft_slo: float = float("inf"),
+                 ttft_slo_long: float | None = None,
+                 long_threshold: int = 100_000,
+                 max_queue: int | None = None,
+                 preempt: bool = True):
+        if ttft_slo <= 0:
+            raise ValueError(f"ttft_slo must be > 0 (got {ttft_slo!r})")
+        if max_queue is not None and max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0 (got {max_queue!r})")
+        self.ttft_slo = ttft_slo
+        # long-tier deadline: batch traffic tolerates a slower first token
+        # (None -> 4x the interactive deadline)
+        self.ttft_slo_long = (ttft_slo_long if ttft_slo_long is not None
+                              else 4.0 * ttft_slo)
+        self.long_threshold = long_threshold
+        self.max_queue = max_queue
+        self.preempt = preempt
+
+    def tier(self, req: Request) -> int:
+        """0 = short/interactive (admits first), 1 = long/batch."""
+        return 1 if req.prompt_len >= self.long_threshold else 0
+
+    def deadline(self, req: Request) -> float:
+        """Absolute time by which the request's first token must land."""
+        slo = self.ttft_slo if self.tier(req) == 0 else self.ttft_slo_long
+        return req.arrival + slo
+
+    def shed_expired(self, cluster: ClusterState, now: float) -> list:
+        """Pre-placement admission-control pass: order the waiting queue by
+        (tier, arrival) so short requests admit first and SHED entries whose
+        TTFT deadline already passed — even an immediate admission would
+        violate.  Statuses are stamped here (the typed outcome); the caller
+        stamps ``finish_time`` and accounts them."""
+        if not cluster.waiting:
+            return []
+        ordered = sorted(cluster.waiting,
+                         key=lambda r: (self.tier(r), r.arrival, r.rid))
+        shed = [r for r in ordered if now > self.deadline(r)]
+        keep = [r for r in ordered if now <= self.deadline(r)]
+        for r in shed:
+            r.status = "shed"
+        cluster.waiting.clear()
+        cluster.waiting.extend(keep)
+        return shed
+
+    def enforce_cap(self, cluster: ClusterState) -> list:
+        """POST-placement backpressure: REJECT the lowest-priority newest
+        entries still queued beyond ``max_queue``.  Runs after the placement
+        loop on purpose — the cap bounds how much work is left WAITING, so
+        a burst that admits immediately never bounces off it (rejecting
+        pre-placement would bounce requests an empty cluster could serve).
+        The queue is already in priority order from ``shed_expired``."""
+        if (self.max_queue is None
+                or len(cluster.waiting) <= self.max_queue):
+            return []
+        keep = list(cluster.waiting)[:self.max_queue]
+        rejected = list(cluster.waiting)[self.max_queue:]
+        for r in rejected:
+            r.status = "rejected"
+        cluster.waiting.clear()
+        cluster.waiting.extend(keep)
+        return rejected
+
+    def control_queue(self, cluster: ClusterState, now: float
+                      ) -> tuple[list, list]:
+        """Both admission-control passes back to back (no placement in
+        between) — the standalone spelling for tests and drivers that
+        manage placement themselves."""
+        shed = self.shed_expired(cluster, now)
+        return self.enforce_cap(cluster), shed
+
+
 def _mk_plan(cluster: ClusterState) -> IterationPlan:
     return IterationPlan([InstancePlan(i) for i in range(cluster.num_instances)])
 
@@ -83,8 +181,12 @@ class BaseScheduler:
     name = "base"
     hol_blocking = False          # stop admitting at the first non-fitting req
 
-    def __init__(self, max_batch_per_instance: int = 256):
+    def __init__(self, max_batch_per_instance: int = 256,
+                 admission: AdmissionController | None = None):
         self.max_batch = max_batch_per_instance
+        # SLO-aware admission controller (None = admit-everything legacy
+        # behaviour: no deadlines, no queue cap, no preemption)
+        self.admission = admission
 
     # -- subclass hooks ---------------------------------------------------
     def place(self, cluster: ClusterState, req: Request, B=None):
@@ -100,9 +202,14 @@ class BaseScheduler:
         ``Escalation`` records; page-table bookkeeping already applied)."""
         return []
 
-    def relax(self, cluster: ClusterState, force: bool = False) -> list:
+    def relax(self, cluster: ClusterState, force: bool = False,
+              exclude: frozenset = frozenset()) -> list:
         """Optionally demote/consolidate running requests' bindings (the
-        inverse of ``escalate``; same record contract)."""
+        inverse of ``escalate``; same record contract).  ``exclude``: rids
+        that must NOT be touched this pass — a request already escalated or
+        relaxed this step has pending frame moves, and a second move would
+        batch into the same gather->scatter reading frames the first hasn't
+        written yet."""
         return []
 
     def place_recovery(self, cluster: ClusterState, req: Request,
@@ -137,6 +244,27 @@ class BaseScheduler:
             max(tokens - slack, 0))
         return {best: tokens}
 
+    def _try_place(self, cluster: ClusterState, req: Request, batch_counts,
+                   now: float) -> bool:
+        """Attempt one admission: place, check batch + KV capacity, and on
+        success commit the allocation/bindings.  Returns True if admitted."""
+        placement = self.place(cluster, req, batch_counts)
+        if placement is None:
+            return False
+        m, binding, split = placement
+        if not (batch_counts[m] < self.max_batch
+                and cluster.page_table.can_allocate(split)):
+            return False
+        cluster.page_table.allocate(req.rid, split)
+        req.moe_binding, req.kv_binding = m, sorted(binding)
+        req.node = cluster.node_of(m)
+        req.status = "running"
+        req.start_time = now
+        cluster.active[req.rid] = req
+        cluster.assign_slot(req.rid, m)
+        batch_counts[m] += 1
+        return True
+
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
         self.rebalance(cluster)
@@ -148,27 +276,47 @@ class BaseScheduler:
         # THIS step is cooldown-protected, so the two passes never fight —
         # and admissions see the post-retraction headroom picture too
         plan.relaxations = self.relax(cluster)
+        # admission control, pass 1 (BEFORE placement): deadline-blown
+        # entries shed and the queue reorders by (tier, arrival) so short
+        # interactive requests admit first; the queue cap is enforced AFTER
+        # placement (pass 2) so a burst the cluster can absorb right now is
+        # never bounced
+        if self.admission is not None:
+            plan.shed = self.admission.shed_expired(cluster, now)
         admitted, still_waiting = [], []
+        # preemption-by-relaxation budget: at most one forced relax pass per
+        # schedule() step — each pass batches its frame moves into the same
+        # gather->scatter, so unbounded retries inside one step would stack
+        # re-shard cost the iteration-time model never charges
+        preempt_left = 1 if (self.admission is not None
+                             and self.admission.preempt) else 0
         batch_counts = np.bincount(
             [r.moe_binding for r in cluster.active.values()],
             minlength=cluster.num_instances)
         while cluster.waiting:
             req = cluster.waiting.popleft()
-            placement = self.place(cluster, req, batch_counts)
-            ok = placement is not None
+            ok = self._try_place(cluster, req, batch_counts, now)
+            if not ok and preempt_left > 0 and self.admission.tier(req) == 0:
+                # preemption-by-relaxation (relax-before-reject): before a
+                # short request is left to queue (and eventually shed),
+                # force a cost-gated relax of long requests' remote members
+                # to free headroom, then retry the placement.  Excluded:
+                # anything already moved this pass — a second move on the
+                # same rid would gather frames the first move hasn't
+                # scattered yet.  Retraction stays bounded by the profiled
+                # bucket degree (``_try_deescalate`` floor), so preemption
+                # can never starve a long request below its own SLO shape.
+                exclude = frozenset(
+                    {e.rid for e in plan.escalations}
+                    | {e.rid for e in plan.relaxations}
+                    | {r.rid for r in admitted})
+                freed = self.relax(cluster, force=True, exclude=exclude)
+                preempt_left -= 1
+                if freed:
+                    plan.relaxations.extend(freed)
+                    plan.preemptions += 1
+                    ok = self._try_place(cluster, req, batch_counts, now)
             if ok:
-                m, binding, split = placement
-                ok = (batch_counts[m] < self.max_batch
-                      and cluster.page_table.can_allocate(split))
-            if ok:
-                cluster.page_table.allocate(req.rid, split)
-                req.moe_binding, req.kv_binding = m, sorted(binding)
-                req.node = cluster.node_of(m)
-                req.status = "running"
-                req.start_time = now
-                cluster.active[req.rid] = req
-                cluster.assign_slot(req.rid, m)
-                batch_counts[m] += 1
                 admitted.append(req)
             else:
                 still_waiting.append(req)
@@ -176,6 +324,10 @@ class BaseScheduler:
                     break
         for req in reversed(still_waiting):
             cluster.waiting.appendleft(req)
+        # admission control, pass 2: queue-depth backpressure on whatever
+        # placement could NOT absorb this step
+        if self.admission is not None:
+            plan.rejected = self.admission.enforce_cap(cluster)
         plan = _fill_plan(cluster, plan)
         plan.admitted = admitted
         plan.deferred = len(still_waiting)
@@ -199,8 +351,9 @@ class DualBalancedScheduler(BaseScheduler):
                  inter_node_penalty: int | None = None,
                  allow_relaxation: bool = True,
                  relax_guard: int | None = None,
-                 relax_cooldown: int = 4):
-        super().__init__(max_batch_per_instance)
+                 relax_cooldown: int = 4,
+                 admission: AdmissionController | None = None):
+        super().__init__(max_batch_per_instance, admission=admission)
         self.buckets = buckets
         self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
         # hierarchical (two-level) placement: a binding prefers its home
@@ -308,7 +461,8 @@ class DualBalancedScheduler(BaseScheduler):
         return out
 
     # -- DCP relaxation (the inverse of escalation) -------------------------
-    def relax(self, cluster: ClusterState, force: bool = False) -> list:
+    def relax(self, cluster: ClusterState, force: bool = False,
+              exclude: frozenset = frozenset()) -> list:
         """Demote running requests whose bindings outgrew their need.
 
         The mirror of ``escalate``: a request relaxes when (a) its binding
@@ -321,7 +475,11 @@ class DualBalancedScheduler(BaseScheduler):
         keep ``low_water + guard`` free afterwards (the escalation trigger
         cannot immediately re-fire) and a request never relaxes twice within
         ``relax_cooldown`` passes (``force`` — the engine's ``compact()``
-        maintenance pass — overrides the cooldown, never the guard band).
+        maintenance pass and the scheduler's preemption-by-relaxation —
+        overrides the cooldown, never the guard band).  ``exclude``: rids
+        with pending frame moves this pass (escalated/relaxed earlier in
+        the same step) — forced preemption must skip them, since the engine
+        batches the whole pass into ONE gather->scatter.
         Page-table bookkeeping happens here; the physical move is the
         returned records' coordinate tensors, same as escalation.
         """
@@ -333,6 +491,8 @@ class DualBalancedScheduler(BaseScheduler):
         guard = self._relax_guard(cluster)
         touched = set()
         for rid in sorted(cluster.active):
+            if rid in exclude:
+                continue
             req = cluster.active[rid]
             if req.moe_binding in cluster.dead_instances:
                 continue

@@ -27,7 +27,12 @@ class Request:
     dec_prefix_len: int = -1
     # --- dynamic ---
     generated: int = 0
-    status: str = "waiting"          # waiting | running | finished | preempted
+    # waiting | running | finished, or a typed non-success outcome: oom
+    # (KV spill nobody could absorb), degraded (failure recovery lacked
+    # headroom), rejected (admission queue overflow), shed (TTFT deadline
+    # expired while queued).  Every non-success status is an SLO violation
+    # in the honest-denominator metrics (serving.metrics.VIOLATION_STATUSES).
+    status: str = "waiting"
     kv_binding: list = field(default_factory=list)   # P_r (instance ids)
     moe_binding: int = -1            # m_r (always in kv_binding)
     node: int = -1
@@ -304,6 +309,14 @@ class IterationPlan:
     # back onto the MoE-binding shard.  Same contract as escalations — the
     # bookkeeping is applied, the physical re-shard is owed.
     relaxations: list = field(default_factory=list)
+    # typed admission outcomes decided this pass (scheduler.AdmissionController
+    # — requests REMOVED from the waiting queue, never silently dropped; the
+    # caller owes them a finish_time stamp and a results entry):
+    rejected: list = field(default_factory=list)   # queue-overflow backpressure
+    shed: list = field(default_factory=list)       # TTFT deadline blown in queue
+    # preemption-by-relaxation events: a short request's failed placement
+    # triggered a forced relax pass that freed the headroom to admit it
+    preemptions: int = 0
 
     def plan_of(self, instance: int) -> InstancePlan:
         return self.instances[instance]

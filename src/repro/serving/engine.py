@@ -77,6 +77,12 @@ class GenResult:
     # headroom or the arch pins unrecoverable per-slot state — the request
     # completed early with the tokens it had, never hanging)
     recovered: bool | None = None
+    # admission-control outcomes: the request never ran (no tokens) — it
+    # bounced off a full queue (rejected) or its TTFT deadline expired
+    # while queued (shed).  Both are typed SLO violations, never a silent
+    # drop.
+    rejected: bool = False
+    shed: bool = False
 
 
 class UnsupportedDrainError(RuntimeError):
@@ -112,7 +118,8 @@ class NanoCPEngine:
                  eos_token: int | None = None,
                  max_slots_per_instance: int = 16,
                  pipeline: bool = True,
-                 audit_donation_every_step: bool = False):
+                 audit_donation_every_step: bool = False,
+                 admission=None):
         self.cfg = cfg
         self.mesh = mesh
         self.tp = tp or mesh.shape["model"]
@@ -144,6 +151,12 @@ class NanoCPEngine:
             # at admission so the first appended tokens never spill
             kv_reserve=page_size if self._append_tokens else 0,
             allow_escalation=self._append_tokens)
+        if admission is not None:
+            # SLO-aware admission control (core.scheduler.AdmissionController)
+            # attaches to whichever scheduler serves this engine — the
+            # control loop (deadlines, shedding, preemption-by-relaxation)
+            # lives in schedule(), not here
+            self.scheduler.admission = admission
         if not self._append_tokens and \
                 getattr(self.scheduler, "allow_escalation", False):
             # a caller-supplied scheduler must not escalate when decode
@@ -230,7 +243,8 @@ class NanoCPEngine:
             "spill_escalations": 0, "oom_finishes": 0, "drains": 0,
             "relaxations": 0, "relax_tokens": 0, "compacts": 0,
             "failures": 0, "recovered_tokens": 0, "reprefill_tokens": 0,
-            "degraded_finishes": 0, "joins": 0}
+            "degraded_finishes": 0, "joins": 0,
+            "rejected": 0, "shed": 0, "preemptions": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -539,6 +553,7 @@ class NanoCPEngine:
             return []
         self.results[err.rid].oom = True
         self.cluster.finish(req, now)
+        req.status = "oom"
         self.finished.append(req)
         self.hot_path_stats["oom_finishes"] += 1
         return [req]
@@ -701,6 +716,7 @@ class NanoCPEngine:
                 self.results[rid].recovered = False
                 self._discard_inflight({rid})
                 cl.finish(req, now)
+                req.status = "degraded"
                 self.finished.append(req)
                 finished.append(req)
                 self.hot_path_stats["degraded_finishes"] += 1
@@ -886,10 +902,29 @@ class NanoCPEngine:
         # escalation records precede relaxation records, matching the order
         # the scheduler applied their page-table bookkeeping.
         self._apply_escalations(plan.escalations + plan.relaxations)
-        prefill_done = []
+        # typed admission-control outcomes: a rejected/shed request never
+        # ran (its GenResult stays token-free), but it finishes HERE — in
+        # the done list, in ``self.finished``, flagged on the result —
+        # never a silent drop
+        dropped = []
+        for req in plan.rejected + plan.shed:
+            res = self.results.get(req.rid)
+            if res is not None:
+                if req.status == "rejected":
+                    res.rejected = True
+                else:
+                    res.shed = True
+            req.finish_time = now
+            self.finished.append(req)
+            dropped.append(req)
+        self.hot_path_stats["rejected"] += len(plan.rejected)
+        self.hot_path_stats["shed"] += len(plan.shed)
+        self.hot_path_stats["preemptions"] += plan.preemptions
+        prefill_done = dropped
         if plan.admitted:
             t0 = time.perf_counter()
-            prefill_done = self._prefill_batch(plan.admitted, now) or []
+            prefill_done = dropped + (self._prefill_batch(plan.admitted, now)
+                                      or [])
             self.timings["prefill_us"] = (time.perf_counter() - t0) * 1e6
         if not self.cluster.active:
             # drain a trailing iteration

@@ -46,6 +46,14 @@ class SimResult:
     finished: list = field(default_factory=list)
     iterations: int = 0
     sim_time: float = 0.0
+    # closed-loop SLO accounting: every submitted request ends in exactly
+    # one typed outcome (finished/oom/degraded/rejected/shed) — `submitted`
+    # is the honest attainment denominator, so dropping load can only ever
+    # LOWER the measured curve
+    submitted: int = 0                                     # trace size offered
+    rejected: int = 0                                      # queue-overflow bounces
+    shed: int = 0                                          # TTFT deadline expiries
+    preemptions: int = 0                                   # forced relax-to-admit passes
     # time series for the balance / HoL analyses
     batch_series: list = field(default_factory=list)       # [iters, I]
     kv_series: list = field(default_factory=list)          # [iters, I]
@@ -317,6 +325,7 @@ class ClusterSimulator:
         ones); merged with failure_events in time order."""
         import time as _time
         res = SimResult()
+        res.submitted = len(workload.requests)
         cl = self.cluster
         arrivals = sorted(workload.requests, key=lambda r: r.arrival)
         ai = 0
@@ -354,9 +363,28 @@ class ClusterSimulator:
             # re-shard time (the engine instead dispatches migrate.KVReshard)
             now = self._charge_reshard(
                 res, plan.escalations + plan.relaxations, now)
+            # typed admission-control outcomes: statuses were stamped by the
+            # controller; the drop is accounted HERE (finish_time + finished
+            # list) so no request ever silently vanishes from the metrics
+            for r in plan.rejected + plan.shed:
+                r.finish_time = now
+                res.finished.append(r)
+            res.rejected += len(plan.rejected)
+            res.shed += len(plan.shed)
+            res.preemptions += plan.preemptions
             if not cl.active:
                 if ai < len(arrivals):
                     now = max(now, arrivals[ai].arrival)
+                    continue
+                if (cl.waiting and self.scheduler.admission is not None
+                        and any(self.scheduler.admission.deadline(r)
+                                < float("inf") for r in cl.waiting)):
+                    # nothing runs but deadlined requests still queue
+                    # (e.g. they can never place): the clock must keep
+                    # moving so their TTFT deadlines expire into a typed
+                    # shed — breaking here would let a stuck request dodge
+                    # its outcome (the engine driver advances identically)
+                    now += self.sched_overhead
                     continue
                 break
 

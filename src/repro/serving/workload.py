@@ -49,7 +49,10 @@ class Workload:
         out, lo = {}, 0
         for e in (*edges, np.inf):
             key = f"{lo}-{e}"
-            out[key] = float(((lens >= lo) & (lens < e)).mean())
+            # an empty trace (rate * duration rounded down to zero arrivals)
+            # has zero share everywhere — not a NaN that poisons the sweep
+            out[key] = (float(((lens >= lo) & (lens < e)).mean())
+                        if lens.size else 0.0)
             lo = e
         return out
 
@@ -61,7 +64,28 @@ def make_workload(kind: str, *, rate: float, duration: float,
 
     ``rate`` requests/s Poisson for ``duration`` seconds.  ``long_ratio``
     only applies to kind="mixed" (paper: 0.01 / 0.05).
+
+    Reproducible by construction: the same ``seed`` (with the same
+    parameters) yields an identical trace — arrivals, lengths, and decode
+    budgets all come from one ``default_rng(seed)`` stream.  The trace may
+    legitimately be EMPTY (first Poisson arrival >= duration at low
+    rate x duration); consumers must treat that as zero load, not an error.
     """
+    if not rate > 0:
+        raise ValueError(f"make_workload: rate must be > 0 (got {rate!r})")
+    if duration < 0:
+        raise ValueError(
+            f"make_workload: duration must be >= 0 (got {duration!r})")
+    if decode_hi < decode_lo:
+        raise ValueError(
+            f"make_workload: decode_hi ({decode_hi}) < decode_lo "
+            f"({decode_lo})")
+    if decode_lo <= 0:
+        raise ValueError(
+            f"make_workload: decode_lo must be > 0 (got {decode_lo})")
+    if kind != "mixed" and kind not in DATASETS:
+        raise ValueError(f"make_workload: unknown kind {kind!r} "
+                         f"(want mixed | {' | '.join(DATASETS)})")
     rng = np.random.default_rng(seed)
     reqs, t, rid = [], 0.0, 0
     while True:

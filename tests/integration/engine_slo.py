@@ -1,0 +1,347 @@
+"""Closed-loop SLO engine cells: admission control, typed drops, and
+preemption-by-relaxation on the REAL engine, token-for-token vs reference.
+
+Each mode drives ``NanoCPEngine`` with an ``AdmissionController`` installed
+on the scheduler and asserts the closed loop's invariants: every submitted
+request ends in EXACTLY one typed outcome (finished | oom | degraded |
+rejected | shed — no silent drop), dropped requests never emit tokens, and
+every request that DOES run matches the single-device greedy reference
+bit-for-bit with step donation intact:
+
+  * shed    — the box is full of two decoding requests; a third arrives,
+              cannot place, and its TTFT deadline expires while queued: it
+              sheds with a typed outcome while the residents finish clean.
+  * reject  — ``max_queue=1``: with the box full, the second queued request
+              bounces immediately (backpressure); the first queued one
+              admits once a resident finishes and still matches reference.
+  * preempt — relax-before-reject: a resident long request escalates under
+              decode growth, leaving free space SPLIT across instances; a
+              short arrival cannot place until the forced relax pass pulls
+              the escalated fragment home (concentrating the free space) —
+              ``preemptions >= 1``, the retraction NEVER cuts below the
+              profiled ``CPBuckets`` degree, and all three requests finish
+              with reference tokens.
+  * parity  — the same trace through the analytic ``ClusterSimulator`` and
+              the engine on the virtual model clock produces the SAME typed
+              outcome histogram (sim-vs-engine SLO parity smoke): shorts
+              finish in both tiers, never-placeable longs shed in both.
+
+Steps with no possible admission run under ``jax.transfer_guard
+("disallow")``; donation_copies must not grow across the guarded steps.
+
+Usage: engine_slo.py MODE [pipe]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.core.scheduler import AdmissionController, DualBalancedScheduler
+from repro.models import init_params, transformer
+from repro.serving import slo
+from repro.serving.engine import NanoCPEngine
+from repro.serving.simulator import ClusterSimulator
+
+VOCAB = 256
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def _cfg_params():
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _build(cfg, params, *, cap, buckets, admission, pipeline,
+           kv_reserve=0, escalate_headroom=None, relax_guard=None,
+           relax_cooldown=4, slots=4):
+    sched = DualBalancedScheduler(
+        buckets=buckets, max_batch_per_instance=8, kv_reserve=kv_reserve,
+        escalate_headroom=escalate_headroom, relax_guard=relax_guard,
+        relax_cooldown=relax_cooldown, admission=admission)
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=2, instances_per_node=2, tp=2,
+        kv_capacity_tokens=cap, page_size=16, buckets=buckets,
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4, 8),
+                                   s_buckets=(0, 1, 2, 4), window=2),
+        scheduler=sched, max_slots_per_instance=slots, pipeline=pipeline,
+        audit_donation_every_step=True)
+    return eng, sched
+
+
+def _check_conservation(eng, n_submitted):
+    fin = {r.rid: r for r in eng.finished}
+    assert len(fin) == n_submitted, \
+        (len(fin), n_submitted, "a request vanished without a typed outcome")
+    oc = slo.outcome_counts(eng.finished)
+    assert sum(oc.values()) == n_submitted, oc
+    for r in eng.finished:
+        assert r.status in slo.OUTCOMES, (r.rid, r.status)
+        assert r.finish_time >= 0.0, (r.rid, r.finish_time)
+    return fin, oc
+
+
+def _check_tokens(eng, cfg, params, prompts, reqs, fin, skip=()):
+    for rid, (prompt, (_, n)) in enumerate(zip(prompts, reqs)):
+        res = eng.results[rid]
+        if rid in skip:
+            assert res.tokens == [], (rid, "dropped request emitted tokens")
+            continue
+        assert len(res.tokens) == n, (rid, res.tokens)
+        ref = reference(cfg, params, prompt, n)
+        assert res.tokens == ref, (rid, res.tokens, ref)
+        print(f"  rid {rid}: {len(res.tokens)} tokens == ref")
+
+
+def _check_donation(eng, copies_before):
+    st = eng.aot.stats
+    assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+    assert st.donation_copies == copies_before, \
+        ("SLO control loop broke step donation", st.as_dict())
+    print(f"  aot: {st.as_dict()}")
+
+
+def run_shed(pipeline: bool) -> None:
+    cfg, params = _cfg_params()
+    buckets = CPBuckets(edges=(100_000,), degrees=(1, 2))
+    adm = AdmissionController(ttft_slo=0.01, ttft_slo_long=0.01,
+                              long_threshold=100_000, preempt=False)
+    eng, _ = _build(cfg, params, cap=256, buckets=buckets, admission=adm,
+                    pipeline=pipeline)
+    rng = np.random.default_rng(0)
+    # A and B fill both instances (15/16 frames each); C cannot place and
+    # its 0.011 deadline expires at step 22 of A/B's 40-step decode
+    reqs = [(200, 40), (200, 40), (112, 4)]
+    prompts = [rng.integers(0, VOCAB, (L,)) for L, _ in reqs]
+    arrivals = {0: [(prompts[0], 40), (prompts[1], 40)],
+                2: [(prompts[2], 4)]}
+    copies_before = None
+
+    def clock(step):
+        return step * 0.0005
+
+    # warm up outside the guard, then capture the donation floor
+    rids = []
+    for step in range(400):
+        now = clock(step)
+        for p, n in arrivals.get(step, ()):
+            rids.append(eng.add_request(p, n, now=now))
+        cl = eng.cluster
+        if not (cl.active or cl.waiting or eng._inflight is not None) \
+                and step > 3:
+            break
+        if step < 3 or cl.waiting:
+            eng.step(now=now)
+        else:
+            if copies_before is None:
+                copies_before = eng.aot.stats.donation_copies
+            with jax.transfer_guard("disallow"):
+                eng.step(now=now)
+    assert not eng.cluster.active and eng._inflight is None
+
+    fin, oc = _check_conservation(eng, 3)
+    hp = eng.hot_path_stats
+    print(f"mode=shed pipeline={pipeline}: outcomes={oc} "
+          f"shed={hp['shed']} rejected={hp['rejected']}")
+    assert fin[2].status == "shed" and eng.results[2].shed, fin[2].status
+    assert hp["shed"] == 1 and hp["rejected"] == 0, hp
+    # the shed landed when the deadline passed, not before
+    assert fin[2].finish_time > adm.deadline(fin[2]), \
+        (fin[2].finish_time, adm.deadline(fin[2]))
+    assert oc["finished"] == 2 and oc["shed"] == 1, oc
+    _check_tokens(eng, cfg, params, prompts, reqs, fin, skip={2})
+    _check_donation(eng, copies_before)
+    print(f"mode=shed pipeline={pipeline}: PASS")
+
+
+def run_reject(pipeline: bool) -> None:
+    cfg, params = _cfg_params()
+    buckets = CPBuckets(edges=(100_000,), degrees=(1, 2))
+    adm = AdmissionController(ttft_slo=1e9, long_threshold=100_000,
+                              max_queue=1, preempt=False)
+    eng, _ = _build(cfg, params, cap=256, buckets=buckets, admission=adm,
+                    pipeline=pipeline)
+    rng = np.random.default_rng(1)
+    # A and B fill the box; C and D queue behind them -> the queue cap of 1
+    # bounces D (newest same-tier entry) while C admits after A/B finish
+    reqs = [(200, 24), (200, 24), (112, 4), (112, 4)]
+    prompts = [rng.integers(0, VOCAB, (L,)) for L, _ in reqs]
+    eng.add_request(prompts[0], 24, now=0.0)
+    eng.add_request(prompts[1], 24, now=0.0)
+    eng.step(now=0.0)
+    eng.add_request(prompts[2], 4, now=0.001)
+    eng.add_request(prompts[3], 4, now=0.002)
+    for step in range(1, 400):
+        cl = eng.cluster
+        if not (cl.active or cl.waiting or eng._inflight is not None):
+            break
+        eng.step(now=step * 0.0005)
+    assert not eng.cluster.active and eng._inflight is None
+
+    fin, oc = _check_conservation(eng, 4)
+    hp = eng.hot_path_stats
+    print(f"mode=reject pipeline={pipeline}: outcomes={oc} "
+          f"rejected={hp['rejected']} shed={hp['shed']}")
+    assert fin[3].status == "rejected" and eng.results[3].rejected, \
+        fin[3].status
+    assert hp["rejected"] == 1 and hp["shed"] == 0, hp
+    assert oc["finished"] == 3 and oc["rejected"] == 1, oc
+    # C (kept by the cap: older arrival wins) admitted later and is exact
+    _check_tokens(eng, cfg, params, prompts, reqs, fin, skip={3})
+    print(f"mode=reject pipeline={pipeline}: PASS")
+
+
+def run_preempt(pipeline: bool) -> None:
+    cfg, params = _cfg_params()
+    buckets = CPBuckets(edges=(100_000,), degrees=(1, 2))
+    adm = AdmissionController(ttft_slo=1e9, long_threshold=100_000,
+                              preempt=True)
+    eng, sched = _build(cfg, params, cap=256, buckets=buckets, admission=adm,
+                        pipeline=pipeline, kv_reserve=0,
+                        escalate_headroom=16, relax_guard=0,
+                        relax_cooldown=64)
+    # record every relax pass: preemption must retract members, and NEVER
+    # below the profiled bucket degree for the victim's current length
+    relax_log = []
+    orig_relax = sched.relax
+
+    def relax(cluster, force=False, exclude=frozenset()):
+        recs = orig_relax(cluster, force=force, exclude=exclude)
+        for rec in recs:
+            length = (cluster.active[rec.rid].length
+                      if rec.rid in cluster.active else None)
+            relax_log.append((force, length, rec))
+        return recs
+
+    sched.relax = relax
+    rng = np.random.default_rng(2)
+    # D grows to 15/16 frames on its instance; A (220 prompt) escalates
+    # under its own decode growth, leaving an escalated fragment on D's
+    # instance; B then cannot place ANYWHERE until the forced relax pass
+    # pulls A's fragment home, concentrating the free space
+    reqs = [(128, 100), (220, 45), (112, 4)]
+    prompts = [rng.integers(0, VOCAB, (L,)) for L, _ in reqs]
+    arrivals = {0: [(prompts[0], 100), (prompts[1], 45)],
+                30: [(prompts[2], 4)]}
+    rids = []
+    copies_before = None
+    for step in range(400):
+        now = float(step)
+        for p, n in arrivals.get(step, ()):
+            rids.append(eng.add_request(p, n, now=now))
+        cl = eng.cluster
+        if not (cl.active or cl.waiting or eng._inflight is not None) \
+                and step > 30:
+            break
+        if step < 3 or cl.waiting or step == 30:
+            eng.step(now=now)
+        else:
+            if copies_before is None:
+                copies_before = eng.aot.stats.donation_copies
+            with jax.transfer_guard("disallow"):
+                eng.step(now=now)
+    assert not eng.cluster.active and eng._inflight is None
+
+    fin, oc = _check_conservation(eng, 3)
+    hp = eng.hot_path_stats
+    forced = [(ln, rec) for f, ln, rec in relax_log if f]
+    print(f"mode=preempt pipeline={pipeline}: outcomes={oc} "
+          f"preemptions={hp['preemptions']} escalations={hp['escalations']} "
+          f"spill_esc={hp['spill_escalations']} forced_relax={len(forced)}")
+    assert hp["preemptions"] >= 1, \
+        (hp, "relax-before-reject never fired")
+    assert forced, "no forced relax records"
+    for length, rec in forced:
+        assert len(rec.new_binding) >= 1, rec
+        if length is not None:
+            floor = buckets.cp_degree(length)
+            assert len(rec.new_binding) >= floor, \
+                (rec, length, floor, "preemption cut below bucket degree")
+        assert set(rec.new_binding) <= set(rec.old_binding), rec
+    # nothing was dropped: preemption freed room instead of shedding
+    assert oc["finished"] == 3 and oc["shed"] == 0 and oc["rejected"] == 0, oc
+    _check_tokens(eng, cfg, params, prompts, reqs, fin)
+    _check_donation(eng, copies_before)
+    print(f"mode=preempt pipeline={pipeline}: PASS")
+
+
+def run_parity(pipeline: bool) -> None:
+    """Same trace, same scheduler/admission config, both execution tiers:
+    the typed outcome histogram must MATCH (shorts finish everywhere, the
+    never-placeable longs shed in both tiers once the clock keeps moving)."""
+    cfg, params = _cfg_params()
+    buckets = CPBuckets(edges=(128,), degrees=(1, 2))
+
+    def mk_sched():
+        return DualBalancedScheduler(
+            buckets=buckets, max_batch_per_instance=8, kv_reserve=16,
+            admission=AdmissionController(ttft_slo=0.005, ttft_slo_long=0.02,
+                                          long_threshold=100, preempt=True))
+
+    # long 400+4 needs 13 frames/instance even at CP2 — never placeable in
+    # a 12-frame box; shorts sail through.  Both tiers must agree.
+    wl = slo.make_tiny_trace(6, 2, gap=0.0004, short_len=40, long_len=400,
+                             decode=4)
+
+    sim = ClusterSimulator(cfg, mk_sched(), num_instances=2,
+                           instances_per_node=2, kv_capacity_tokens=192,
+                           page_size=16)
+    sim_fin, sim_sub, _ = slo.run_sim_trace(sim, wl, horizon=5.0)
+    sim_oc = slo.outcome_counts(sim_fin)
+
+    eng, _ = _build(cfg, params, cap=192, buckets=buckets,
+                    admission=None, pipeline=pipeline, kv_reserve=16,
+                    slots=8)
+    eng.scheduler.admission = mk_sched().admission
+    shadow = ClusterSimulator(cfg, mk_sched(), num_instances=2,
+                              instances_per_node=2, kv_capacity_tokens=192,
+                              page_size=16)
+    eng_fin, eng_sub, _now = slo.run_engine_clocked(eng, wl, shadow=shadow,
+                                                    max_iters=1200)
+    eng_oc = slo.outcome_counts(eng_fin)
+
+    print(f"mode=parity pipeline={pipeline}: sim={sim_oc} engine={eng_oc}")
+    assert sim_sub == eng_sub == len(wl.requests), (sim_sub, eng_sub)
+    assert sim_oc == eng_oc, ("sim-vs-engine outcome mismatch",
+                              sim_oc, eng_oc)
+    assert eng_oc["finished"] == 6 and eng_oc["shed"] == 2, eng_oc
+    # conservation on both tiers
+    assert len(sim_fin) == sim_sub and len(eng_fin) == eng_sub
+    # the engine tier's finished shorts are still exact
+    fin = {r.rid: r for r in eng_fin}
+    trace = {t.rid: t for t in wl.requests}
+    for rid, r in fin.items():
+        if r.status != "finished":
+            continue
+        tr = trace[rid]
+        prompt = [1 + (rid * 31 + k) % 97 for k in range(tr.prompt_len)]
+        ref = reference(cfg, params, prompt, tr.max_new_tokens)
+        assert eng.results[rid].tokens == ref, (rid,)
+    print(f"mode=parity pipeline={pipeline}: PASS")
+
+
+MODES = {"shed": run_shed, "reject": run_reject, "preempt": run_preempt,
+         "parity": run_parity}
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1]
+    pipeline = "pipe" in sys.argv[2:]
+    MODES[mode](pipeline)

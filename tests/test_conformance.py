@@ -148,6 +148,30 @@ def test_engine_multinode(mode):
     assert "PASS" in out
 
 
+# closed-loop SLO cells: admission control on the REAL engine — typed
+# outcomes (shed / rejected, never a silent drop), preemption-by-relaxation
+# (relax-before-reject, retraction never below the profiled bucket degree),
+# and the sim-vs-engine typed-outcome parity smoke — token-for-token vs
+# reference with donation_copies == 0 under the transfer guard
+# (tests/integration/engine_slo.py).
+SLO_CELLS = [
+    ("shed", False), ("shed", True),
+    ("reject", False),
+    ("preempt", False), ("preempt", True),
+    ("parity", False),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mode,pipeline", SLO_CELLS,
+                         ids=[f"{m}-{'pipe' if p else 'nopipe'}"
+                              for m, p in SLO_CELLS])
+def test_engine_slo(mode, pipeline):
+    args = [mode] + (["pipe"] if pipeline else [])
+    out = run_integration("engine_slo.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_multinode_conformance_cell():
     """Full conformance workload on a two-node W=4, I=8 topology (nothing

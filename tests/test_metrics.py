@@ -1,0 +1,161 @@
+"""Honest serving metrics: the bugfixes that stop the curves from lying.
+
+The attainment/goodput denominator counts EVERY submitted request (typed
+drops are violations), TTFT and TPOT are separate budgets with separate
+normalizations, and the knee finder scans the whole rate grid instead of
+early-breaking on the first miss.
+"""
+import math
+
+import pytest
+
+from repro.core.state import Request
+from repro.serving import metrics
+
+
+def req(rid=0, arrival=0.0, token_times=None, generated=None,
+        finish=None, status="finished", prompt_len=8):
+    """A hand-built finished-list entry."""
+    token_times = token_times or []
+    generated = len(token_times) if generated is None else generated
+    r = Request(rid=rid, prompt_len=prompt_len,
+                max_new_tokens=max(generated, 1), arrival=arrival)
+    r.generated = generated
+    r.token_times = list(token_times)
+    r.status = status
+    r.finish_time = (finish if finish is not None
+                     else (token_times[-1] if token_times else arrival))
+    return r
+
+
+# ------------------------------------------------------------------ #
+# TTFT / TPOT normalizations
+# ------------------------------------------------------------------ #
+def test_ttft_is_arrival_to_first_token():
+    r = req(arrival=0.5, token_times=[1.0, 1.1, 1.3])
+    assert metrics.ttft(r) == pytest.approx(0.5)
+    # no tokens -> infinite TTFT (still queued / dropped)
+    assert metrics.ttft(req(status="shed")) == float("inf")
+
+
+def test_tpot_is_decode_normalized():
+    r = req(arrival=0.5, token_times=[1.0, 1.1, 1.3])
+    # mean inter-token gap: (1.3 - 1.0) / 2 — queueing lives in TTFT
+    assert metrics.tpot(r) == pytest.approx(0.15)
+    # the legacy alias folds queueing + prefill into the per-token number
+    assert metrics.tpot_with_queueing(r) == pytest.approx((1.3 - 0.5) / 3)
+    # the two normalizations must disagree exactly by the queueing share
+    assert metrics.tpot(r) < metrics.tpot_with_queueing(r)
+
+
+def test_tpot_edge_cases():
+    # single emitted token: no decode gap, trivially meets any TPOT SLO
+    assert metrics.tpot(req(token_times=[2.0])) == 0.0
+    # no per-token timestamps: falls back to the queueing normalization
+    r = req(arrival=0.0, generated=4, finish=2.0)
+    assert metrics.tpot(r) == pytest.approx(0.5)
+    # nothing generated: infinite
+    assert metrics.tpot(req(generated=0, finish=1.0)) == float("inf")
+    assert metrics.tpot_with_queueing(req(generated=0)) == float("inf")
+
+
+def test_percentiles_evaluate_tpot_once_per_request():
+    calls = []
+
+    def counting(r):
+        calls.append(r.rid)
+        return 0.01
+
+    rs = [req(rid=i, token_times=[1.0, 1.1]) for i in range(5)]
+    metrics.p99_tpot(rs, counting)
+    assert len(calls) == 5, "p99 must not double-evaluate tpot"
+    calls.clear()
+    metrics.mean_tpot(rs, counting)
+    assert len(calls) == 5, "mean must not double-evaluate tpot"
+
+
+# ------------------------------------------------------------------ #
+# honest attainment / goodput
+# ------------------------------------------------------------------ #
+def good(rid):
+    return req(rid=rid, arrival=0.0, token_times=[0.01, 0.02, 0.03])
+
+
+def test_attainment_counts_all_submitted():
+    rs = [good(0), good(1)]
+    # two good finishes out of four submitted: 0.5, not 1.0
+    assert metrics.slo_attainment(rs, 0.05, submitted=4) == pytest.approx(0.5)
+    # finished list longer than the claimed submitted count: use the list
+    assert metrics.slo_attainment(rs, 0.05, submitted=1) == pytest.approx(1.0)
+    assert metrics.slo_attainment([], 0.05) == 0.0
+
+
+def test_typed_outcomes_are_violations():
+    for status in ("rejected", "shed", "oom", "degraded"):
+        r = good(0)
+        r.status = status           # perfect latencies, typed non-success
+        assert metrics.slo_attainment([r], 0.05, submitted=1) == 0.0
+
+
+def test_shedding_cannot_raise_attainment():
+    """THE regression pin: serving a slow request and shedding it must
+    score identically — and dropping it from the books entirely must not
+    help either.  (The old finished-only denominator let a controller
+    shed its way to 100%.)"""
+    slow = req(rid=9, arrival=0.0, token_times=[0.0, 10.0, 20.0])
+    base = [good(i) for i in range(8)] + [slow]
+    att_served = metrics.slo_attainment(base, 0.05, submitted=9)
+
+    shed = [good(i) for i in range(8)] + [req(rid=9, status="shed")]
+    att_shed = metrics.slo_attainment(shed, 0.05, submitted=9)
+
+    vanished = [good(i) for i in range(8)]        # silently dropped
+    att_vanished = metrics.slo_attainment(vanished, 0.05, submitted=9)
+
+    assert att_served == att_shed == att_vanished == pytest.approx(8 / 9)
+
+
+def test_ttft_budget_is_separate():
+    r = req(arrival=0.0, token_times=[1.0, 1.01, 1.02])   # slow first token
+    assert metrics.slo_attainment([r], 0.05, submitted=1) == 1.0
+    assert metrics.slo_attainment([r], 0.05, submitted=1,
+                                  ttft_slo=0.5) == 0.0
+
+
+def test_goodput():
+    rs = [good(0), good(1), req(rid=2, status="shed")]
+    assert metrics.goodput(rs, 0.05, duration=2.0) == pytest.approx(1.0)
+    # duration defaults to the last observed finish time
+    assert metrics.goodput(rs, 0.05) == pytest.approx(2 / 0.03)
+    assert metrics.goodput([], 0.05) == 0.0
+    assert metrics.goodput(rs, 0.05, duration=0.0) == 0.0
+
+
+# ------------------------------------------------------------------ #
+# knee finder: full scan, honest per-rate stats
+# ------------------------------------------------------------------ #
+def test_max_sustainable_rate_scans_past_a_dip():
+    """Attainment is NOT monotone in offered rate (batching sweet spots);
+    the old first-miss early-break under-reported the knee."""
+    att_by_rate = {100: 1.0, 200: 0.0, 300: 1.0, 400: 0.0}
+
+    def run_at(rate):
+        if att_by_rate[rate] >= 1.0:
+            return [good(0), good(1)], 2
+        return [req(rid=0, status="shed"), req(rid=1, status="shed")], 2
+
+    best, stats = metrics.max_sustainable_rate(
+        run_at, (100, 200, 300, 400), slo=0.05, target=0.99)
+    assert best == 300, (best, "early-break would have said 100")
+    assert set(stats) == {100, 200, 300, 400}
+    assert stats[200]["attainment"] == 0.0
+    assert stats[300]["submitted"] == 2
+
+
+def test_max_sustainable_rate_none_pass():
+    def run_at(rate):
+        return [req(rid=0, status="shed")], 1
+
+    best, stats = metrics.max_sustainable_rate(run_at, (10, 20), slo=0.05)
+    assert best == 0
+    assert all(not math.isnan(s["attainment"]) for s in stats.values())
