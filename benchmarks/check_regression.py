@@ -44,12 +44,15 @@ DEFAULTS = {
     "decode": ("BENCH_decode_step.json", "BENCH_decode_step.smoke.json"),
     "escalation": ("BENCH_escalation.json", "BENCH_escalation.smoke.json"),
     "slo_sweep": ("BENCH_slo_sweep.json", "BENCH_slo_sweep.smoke.json"),
+    "prefix_cache": ("BENCH_prefix_cache.json",
+                     "BENCH_prefix_cache.smoke.json"),
 }
 
 # metrics where BIGGER is better (sustainable rate, attainment, goodput):
 # the regression ratio inverts (baseline/current), so a DROP fails the gate
 # and an improvement never does.  Prefix match on "file:key".
-HIGHER_IS_BETTER_PREFIXES = ("slo_sweep:",)
+HIGHER_IS_BETTER_PREFIXES = ("slo_sweep:", "prefix_cache:hit_rate",
+                             "prefix_cache:saved")
 
 # built-in per-metric EXTRA tolerance (prefix of "file:key" -> added ON
 # TOP of the global --tol, so a looser global gate — the nightly's
@@ -124,6 +127,25 @@ def slo_metrics(rep: dict) -> dict:
     return out
 
 
+def prefix_metrics(rep: dict) -> dict:
+    """Gate the share-ratio sweep's headline shape: per share level the
+    cache hit rate (higher-is-better) and the novel prompt tokens actually
+    prefilled (lower-is-better), plus the prefill fraction the cache saves
+    vs the cache-off control at top share (higher-is-better).  The sim is
+    deterministic, so these are exact — a drift means behavior changed."""
+    out = {}
+    for c in rep.get("cells", []):
+        tag = f"f{int(round(c['frac'] * 100)):02d}"
+        out[f"hit_rate.{tag}"] = float(c["hit_rate"])
+        out[f"novel_tokens.{tag}"] = float(c["novel_prompt_tokens"])
+    ctrl = rep.get("control")
+    if ctrl and rep.get("cells") and ctrl["prefill_time_s"] > 0:
+        top = rep["cells"][-1]
+        out["saved_prefill_frac"] = 1.0 - (top["prefill_time_s"]
+                                           / ctrl["prefill_time_s"])
+    return out
+
+
 def compare(name: str, cur: dict, base: dict, tol: float,
             metric_tol: dict | None = None) -> list[str]:
     failures = []
@@ -161,6 +183,8 @@ def main() -> int:
     ap.add_argument("--escalation", default=DEFAULTS["escalation"][0])
     ap.add_argument("--slo-sweep", dest="slo_sweep",
                     default=DEFAULTS["slo_sweep"][0])
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    default=DEFAULTS["prefix_cache"][0])
     ap.add_argument("--tol", type=float, default=float(
         os.environ.get("BENCH_REGRESSION_TOL", "0.25")))
     ap.add_argument("--metric-tol", action="append", default=[],
@@ -192,7 +216,8 @@ def main() -> int:
     failures = []
     for key, extract in (("decode", decode_metrics),
                          ("escalation", escalation_metrics),
-                         ("slo_sweep", slo_metrics)):
+                         ("slo_sweep", slo_metrics),
+                         ("prefix_cache", prefix_metrics)):
         cur_path = getattr(args, key)
         base_path = os.path.join(BASE_DIR, DEFAULTS[key][1])
         if not os.path.exists(base_path):

@@ -1,0 +1,165 @@
+"""Global prefix-cache sweep: prefill saved and TTFT vs trace share ratio.
+
+Sweeps the workload's shared-prefix knob (``shared_prefix_frac`` at a fixed
+group count) on the paper-scale simulator (deepseek-v3 analytic data plane,
+real control plane) with the global CoW prefix cache ON and prefill charged
+into sim time at admission (``charge_prefill=True``) — so a cache hit shows
+up exactly where it matters: fewer novel prompt tokens prefilled, lower
+TTFT.  The rng stream is identical across share levels (same seed, same
+draw sequence), so the ONLY thing that varies is how much of each prompt
+carries a shared key chain: every curve is an apples-to-apples ablation.
+
+Emits ``BENCH_prefix_cache.json`` (or ``--out``).  ``--smoke`` shrinks the
+grid to the CI cells gated by ``check_regression.py``; the full sweep runs
+nightly.  Exits 1 unless, as share grows:
+
+  * prefix hit tokens rise monotonically,
+  * novel (actually prefilled) prompt tokens fall monotonically,
+  * mean TTFT falls monotonically,
+
+and a cache-OFF control at the top share shows the cache saving prefill
+seconds without changing the request outcomes — the headline is asserted,
+not eyeballed.
+
+  PYTHONPATH=src python benchmarks/prefix_cache.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+GROUPS = 4                   # shared-prefix template pool (system prompts)
+FRACS_FULL = (0.0, 0.25, 0.5, 0.75, 0.9)
+FRACS_SMOKE = (0.0, 0.5, 0.9)
+RATE_FULL = 120.0
+RATE_SMOKE = 60.0
+DURATION = 2.0
+HORIZON = 30.0
+SEED = 0
+PAGE = 64                    # workload key granularity == sim page size
+# monotonicity slack: the sweep is deterministic, but TTFT folds queueing
+# in — allow a hair of float noise, never a real reversal
+REL_EPS = 1e-6
+
+
+def run_cell(frac: float, rate: float, *, cache: bool) -> dict:
+    from repro.serving import metrics
+    from repro.serving.simulator import ClusterSimulator
+    from repro.serving.workload import make_workload
+
+    sys.path.insert(0, __import__("os").path.dirname(
+        __import__("os").path.abspath(__file__)))
+    from common import CFG, N_INST, PER_NODE, make_scheduler
+
+    wl = make_workload("sharegpt4o", rate=rate, duration=DURATION, seed=SEED,
+                       shared_prefix_groups=GROUPS, shared_prefix_frac=frac,
+                       page_size=PAGE)
+    sim = ClusterSimulator(CFG, make_scheduler("nanocp"), num_instances=N_INST,
+                           instances_per_node=PER_NODE,
+                           kv_capacity_tokens=1_000_000, page_size=PAGE,
+                           multi_step=4, prefix_cache=cache,
+                           charge_prefill=True)
+    res = sim.run(wl, horizon=HORIZON)
+    fin = res.finished
+    return {
+        "frac": frac,
+        "rate": rate,
+        "cache": cache,
+        "trace_share": wl.prefix_share(PAGE),
+        "submitted": res.submitted,
+        "finished": len(fin),
+        "prompt_tokens": res.prompt_tokens,
+        "prefix_hit_tokens": res.prefix_hit_tokens,
+        "novel_prompt_tokens": res.prompt_tokens - res.prefix_hit_tokens,
+        "hit_rate": metrics.prefix_hit_rate(res),
+        "prefill_time_s": res.prefill_time,
+        "mean_ttft_s": metrics.mean_ttft(fin),
+        "p99_ttft_s": metrics.p99_ttft(fin),
+        "cow_splits": res.cow_splits,
+        "cow_tokens": res.cow_tokens,
+        "copy_tokens": res.copy_tokens,
+        "evicted_prefix_frames": res.evicted_prefix_frames,
+        "oom_finishes": res.oom_finishes,
+        "sim_time_s": res.sim_time,
+    }
+
+
+def check_headline(cells: list[dict], control: dict) -> list[str]:
+    """The claims the gate asserts: hits rise, novel prefill and TTFT fall
+    monotonically with share; the cache-off control at top share pays more
+    prefill and finishes the same request set."""
+    failures = []
+    for a, b in zip(cells, cells[1:]):
+        pair = f"frac {a['frac']} -> {b['frac']}"
+        if b["prefix_hit_tokens"] < a["prefix_hit_tokens"]:
+            failures.append(f"{pair}: hit tokens fell "
+                            f"({a['prefix_hit_tokens']} -> "
+                            f"{b['prefix_hit_tokens']})")
+        if b["novel_prompt_tokens"] > a["novel_prompt_tokens"]:
+            failures.append(f"{pair}: novel prefill tokens rose "
+                            f"({a['novel_prompt_tokens']} -> "
+                            f"{b['novel_prompt_tokens']})")
+        if b["mean_ttft_s"] > a["mean_ttft_s"] * (1 + REL_EPS):
+            failures.append(f"{pair}: mean TTFT rose ({a['mean_ttft_s']:.4f}s "
+                            f"-> {b['mean_ttft_s']:.4f}s)")
+    top = cells[-1]
+    if top["prefix_hit_tokens"] <= 0:
+        failures.append("top share cell never hit the cache")
+    if not control["prefill_time_s"] > top["prefill_time_s"]:
+        failures.append(
+            f"cache-off control prefilled no more than cache-on "
+            f"({control['prefill_time_s']:.3f}s vs "
+            f"{top['prefill_time_s']:.3f}s)")
+    if control["finished"] != top["finished"]:
+        failures.append(
+            f"cache changed the outcome set: {top['finished']} finished "
+            f"with cache vs {control['finished']} without")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_prefix_cache.json")
+    args = ap.parse_args()
+
+    fracs = FRACS_SMOKE if args.smoke else FRACS_FULL
+    rate = RATE_SMOKE if args.smoke else RATE_FULL
+    cells = []
+    for frac in fracs:
+        t0 = time.time()
+        c = run_cell(frac, rate, cache=True)
+        cells.append(c)
+        print(f"frac={frac:4.2f} share={c['trace_share']:.2f} "
+              f"hit_rate={c['hit_rate']:.3f} "
+              f"novel={c['novel_prompt_tokens']:>8d} "
+              f"prefill={c['prefill_time_s']:7.3f}s "
+              f"ttft={c['mean_ttft_s'] * 1e3:7.2f}ms "
+              f"({time.time() - t0:.0f}s)", flush=True)
+    control = run_cell(fracs[-1], rate, cache=False)
+    print(f"ctrl frac={fracs[-1]:4.2f} cache=off "
+          f"prefill={control['prefill_time_s']:7.3f}s "
+          f"ttft={control['mean_ttft_s'] * 1e3:7.2f}ms", flush=True)
+
+    rep = {"smoke": bool(args.smoke), "groups": GROUPS, "rate": rate,
+           "duration": DURATION, "seed": SEED, "page_size": PAGE,
+           "cells": cells, "control": control}
+    with open(args.out, "w") as f:
+        json.dump(rep, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    failures = check_headline(cells, control)
+    if failures:
+        print("\nprefix-cache headline FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("headline OK: hits rise, novel prefill and TTFT fall "
+          "monotonically with share; cache-off control pays more prefill")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

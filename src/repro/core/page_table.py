@@ -8,12 +8,26 @@ are per-instance fixed-size slots in that instance's KV pool.
 
 The table is pure host-side data (numpy/int dicts); the control plane lowers
 it into per-instance block-table tensors each iteration (core/routing.py).
+
+Frame ownership is REFCOUNTED (PR 8): a frame may be shared by several
+requests (a global prefix-cache hit attaches a rid to existing full frames)
+and by the prefix cache itself (``CACHE_OWNER`` holds).  Every allocation
+path claims ownership, every free path releases it, and a frame returns to
+its pool only when the last owner leaves.  A refcount>1 frame is IMMOVABLE
+and UNWRITABLE for any single owner: divergent appends and partial-tail
+writes must ``cow_split`` first (clone the owner's resident tokens into a
+fresh exclusive frame — priced as a copy, the source frame stays), and a
+"move" out of a shared frame is physically a copy too (the source frame is
+only freed when its owner set empties).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
+
+# sentinel owner id for the global prefix cache's own holds (rids are >= 0)
+CACHE_OWNER = -1
 
 
 class KVSpillError(MemoryError):
@@ -114,11 +128,75 @@ class GlobalPageTable:
     # instance (``drop_instance``) for a partial-shard re-prefill
     # (``restore_ranges``) — surviving shards untouched.
     _ranges: dict = field(default_factory=dict)
+    # (instance, frame) -> set of owners: rids plus CACHE_OWNER for prefix-
+    # cache holds.  THE refcount ledger — a frame is live iff it has an
+    # entry, and returns to its pool exactly when the set empties.
+    _owners: dict = field(default_factory=dict)
+    # monotone counter: copy-on-write splits performed (divergent appends,
+    # shared-tail moves, forks) — the accounting surface for layer 4
+    cow_splits: int = 0
 
     def __post_init__(self):
         self.pools = [FramePool(i, self.frames_per_instance, self.stripes)
                       for i in range(self.num_instances)]
         self._used = [0] * self.num_instances
+
+    # ---------------- frame ownership (refcounts) ----------------
+    def _claim(self, owner: int, instance: int, frame: int) -> None:
+        self._owners.setdefault((instance, frame), set()).add(owner)
+
+    def _release(self, owner: int, instance: int, frame: int) -> bool:
+        """Drop ``owner``'s claim; the frame returns to the pool only when
+        the owner set empties.  Returns True iff the frame was freed."""
+        key = (instance, frame)
+        own = self._owners.get(key)
+        assert own is not None and owner in own, (owner, key, own)
+        own.discard(owner)
+        if own:
+            return False
+        del self._owners[key]
+        self.pools[instance].free([frame])
+        return True
+
+    def frame_refcount(self, instance: int, frame: int) -> int:
+        return len(self._owners.get((instance, frame), ()))
+
+    def frame_shared(self, rid: int, instance: int, frame: int) -> bool:
+        """The frame has an owner BESIDES ``rid`` (another request or a
+        prefix-cache hold) — rid must not write or vacate-free it."""
+        return bool(self._owners.get((instance, frame), set()) - {rid})
+
+    def cache_hold(self, instance: int, frame: int) -> None:
+        """Prefix-cache hold: keeps the frame resident past its requests."""
+        self._claim(CACHE_OWNER, instance, frame)
+
+    def cache_release(self, instance: int, frame: int) -> bool:
+        """Drop the cache hold; True iff that freed the frame (refcount was
+        1, i.e. no active request still reads it)."""
+        return self._release(CACHE_OWNER, instance, frame)
+
+    def exclusive_frames(self, rid: int, instance: int) -> int:
+        """``rid``'s frames on ``instance`` that would actually return to
+        the pool if rid vacated — the honest frame gain of a relax/retract
+        (shared frames stay with their other owners: a copy, not a move)."""
+        return sum(1 for f in self._frames_by_shard.get(rid, {})
+                   .get(instance, ())
+                   if not self.frame_shared(rid, instance, f))
+
+    def movable_tail(self, rid: int, instance: int) -> int:
+        """Tokens at the shard's fill TAIL living in exclusively-owned
+        frames — the most a planner may move off this shard as a true move.
+        Anything deeper sits in (or behind) a refcount>1 frame: immovable
+        unless priced as a CoW copy."""
+        frames = self._frames_by_shard.get(rid, {}).get(instance, ())
+        used = self._last_fill.get(rid, {}).get(instance, 0)
+        movable = 0
+        for idx in range(len(frames) - 1, -1, -1):
+            if self.frame_shared(rid, instance, frames[idx]):
+                break
+            lo = idx * self.page_size
+            movable += max(min(used, lo + self.page_size) - lo, 0)
+        return movable
 
     # ---------------- allocation ----------------
     def pages_needed(self, tokens: int) -> int:
@@ -128,34 +206,67 @@ class GlobalPageTable:
         return all(self.pools[s].free_frames >= self.pages_needed(t)
                    for s, t in split.items() if t > 0)
 
-    def allocate(self, rid: int, split: dict[int, int]) -> None:
-        """Allocate a request's KV pages per the WaterFill split."""
+    def allocate(self, rid: int, split: dict[int, int],
+                 prefix: dict | None = None) -> None:
+        """Allocate a request's KV pages per the WaterFill split.
+
+        ``prefix``: optional ``{instance: (start_pos, [frames])}`` — a
+        prefix-cache hit.  The rid is ATTACHED to the existing FULL frames
+        (an ownership claim — no allocation, no data movement): they become
+        the head of each shard's fill, holding the absolute positions
+        [start_pos, start_pos + len(frames)*page_size).  The attached
+        ranges must tile [0, P) exactly.  ``split`` then counts only the
+        NOVEL suffix tokens, which land in fresh frames after the attached
+        pages (attached pages are full, so the suffix starts page-aligned)
+        in sorted-instance order starting at absolute position P."""
         assert rid not in self._pages, f"request {rid} already allocated"
         if not self.can_allocate(split):
             raise MemoryError(f"request {rid}: split {split} does not fit")
         self._frames_np.pop(rid, None)
         pages = []
+        by_shard = {}
         shard_fill = {}
-        for s, t in split.items():
+        ranges = {}
+        prefix_tokens = 0
+        if prefix:
+            spans = sorted((prefix[s][0], len(prefix[s][1]) * self.page_size)
+                           for s in prefix if prefix[s][1])
+            pos = 0
+            for st, ln in spans:
+                assert st == pos, f"prefix ranges must tile [0, P): {spans}"
+                pos += ln
+            for s in sorted(prefix):
+                start_pos, frames = prefix[s]
+                if not frames:
+                    continue
+                for f in frames:
+                    self._claim(rid, s, f)
+                pages.extend((s, f) for f in frames)
+                by_shard[s] = list(frames)
+                t = len(frames) * self.page_size
+                shard_fill[s] = t
+                ranges[s] = [[start_pos, t]]
+                self._used[s] += t
+                prefix_tokens += t
+        # suffix: shard s holds the contiguous range assigned by
+        # migrate.shard_ranges/prefill_coords — sorted-instance order
+        start = prefix_tokens
+        for s in sorted(split):
+            t = split[s]
             if t <= 0:
                 continue
             frames = self.pools[s].alloc(self.pages_needed(t))
+            for f in frames:
+                self._claim(rid, s, f)
             pages.extend((s, f) for f in frames)
-            shard_fill[s] = t
+            by_shard.setdefault(s, []).extend(frames)
+            shard_fill[s] = shard_fill.get(s, 0) + t
+            ranges.setdefault(s, []).append([start, t])
+            self._used[s] += t
+            start += t
         self._pages[rid] = pages
         self._last_fill[rid] = shard_fill
-        by_shard = {}
-        for s_, f in pages:
-            by_shard.setdefault(s_, []).append(f)
         self._frames_by_shard[rid] = by_shard
-        for s_, t in shard_fill.items():
-            self._used[s_] += t
-        # positions: shard s holds the contiguous prefix range assigned by
-        # migrate.shard_ranges/prefill_coords — sorted-instance order
-        ranges, start = {}, 0
-        for s_ in sorted(shard_fill):
-            ranges[s_] = [[start, shard_fill[s_]]]
-            start += shard_fill[s_]
         self._ranges[rid] = ranges
 
     def append_needs_frame(self, rid: int, instance: int) -> bool:
@@ -163,6 +274,17 @@ class GlobalPageTable:
         used = self._last_fill[rid].get(instance, 0)
         frames = self._frames_by_shard.get(rid, {}).get(instance, ())
         return used >= len(frames) * self.page_size
+
+    def append_needs_cow(self, rid: int, instance: int) -> bool:
+        """Whether the next ``append_token(rid, instance)`` would write into
+        a SHARED frame (a fork/prefix sibling still reads it) — the caller
+        must ``cow_split`` that tail first.  False when the append grows a
+        fresh frame: new frames are always exclusive."""
+        used = self._last_fill[rid].get(instance, 0)
+        frames = self._frames_by_shard.get(rid, {}).get(instance, ())
+        if used >= len(frames) * self.page_size:
+            return False
+        return self.frame_shared(rid, instance, frames[used // self.page_size])
 
     def append_token(self, rid: int, instance: int) -> tuple[int, int]:
         """Append one decoded token's KV on ``instance``; grows a page if
@@ -180,10 +302,14 @@ class GlobalPageTable:
             if self.pools[instance].free_frames < 1:
                 raise KVSpillError(rid, instance)
             frame = self.pools[instance].alloc(1)[0]
+            self._claim(rid, instance, frame)
             self._pages[rid].append((instance, frame))
             my_frames.append(frame)
             self._frames_np.get(rid, {}).pop(instance, None)
         frame = my_frames[used // self.page_size]
+        assert not self.frame_shared(rid, instance, frame), (
+            rid, instance, frame,
+            "append into a shared frame — cow_split first (append_needs_cow)")
         offset = used % self.page_size
         shard_fill[instance] = used + 1
         self._used[instance] += 1
@@ -217,7 +343,7 @@ class GlobalPageTable:
         frames = self._frames_by_shard[rid][instance]
         if len(frames) > self.pages_needed(used - 1):
             f = frames.pop()
-            self.pools[instance].free([f])
+            self._release(rid, instance, f)
             self._pages[rid].remove((instance, f))
             self._frames_np.get(rid, {}).pop(instance, None)
 
@@ -262,23 +388,36 @@ class GlobalPageTable:
             # destination: extend the shard's fill (allocate frames as needed)
             used_d = shard_fill.get(dst, 0)
             fd = by_shard.setdefault(dst, [])
+            if used_d % page and fd and self.frame_shared(rid, dst, fd[-1]):
+                # the move would append into a SHARED partial tail — CoW-split
+                # it first (the copy rides the same gather->scatter: its
+                # gather reads the untouched shared frame, pre-move state)
+                cs, cd = self.cow_split(rid, dst, fd[-1])
+                s_cols.append(cs)
+                d_cols.append(cd)
             need = self.pages_needed(used_d + n) - len(fd)
             if need > 0:
                 if self.pools[dst].free_frames < need:
                     raise KVSpillError(rid, dst)
                 new = self.pools[dst].alloc(need)
+                for f in new:
+                    self._claim(rid, dst, f)
                 self._pages[rid].extend((dst, f) for f in new)
                 fd.extend(new)
             dpos = np.arange(used_d, used_d + n)
             d_cols.append(np.stack([np.full(n, dst),
                                     np.asarray(fd)[dpos // page], dpos % page]))
-            # shrink the source: free fully-vacated frames
+            # shrink the source: release fully-vacated frames.  A SHARED
+            # source frame is not freed (its other owners keep it) — the
+            # "move" out of it is physically a copy, which is exactly what
+            # the gather->scatter performs; only rid's claim is dropped.
             left = used_s - n
             keep = self.pages_needed(left)
             freed = fs[keep:]
             del fs[keep:]
             if freed:
-                self.pools[src].free(freed)
+                for f in freed:
+                    self._release(rid, src, f)
                 gone = set(freed)
                 self._pages[rid] = [(s_, f) for (s_, f) in self._pages[rid]
                                     if not (s_ == src and f in gone)]
@@ -314,9 +453,129 @@ class GlobalPageTable:
         return (np.concatenate(s_cols, axis=1).astype(np.int32),
                 np.concatenate(d_cols, axis=1).astype(np.int32))
 
+    # ---------------- copy-on-write / fork ----------------
+    def cow_split(self, rid: int, instance: int, frame: int
+                  ) -> tuple["np.ndarray", "np.ndarray"]:
+        """Clone ``rid``'s resident tokens in a SHARED frame into a fresh
+        exclusive frame on the same instance (copy-on-write).  The source
+        frame keeps its other owners untouched; rid's claim moves to the
+        clone and rid's logical pages resolve to it from here on.
+
+        Returns ``(src_coords, dst_coords)`` int32 [3, T] for the data-plane
+        copy — same gather->scatter contract as ``move_pages`` (the gather
+        reads the shared frame, which nothing scatters into).  Raises
+        ``KVSpillError`` when the instance has no free frame."""
+        assert self.frame_shared(rid, instance, frame), (
+            rid, instance, frame, "cow_split of an exclusive frame")
+        frames = self._frames_by_shard[rid][instance]
+        idx = frames.index(frame)
+        if self.pools[instance].free_frames < 1:
+            raise KVSpillError(rid, instance)
+        clone = self.pools[instance].alloc(1)[0]
+        self._claim(rid, instance, clone)
+        used = self._last_fill[rid].get(instance, 0)
+        lo = idx * self.page_size
+        n = min(used, lo + self.page_size) - lo
+        assert n > 0, (rid, instance, frame, used)
+        off = np.arange(n)
+        src = np.stack([np.full(n, instance), np.full(n, frame), off])
+        dst = np.stack([np.full(n, instance), np.full(n, clone), off])
+        frames[idx] = clone
+        pages = self._pages[rid]
+        pages[pages.index((instance, frame))] = (instance, clone)
+        self._frames_np.pop(rid, None)
+        self._release(rid, instance, frame)
+        self.cow_splits += 1
+        return src.astype(np.int32), dst.astype(np.int32)
+
+    def exclusive_tails(self, rid: int) -> tuple["np.ndarray", "np.ndarray"]:
+        """Pre-pass for paths that append into existing tail slack
+        (``restore_ranges``, decode appends): CoW-split every shared partial
+        tail frame so the write targets are exclusively owned.  Returns the
+        concatenated ``(src, dst)`` copy coords ([3, 0] when nothing was
+        shared)."""
+        s_cols, d_cols = [], []
+        for s in sorted(self._frames_by_shard.get(rid, {})):
+            frames = self._frames_by_shard[rid][s]
+            used = self._last_fill.get(rid, {}).get(s, 0)
+            if not frames or used % self.page_size == 0:
+                continue
+            if self.frame_shared(rid, s, frames[-1]):
+                cs, cd = self.cow_split(rid, s, frames[-1])
+                s_cols.append(cs)
+                d_cols.append(cd)
+        if not s_cols:
+            z = np.zeros((3, 0), np.int32)
+            return z, z
+        return (np.concatenate(s_cols, axis=1),
+                np.concatenate(d_cols, axis=1))
+
+    def fork_request(self, child: int, parent: int
+                     ) -> tuple["np.ndarray", "np.ndarray"]:
+        """Fork mid-decode: ``child`` attaches to ``parent``'s resident KV.
+        Full frames are SHARED (a refcount bump — zero data movement); each
+        shard's PARTIAL tail frame is CoW-copied so the two branches can
+        append divergent tokens without trampling each other.  The parent
+        keeps the original tail (still exclusive to it); the child gets the
+        clone.
+
+        Returns ``(src, dst)`` int32 [3, T] coords of the tail copies for
+        the data plane.  Pre-flight checks every needed tail frame before
+        mutating anything, so a ``KVSpillError`` leaves the table
+        untouched."""
+        assert child not in self._pages, f"request {child} already allocated"
+        fill = self._last_fill.get(parent, {})
+        by_shard = self._frames_by_shard.get(parent, {})
+        page = self.page_size
+        tails = {s: frames[-1] for s, frames in by_shard.items()
+                 if frames and fill.get(s, 0) % page}
+        for s in tails:
+            if self.pools[s].free_frames < 1:
+                raise KVSpillError(child, s)
+        pages, cby, cfill, cranges = [], {}, {}, {}
+        s_cols, d_cols = [], []
+        for s in sorted(by_shard):
+            frames = by_shard[s]
+            used = fill.get(s, 0)
+            if used <= 0:
+                continue
+            shared = frames[:-1] if s in tails else list(frames)
+            for f in shared:
+                self._claim(child, s, f)
+            cf = list(shared)
+            if s in tails:
+                clone = self.pools[s].alloc(1)[0]
+                self._claim(child, s, clone)
+                n = used - (len(frames) - 1) * page
+                off = np.arange(n)
+                s_cols.append(np.stack([np.full(n, s),
+                                        np.full(n, tails[s]), off]))
+                d_cols.append(np.stack([np.full(n, s),
+                                        np.full(n, clone), off]))
+                cf.append(clone)
+                self.cow_splits += 1
+            pages.extend((s, f) for f in cf)
+            cby[s] = cf
+            cfill[s] = used
+            cranges[s] = [list(r) for r in
+                          self._ranges.get(parent, {}).get(s, [])]
+            self._used[s] += used
+        self._pages[child] = pages
+        self._frames_by_shard[child] = cby
+        self._last_fill[child] = cfill
+        self._ranges[child] = cranges
+        if not s_cols:
+            z = np.zeros((3, 0), np.int32)
+            return z, z
+        return (np.concatenate(s_cols, axis=1).astype(np.int32),
+                np.concatenate(d_cols, axis=1).astype(np.int32))
+
     def free_request(self, rid: int) -> None:
+        """Teardown: DECREF every frame the request maps — a frame returns
+        to its pool only when no other request (and no prefix-cache hold)
+        still owns it."""
         for s, f in self._pages.pop(rid, []):
-            self.pools[s].free([f])
+            self._release(rid, s, f)
         for s, t in self._last_fill.pop(rid, {}).items():
             self._used[s] -= t
         self._frames_by_shard.pop(rid, None)
@@ -335,9 +594,14 @@ class GlobalPageTable:
         """Free token slots inside the request's OWN frames on ``instance``
         (the partial tail page).  ``move_pages`` appends into this slack
         without allocating a frame — the relaxation planner's cheapest
-        receiver capacity."""
+        receiver capacity.  A SHARED tail frame reports 0: writing into it
+        would corrupt the other owners' KV, so its physical slack is not
+        receiver capacity (a CoW split would spend a frame, which is no
+        longer "free" slack)."""
         frames = self._frames_by_shard.get(rid, {}).get(instance, ())
         used = self._last_fill.get(rid, {}).get(instance, 0)
+        if frames and self.frame_shared(rid, instance, frames[-1]):
+            return 0
         return len(frames) * self.page_size - used
 
     def fragmented_frames(self, rid: int) -> dict[int, int]:
@@ -383,13 +647,82 @@ class GlobalPageTable:
         """instance -> (free_frames, held_frames): the leak check.  For every
         alive instance free+held must equal ``frames_per_instance``; a dead
         (drained) instance must show (0, 0) — any other total is a leaked or
-        aliased frame."""
+        aliased frame.
+
+        A SHARED frame counts exactly ONCE physically (the ``_owners``
+        ledger is the source of truth), however many requests map it
+        logically.  The audit also cross-checks the ledger against the page
+        maps: every mapped page must be owned by its rid, and every owner
+        entry must be mapped by some rid or be a pure prefix-cache hold —
+        a mismatch is a double-free or leak in the making."""
         held = [0] * self.num_instances
-        for pages in self._pages.values():
-            for s, _ in pages:
-                held[s] += 1
+        mapped = set()
+        for rid, pages in self._pages.items():
+            for s, f in pages:
+                mapped.add((s, f))
+                own = self._owners.get((s, f))
+                assert own is not None and rid in own, (
+                    "page mapped but not owned", rid, s, f, own)
+        for (s, f), own in self._owners.items():
+            assert own, ("empty owner set leaked", s, f)
+            assert (s, f) in mapped or own == {CACHE_OWNER}, (
+                "owned frame mapped by no request", s, f, own)
+            held[s] += 1
         return {s: (self.pools[s].free_frames, held[s])
                 for s in range(self.num_instances)}
+
+    def position_coords(self, rid: int, positions) -> "np.ndarray":
+        """Map absolute context positions -> int32 [3, T] (instance, frame,
+        offset) coords via the per-shard fill-order ranges.  Every queried
+        position must be resident.  This is the scatter-target resolver for
+        suffix-only prefill and for recovery re-prefill of shared ranges —
+        unlike ``migrate.prefill_coords`` it makes no assumption about HOW
+        positions were assigned to shards (prefix-attach breaks the
+        contiguous sorted-order layout)."""
+        page = self.page_size
+        out = np.zeros((3, len(positions)), np.int64)
+        rmap = self._ranges.get(rid, {})
+        for k, p in enumerate(positions):
+            p = int(p)
+            hit = None
+            for s, rr in rmap.items():
+                fill = 0
+                for st, ln in rr:
+                    if st <= p < st + ln:
+                        hit = (s, fill + (p - st))
+                        break
+                    fill += ln
+                if hit is not None:
+                    break
+            assert hit is not None, (rid, p, "position not resident")
+            s, fi = hit
+            frames = self._frames_by_shard[rid][s]
+            out[:, k] = (s, frames[fi // page], fi % page)
+        return out.astype(np.int32)
+
+    def aligned_pages(self, rid: int, limit: int) -> list:
+        """Prompt pages eligible for the prefix cache.  Page p (absolute
+        positions [p*page_size, (p+1)*page_size)) qualifies iff it sits
+        page-ALIGNED and CONTIGUOUS inside a single shard's fill — then it
+        occupies exactly one frame and can be attached wholesale to a later
+        request.  Returns sorted [(page_index, instance, frame)] for pages
+        fully below ``limit`` (the prompt length — decoded tokens are never
+        cached).  Within one range, fill offset and absolute position
+        advance together, so alignment checked at the range start holds for
+        the whole run."""
+        page = self.page_size
+        out = []
+        for s, rr in self._ranges.get(rid, {}).items():
+            frames = self._frames_by_shard.get(rid, {}).get(s, [])
+            fill = 0
+            for st, ln in rr:
+                if fill % page == 0 and st % page == 0:
+                    for q in range(ln // page):
+                        pidx = st // page + q
+                        if (pidx + 1) * page <= limit:
+                            out.append((pidx, s, frames[fill // page + q]))
+                fill += ln
+        return sorted(out)
 
     def drop_instance(self, instance: int) -> dict[int, list]:
         """Abrupt instance failure: PARTIAL-SHARD drop.  Frees ONLY the dead
@@ -412,11 +745,16 @@ class GlobalPageTable:
                 assert sum(l for _, l in lost[rid]) == t, (rid, t, ranges)
             self._frames_np.pop(rid, None)
             self._pages[rid] = [(s, f) for s, f in pages if s != instance]
+        # the dead instance's frames are gone for EVERY owner at once —
+        # shared prefix pages included (each surviving owner re-prefills its
+        # own lost ranges; the sharing is lost with the hardware).  Purge
+        # the ledger before the pool reset so cache-only holds don't trip
+        # the aliasing guard.
+        self._owners = {(s, f): own for (s, f), own in self._owners.items()
+                        if s != instance}
         self._used[instance] = 0
-        self.pools[instance] = FramePool(instance, self.frames_per_instance,
-                                         self.stripes)
-        # mark the dead instance's pool as empty so nothing allocates there
-        self.pools[instance].drain()
+        # drained: nothing allocates there until join_instance brings it back
+        self._fresh_pool(instance, drained=True)
         return lost
 
     def restore_ranges(self, rid: int, split: dict[int, int],
@@ -452,6 +790,10 @@ class GlobalPageTable:
                 continue
             used = fill.get(s, 0)
             fr = by_shard.setdefault(s, [])
+            assert not (fr and used % page
+                        and self.frame_shared(rid, s, fr[-1])), (
+                rid, s, "recovery append into a SHARED tail — callers run "
+                "exclusive_tails() before planning against tail slack")
             need = self.pages_needed(used + t) - len(fr)
             if need > 0:
                 if self.pools[s].free_frames < need:
@@ -459,6 +801,8 @@ class GlobalPageTable:
                         f"recovery of request {rid}: instance {s} lacks "
                         f"{need} frames")
                 new = self.pools[s].alloc(need)
+                for f in new:
+                    self._claim(rid, s, f)
                 pages.extend((s, f) for f in new)
                 fr.extend(new)
             j = np.arange(used, used + t)
@@ -485,22 +829,34 @@ class GlobalPageTable:
         self._used.append(0)
         return i
 
-    def join_instance(self, instance: int) -> None:
-        """Elastic (re)join: give the instance a FRESH, fully-free pool.
-
-        Guarded against frame aliasing: resetting the pool while ANY request
-        still maps frames on the instance would hand those frames out twice.
-        Failure (``drop_instance``) and drain both leave the instance
-        frame-free, so a legitimate join never trips this."""
+    def _fresh_pool(self, instance: int, drained: bool = False) -> None:
+        """The ONE place a live instance's pool is replaced (join, restore,
+        failure drop).  Guarded against frame aliasing: resetting the pool
+        while any request still maps frames there — or while the refcount
+        ledger holds STALE entries for the instance (e.g. a prefix-cache
+        hold the trie forgot to release) — would hand those frames out
+        twice.  ``drained``: leave the new pool empty (a dead instance must
+        not serve allocations until it formally rejoins)."""
         held = [rid for rid, pages in self._pages.items()
                 if any(s == instance for s, _ in pages)]
-        if held:
+        stale = [f for (s, f) in self._owners if s == instance]
+        if held or stale:
             raise RuntimeError(
-                f"join_instance({instance}): frames still mapped by "
-                f"requests {held} — joining would alias them")
+                f"fresh pool for instance {instance}: frames still owned "
+                f"(requests {held}, ledger entries {stale}) — resetting "
+                f"would alias them")
         self._used[instance] = 0
         self.pools[instance] = FramePool(instance, self.frames_per_instance,
                                          self.stripes)
+        if drained:
+            self.pools[instance].drain()
+
+    def join_instance(self, instance: int) -> None:
+        """Elastic (re)join: give the instance a FRESH, fully-free pool.
+
+        Failure (``drop_instance``) and drain both leave the instance
+        frame-free, so a legitimate join never trips the aliasing guard."""
+        self._fresh_pool(instance)
 
     def restore_instance(self, instance: int) -> None:
         """Deprecated spelling of the elastic-join path.  Kept so old call

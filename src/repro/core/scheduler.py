@@ -24,6 +24,20 @@ from .waterfill import waterfill
 
 
 @dataclass
+class PrefixHit:
+    """A resolved prefix-cache hit, carried from ``place`` to the commit in
+    ``_try_place``: the request attaches to ``attach`` ({instance:
+    (start_pos, [frames])} — GlobalPageTable.allocate's ``prefix=``
+    argument) and only the novel suffix needs frames.  ``chosen`` ([(page,
+    instance)]) is the replica selection, committed to the trie's LRU/hit
+    counters only when the placement actually lands."""
+    keys: tuple
+    attach: dict
+    chosen: list
+    tokens: int
+
+
+@dataclass
 class Escalation:
     """One mid-decode CP promotion: the request's KV binding grew (or its KV
     was rebalanced within the binding) and ``moves`` tokens change shards.
@@ -187,6 +201,10 @@ class BaseScheduler:
         # SLO-aware admission controller (None = admit-everything legacy
         # behaviour: no deadlines, no queue cap, no preemption)
         self.admission = admission
+        # global prefix cache (core.prefix.PrefixTrie), attached by the
+        # engine/simulator when the cache is on.  None = cache off: place
+        # never consults it and admission never evicts from it.
+        self.prefix_cache = None
 
     # -- subclass hooks ---------------------------------------------------
     def place(self, cluster: ClusterState, req: Request, B=None):
@@ -234,28 +252,61 @@ class BaseScheduler:
         for s in cluster.alive_instances():
             if s // win != m // win:
                 continue
-            cap = ledger.get(s, 0) * page + pt.shard_tail_slack(req.rid, s)
+            # a shared partial tail reports 0 slack AND costs one frame to
+            # CoW-split before the recovery append can land there
+            pad = 1 if pt.append_needs_cow(req.rid, s) else 0
+            cap = (max(ledger.get(s, 0) - pad, 0) * page
+                   + pt.shard_tail_slack(req.rid, s))
             if cap > best_cap:
                 best, best_cap = s, cap
         if best is None or best_cap < tokens:
             return None
         slack = pt.shard_tail_slack(req.rid, best)
-        ledger[best] = ledger.get(best, 0) - pt.pages_needed(
+        pad = 1 if pt.append_needs_cow(req.rid, best) else 0
+        ledger[best] = ledger.get(best, 0) - pad - pt.pages_needed(
             max(tokens - slack, 0))
         return {best: tokens}
 
     def _try_place(self, cluster: ClusterState, req: Request, batch_counts,
                    now: float) -> bool:
         """Attempt one admission: place, check batch + KV capacity, and on
-        success commit the allocation/bindings.  Returns True if admitted."""
+        success commit the allocation/bindings.  Returns True if admitted.
+
+        With a prefix cache attached, a bounced placement gets one retry
+        after evicting cold cache-only replicas worth the request's
+        worst-case frame need — live requests always outrank cached
+        convenience copies, but the chain THIS request is about to hit is
+        protected from its own eviction pass."""
+        if self._attempt_place(cluster, req, batch_counts, now):
+            return True
+        if self.prefix_cache is None:
+            return False
+        pt = cluster.page_table
+        freed = self.prefix_cache.evict(pt, pt.pages_needed(req.length),
+                                        keep=req.prefix_keys)
+        if freed == 0:
+            return False
+        return self._attempt_place(cluster, req, batch_counts, now)
+
+    def _attempt_place(self, cluster: ClusterState, req: Request,
+                       batch_counts, now: float) -> bool:
         placement = self.place(cluster, req, batch_counts)
         if placement is None:
             return False
-        m, binding, split = placement
+        # prefix-aware policies return a 4th element: the resolved cache hit
+        if len(placement) == 4:
+            m, binding, split, hit = placement
+        else:
+            m, binding, split = placement
+            hit = None
         if not (batch_counts[m] < self.max_batch
                 and cluster.page_table.can_allocate(split)):
             return False
-        cluster.page_table.allocate(req.rid, split)
+        cluster.page_table.allocate(req.rid, split,
+                                    prefix=hit.attach if hit else None)
+        if hit is not None:
+            self.prefix_cache.touch(hit.keys, hit.chosen)
+            req.prefix_hit_tokens = hit.tokens
         req.moe_binding, req.kv_binding = m, sorted(binding)
         req.node = cluster.node_of(m)
         req.status = "running"
@@ -264,6 +315,11 @@ class BaseScheduler:
         cluster.assign_slot(req.rid, m)
         batch_counts[m] += 1
         return True
+
+    def replicate_hot(self, cluster: ClusterState) -> list:
+        """Optionally replicate hot cached prefixes (policy hook; returns
+        (src, dst) coordinate pairs for ``IterationPlan.copies``)."""
+        return []
 
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
@@ -328,6 +384,12 @@ class BaseScheduler:
         # placement could NOT absorb this step
         if self.admission is not None:
             plan.rejected = self.admission.enforce_cap(cluster)
+        # hot-prefix replication LAST: a request admitted this very pass can
+        # only attach to replicas whose physical copy already ran, so new
+        # replicas become visible to admissions one pass later — after the
+        # engine applies this plan's copies
+        if self.prefix_cache is not None:
+            plan.copies.extend(self.replicate_hot(cluster))
         plan = _fill_plan(cluster, plan)
         plan.admitted = admitted
         plan.deferred = len(still_waiting)
@@ -352,9 +414,13 @@ class DualBalancedScheduler(BaseScheduler):
                  allow_relaxation: bool = True,
                  relax_guard: int | None = None,
                  relax_cooldown: int = 4,
-                 admission: AdmissionController | None = None):
+                 admission: AdmissionController | None = None,
+                 hot_threshold: int = 4):
         super().__init__(max_batch_per_instance, admission=admission)
         self.buckets = buckets
+        # prefix-cache hotness: a root chain with this many hits since its
+        # last replication decision earns a per-node replica (replicate_hot)
+        self.hot_threshold = hot_threshold
         self.kv_reserve = kv_reserve   # headroom tokens kept per shard for growth
         # hierarchical (two-level) placement: a binding prefers its home
         # node's members and spills across the node boundary only when the
@@ -606,6 +672,12 @@ class DualBalancedScheduler(BaseScheduler):
             t = shards.get(s, 0)
             if s == m or t == 0 or t % page == 0:
                 continue
+            # a SHARED donor tail reclaims nothing: the frame stays with its
+            # other owners after the copy-out, so the whole point of the
+            # consolidation (net frame gain) evaporates — skip it
+            fr = pt.shard_frames(req.rid, s)
+            if fr and pt.frame_shared(req.rid, s, fr[-1]):
+                continue
             tails.append((t % page, t <= page, s))
         # smallest tails first: most frames reclaimed per token moved
         tails.sort()
@@ -643,12 +715,18 @@ class DualBalancedScheduler(BaseScheduler):
         re-escalate a few steps later (the thrash the hysteresis exists to
         prevent).  0 when the shard is at/below the guard band: a relaxation
         never digs a receiver's headroom hole deeper."""
+        pt = cluster.page_table
         head = cluster.kv_headroom(s) - (low + guard)
         if s == req.moe_binding:
             head -= max(req.max_new_tokens - req.generated, 0)
+        if pt.append_needs_cow(req.rid, s):
+            # receiving appends into a SHARED partial tail: priced as a
+            # copy — the CoW split spends one frame before any token lands
+            # (and shard_tail_slack already reports 0 for the shared tail)
+            head -= pt.page_size
         if head <= 0:
             return 0.0
-        return float(cluster.page_table.shard_tail_slack(req.rid, s) + head)
+        return float(pt.shard_tail_slack(req.rid, s) + head)
 
     def _plan_relax_moves(self, cluster: ClusterState, req: Request,
                           keep: list, drop: list, low: int, guard: int):
@@ -768,8 +846,13 @@ class DualBalancedScheduler(BaseScheduler):
                 loads = np.array([cluster.kv_load(s) for s in members],
                                  np.float64)
                 loads[n_home:] += float(self._penalty(cluster))
-                caps = np.array([head_frames[s] * page for s in members],
-                                np.float64)
+                # receivers whose next append lands in a SHARED frame pay
+                # one ledger frame for the CoW split move_pages will perform
+                pads = {s: (1 if pt.append_needs_cow(rid, s) else 0)
+                        for s in members}
+                caps = np.array(
+                    [max(head_frames[s] - pads[s], 0) * page
+                     for s in members], np.float64)
                 if caps.sum() < tokens_on:
                     if partial:
                         stragglers.append(rid)
@@ -782,7 +865,7 @@ class DualBalancedScheduler(BaseScheduler):
                 for s, t in zip(members, split):
                     if t > 0:
                         moves.append((instance, s, int(t)))
-                        head_frames[s] -= -(-int(t) // page)
+                        head_frames[s] -= -(-int(t) // page) + pads[s]
             plans.append((req, members, moves))
         # phase 2: apply (cannot fail — the ledger over-reserved frames)
         out = []
@@ -829,8 +912,13 @@ class DualBalancedScheduler(BaseScheduler):
             return None
         n_home = len(members)
 
+        # a shared partial tail reports 0 slack and costs one ledger frame
+        # to CoW-split before the recovery append lands (exclusive_tails)
+        pads = {s: (1 if pt.append_needs_cow(req.rid, s) else 0)
+                for s in cands}
+
         def caps_of(reserve):
-            caps = np.array([ledger.get(s, 0) * page
+            caps = np.array([max(ledger.get(s, 0) - pads[s], 0) * page
                              + pt.shard_tail_slack(req.rid, s)
                              for s in cands], np.float64)
             if m in cands:
@@ -851,7 +939,8 @@ class DualBalancedScheduler(BaseScheduler):
         split = {s: int(t) for s, t in zip(cands, split_arr) if t > 0}
         for s, t in split.items():
             slack = pt.shard_tail_slack(req.rid, s)
-            ledger[s] = ledger.get(s, 0) - pt.pages_needed(max(t - slack, 0))
+            ledger[s] = (ledger.get(s, 0) - pads[s]
+                         - pt.pages_needed(max(t - slack, 0)))
         return split
 
     def _try_escalate(self, cluster: ClusterState, req: Request, low: int,
@@ -944,10 +1033,19 @@ class DualBalancedScheduler(BaseScheduler):
         # receiver capacity counts the request's own partial tail-page slack
         # (move_pages appends into it without a frame alloc): without it the
         # planner strands cluster capacity and OOMs with free tail tokens on
-        # every shard
+        # every shard.  A shard whose next append lands in a SHARED frame is
+        # priced one page lower: receiving there forces a CoW split first.
         caps = np.array(
             [len(pt.shard_frames(req.rid, s)) * page + cluster.kv_headroom(s)
+             - (page if pt.append_needs_cow(req.rid, s) else 0)
              for s in binding], np.float64)
+        # refcount>1 frames are IMMOVABLE for an escalation: only the
+        # contiguous exclusively-owned fill tail may leave a shard (moving a
+        # shared frame's tokens would consume destination frames without
+        # freeing the source — all cost, no balance).  Pin everything deeper
+        # as a per-shard WaterFill floor.
+        mins = np.array([max(int(c) - pt.movable_tail(req.rid, s), 0)
+                         for s, c in zip(binding, cur)], np.int64)
         mi = binding.index(req.moe_binding) if req.moe_binding in binding \
             else None
         if mi is not None:
@@ -969,7 +1067,11 @@ class DualBalancedScheduler(BaseScheduler):
             caps[mi] = relaxed
         if caps.sum() < total:
             return []
-        target = waterfill(loads, total, capacities=caps)
+        if (mins > caps).any():
+            # pinned (shared) tokens exceed a shard's cap under the relieve
+            # constraint: the plan would have to move immovable frames
+            return []
+        target = waterfill(loads, total, capacities=caps, minimums=mins)
         delta = cur - target                      # >0 donor, <0 receiver
         donors = [(binding[i], int(d)) for i, d in enumerate(delta) if d > 0]
         recvs = [(binding[i], int(-d)) for i, d in enumerate(delta) if d < 0]
@@ -987,11 +1089,175 @@ class DualBalancedScheduler(BaseScheduler):
                     di += 1
         return moves
 
+    # -- prefix-aware admission -------------------------------------------
+    def _page_align(self, binding, split_arr, caps, total, page):
+        """Quantize a token split to page multiples, pushing the remainder
+        to the LARGEST instance id with cap room: ``allocate`` assigns
+        positions in sorted-instance order, so every member before the
+        remainder-holder keeps page-aligned absolute range starts — the
+        alignment ``aligned_pages`` needs for THIS request's pages to be
+        cacheable in turn.  Falls back to the raw split when caps are too
+        tight (costs future cacheability, never correctness)."""
+        arr = (np.asarray(split_arr, np.int64) // page) * page
+        rem = int(total - arr.sum())
+        for i in sorted(range(len(binding)), key=lambda j: -binding[j]):
+            if rem == 0:
+                break
+            take = min(rem, int(caps[i] - arr[i]))
+            if take > 0:
+                arr[i] += take
+                rem -= take
+        if rem:
+            return np.asarray(split_arr, np.int64)
+        return arr
+
+    def _place_prefix(self, cluster: ClusterState, req: Request, B):
+        """Prefix-aware admission: resolve the longest cached prefix within
+        ONE rotation-window segment (a binding never leaves its segment, so
+        replicas elsewhere are unusable), ATTACH the request to the replica
+        frames, and WaterFill only the novel suffix around the hit.  The
+        home node is the node already holding the most attached KV — decode
+        appends and the suffix stay next to the hit.  None -> no usable hit
+        (the caller falls through to the normal placement)."""
+        trie = self.prefix_cache
+        pt = cluster.page_table
+        page = pt.page_size
+        win = cluster.window
+        alive = cluster.alive_instances()
+        best = None
+        for seg in sorted({i // win for i in alive}):
+            allowed = {i for i in alive if i // win == seg}
+            hit = trie.lookup(req.prefix_keys, allowed=allowed)
+            if hit and (best is None or len(hit) > len(best)):
+                best = hit
+        if not best:
+            return None
+        # per-page replica choice: extend the current instance's run while
+        # it holds the next page; an instance may host only ONE contiguous
+        # run (allocate's attach contract tiles [0, P) with one range per
+        # shard), so a forced revisit truncates the hit instead
+        chosen, runs, used, cur = [], {}, set(), None
+        for p, reps in best:
+            if cur in reps:
+                inst = cur
+            else:
+                cands = [i for i in reps if i not in used]
+                if not cands:
+                    break
+                inst = min(cands, key=lambda i: (cluster.kv_load(i), i))
+                used.add(inst)
+                cur = inst
+            chosen.append((p, inst))
+            runs.setdefault(inst, []).append((p, reps[inst]))
+        if not chosen:
+            return None
+        P = len(chosen) * page
+        attach = {inst: (pages_[0][0] * page, [f for _, f in pages_])
+                  for inst, pages_ in runs.items()}
+        node_tokens = {}
+        for inst, (_, fr) in attach.items():
+            n = cluster.node_of(inst)
+            node_tokens[n] = node_tokens.get(n, 0) + len(fr) * page
+        n_star = min(node_tokens, key=lambda n: (
+            -node_tokens[n],
+            sum(B[s] for s in cluster.node_instances(n)), n))
+        members = cluster.node_instances(n_star)
+        if not members:
+            return None
+        m_cands = [s for s in members
+                   if cluster.kv_headroom(s) >= self.kv_reserve] or members
+        m = min(m_cands, key=lambda s: (B[s], s))
+        hit_rec = PrefixHit(req.prefix_keys, attach, chosen, P)
+        suffix = req.length - P
+        if suffix <= 0:
+            # fully cached prompt: nothing to prefill, appends go to m
+            return int(m), sorted(set(attach) | {m}), {m: 0}, hit_rec
+
+        def caps_of(b):
+            caps = np.array([cluster.kv_headroom(s) for s in b], np.float64)
+            caps[0] = max(caps[0] - self.kv_reserve, 0.0)   # b[0] is m
+            return caps
+
+        k = min(self.buckets.cp_degree(req.length), len(members))
+        others = sorted((s for s in members if s != m),
+                        key=lambda s: (cluster.kv_load(s), s))
+        binding = [m] + others[: k - 1]
+        caps = caps_of(binding)
+        if caps.sum() < suffix and len(binding) < len(members):
+            binding = [m] + others
+            caps = caps_of(binding)
+        n_home = len(binding)
+        if caps.sum() < suffix:
+            short = suffix - caps.sum()
+            for s in self._remote_members(cluster, n_star):
+                if short <= 0:
+                    break
+                if s in binding:
+                    continue
+                binding.append(s)
+                short -= cluster.kv_headroom(s)
+            caps = caps_of(binding)
+        if caps.sum() < suffix:
+            return None
+        loads = np.array([cluster.kv_load(s) for s in binding], np.float64)
+        loads[n_home:] += float(self._penalty(cluster))
+        split_arr = waterfill(loads, suffix, capacities=caps)
+        split_arr = self._page_align(binding, split_arr, caps, suffix, page)
+        pairs = [(s, int(t))
+                 for i, (s, t) in enumerate(zip(binding, split_arr))
+                 if i < n_home or t > 0]
+        split = dict(pairs)
+        split.setdefault(m, 0)
+        return (int(m), sorted(set(split) | set(attach)), split, hit_rec)
+
+    def replicate_hot(self, cluster: ClusterState) -> list:
+        """Per-node replication of HOT prefix chains, priced through the
+        same cost model as a placement: a chain earns a replica on a node
+        only when its root collected ``hot_threshold`` hits since the last
+        decision, and the copy lands on the node's least-loaded instance
+        only if that instance keeps its growth reserve + low-water headroom
+        AFTER hosting the chain — a loaded node never trades live-KV runway
+        for a convenience copy.  Returns (src, dst) coordinate pairs for
+        ``IterationPlan.copies`` (the engine owes the physical copy; the
+        replicas become attachable next pass)."""
+        trie = self.prefix_cache
+        pt = cluster.page_table
+        out = []
+        roots = [n for n in trie.nodes.values()
+                 if n.depth == 0 and n.hits >= self.hot_threshold]
+        roots.sort(key=lambda n: (-n.hits, n.key))
+        for root in roots[:2]:          # at most two chains per pass
+            keys = trie.chain_of(root.key)
+            if not keys:
+                continue
+            depth = len(keys)
+            for tn in range(cluster.num_nodes):
+                insts = cluster.node_instances(tn)
+                if not insts:
+                    continue
+                if all(any(i in insts for i in trie.nodes[k].replicas)
+                       for k in keys if k in trie.nodes):
+                    continue            # the node already holds the chain
+                tgt = min(insts, key=lambda s: (cluster.kv_load(s), s))
+                need = depth + pt.pages_needed(
+                    self.kv_reserve + self._low_water(cluster))
+                if pt.free_frames(tgt) < need:
+                    continue
+                src, dst = trie.replicate(pt, keys, depth, tgt)
+                if src.shape[1]:
+                    out.append((src, dst))
+            root.hits = 0
+        return out
+
     # Alg. 1, lines 6-18 (+ hierarchical two-level fill for W < I)
     def place(self, cluster: ClusterState, req: Request, B=None):
         if B is None:
             B = np.bincount([r.moe_binding for r in cluster.active.values()],
                             minlength=cluster.num_instances)
+        if self.has_kv and self.prefix_cache is not None and req.prefix_keys:
+            hit_placement = self._place_prefix(cluster, req, B)
+            if hit_placement is not None:
+                return hit_placement
         # node selection: fewest total MoE-bound requests (line 7)
         nodes = [n for n in range(cluster.num_nodes) if cluster.node_instances(n)]
         if not nodes:
@@ -1046,6 +1312,14 @@ class DualBalancedScheduler(BaseScheduler):
         # remote members look penalty-tokens fuller: overflow-only crossing
         loads[n_home:] += float(self._penalty(cluster))
         split_arr = waterfill(loads, req.length, capacities=caps)
+        if self.prefix_cache is not None:
+            # cache on: page-align the split so this request's prompt pages
+            # are cacheable — misaligned pages straddle frames and can never
+            # be attached (the hit rate of every FUTURE sibling depends on
+            # the FIRST request of a group landing aligned)
+            split_arr = self._page_align(binding, split_arr, caps,
+                                         req.length,
+                                         cluster.page_table.page_size)
         # drop remote members the fill never used — short requests' bindings
         # stay literally node-local
         pairs = [(s, int(t)) for i, (s, t) in enumerate(zip(binding, split_arr))

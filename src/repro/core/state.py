@@ -25,6 +25,14 @@ class Request:
     # prefill); the request's ``prompt_len`` then counts ENCODER positions
     # (the DCP-managed cross-attention KV).  -1 for decoder-only archs.
     dec_prefix_len: int = -1
+    # chained page-content keys of the prompt (core/prefix.page_keys /
+    # group_keys) — empty tuple means "not cacheable / cache off".  Carried
+    # on the request so scheduler, simulator, and engine resolve the SAME
+    # prefix identity without re-hashing tokens.
+    prefix_keys: tuple = ()
+    # tokens satisfied from the global prefix cache at admission (attached
+    # full pages — the prefill only computes length - prefix_hit_tokens)
+    prefix_hit_tokens: int = 0
     # --- dynamic ---
     generated: int = 0
     # waiting | running | finished, or a typed non-success outcome: oom
@@ -317,6 +325,12 @@ class IterationPlan:
     # preemption-by-relaxation events: a short request's failed placement
     # triggered a forced relax pass that freed the headroom to admit it
     preemptions: int = 0
+    # data-plane KV copies decided this pass OUTSIDE the escalation records:
+    # (src, dst) int32 [3, T] coordinate pairs (KVReshard contract) from
+    # copy-on-write splits and hot-prefix replication.  Like escalations,
+    # the bookkeeping is already applied — the engine owes the physical copy
+    # before dispatching against the new tables.
+    copies: list = field(default_factory=list)
 
     def plan_of(self, instance: int) -> InstancePlan:
         return self.instances[instance]

@@ -9,15 +9,46 @@ from __future__ import annotations
 import numpy as np
 
 
-def waterfill(loads, total: int, capacities=None) -> np.ndarray:
+def waterfill(loads, total: int, capacities=None, minimums=None) -> np.ndarray:
     """loads: [k] current KV loads; total: tokens to place.
 
     capacities: optional [k] per-instance remaining capacity caps; the split
     never exceeds them (if infeasible, the residual spills onto the instance
     with the most remaining headroom — CanAllocate rejects such plans anyway).
 
+    minimums: optional [k] per-instance FLOORS — tokens that must stay on
+    their instance no matter the water level.  This is how refcounted
+    sharing enters every placement decision: a refcount>1 frame is
+    immovable-unless-CoW-split, so planners pin the shared tokens via
+    ``minimums`` and let the fill only distribute what can actually move.
+    Floors are granted first (clamped to caps), then the remainder
+    water-fills on top.
+
     Returns int64 split [k] with split.sum() == total.
     """
+    if minimums is not None:
+        mins = np.asarray(minimums, dtype=np.int64)
+        assert mins.shape == np.shape(loads) and (mins >= 0).all(), mins
+        if mins.any():
+            caps = (np.full(len(mins), np.inf) if capacities is None
+                    else np.asarray(capacities, dtype=np.float64))
+            mins = np.minimum(mins, np.maximum(caps, 0)).astype(np.int64)
+            if mins.sum() >= total:
+                # floors alone cover (or exceed) the total: grant
+                # proportionally from the tail — callers pass floors that
+                # sum <= total, so this is the degenerate exact-fit case
+                out = mins.copy()
+                excess = int(out.sum() - total)
+                for j in np.argsort(-(np.asarray(loads) + out)):
+                    d = min(excess, int(out[j]))
+                    out[j] -= d
+                    excess -= d
+                    if excess == 0:
+                        break
+                return out
+            rest = waterfill(np.asarray(loads) + mins, total - int(mins.sum()),
+                             None if capacities is None else caps - mins)
+            return rest + mins
     loads = np.asarray(loads, dtype=np.float64)
     k = loads.shape[0]
     assert k >= 1

@@ -58,6 +58,7 @@ from ..core.aot import AOTGraphEngine
 from ..core.comm import node_local_rounds, ring_round
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
 from ..core.page_table import KVSpillError
+from ..core.prefix import PrefixTrie, page_keys
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
 from ..core.state import ClusterState, Request
 from ..models import encdec, transformer
@@ -119,7 +120,8 @@ class NanoCPEngine:
                  max_slots_per_instance: int = 16,
                  pipeline: bool = True,
                  audit_donation_every_step: bool = False,
-                 admission=None):
+                 admission=None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.tp = tp or mesh.shape["model"]
@@ -163,6 +165,15 @@ class NanoCPEngine:
             # never appends KV (nothing grows; the re-shard op only covers
             # the decoder-only pool layouts)
             self.scheduler.allow_escalation = False
+        # global CoW prefix cache (core.prefix): decoder-only attention
+        # archs only — the suffix-only scatter and the CoW copy collective
+        # both target the paged k/v pools (per-slot SSM / whisper state has
+        # no sharable page identity)
+        if prefix_cache:
+            assert self._append_tokens, \
+                "prefix_cache needs a decoder-only attention arch"
+        self.prefix_trie = PrefixTrie(page_size) if prefix_cache else None
+        self.scheduler.prefix_cache = self.prefix_trie
         # the data plane's rotation window is the CLUSTER ring (node
         # boundaries are a link class, not a routing wall) — bindings may
         # span nodes on W < I topologies
@@ -244,7 +255,10 @@ class NanoCPEngine:
             "relaxations": 0, "relax_tokens": 0, "compacts": 0,
             "failures": 0, "recovered_tokens": 0, "reprefill_tokens": 0,
             "degraded_finishes": 0, "joins": 0,
-            "rejected": 0, "shed": 0, "preemptions": 0}
+            "rejected": 0, "shed": 0, "preemptions": 0,
+            # PR 8: global prefix cache + refcounted frame ownership
+            "prefix_hit_tokens": 0, "prefix_inserts": 0,
+            "copy_tokens": 0, "forks": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -272,9 +286,11 @@ class NanoCPEngine:
         now = self._now() if now is None else now
         rid = len(self._prompts)
         self._prompts[rid] = list(map(int, prompt_tokens))
+        keys = (page_keys(self._prompts[rid], self._dims0.page)
+                if self.prefix_trie is not None else ())
         self.cluster.enqueue(Request(rid=rid, prompt_len=len(prompt_tokens),
                                      max_new_tokens=max_new_tokens,
-                                     arrival=now), now)
+                                     arrival=now, prefix_keys=keys), now)
         self.results[rid] = GenResult(rid, self._prompts[rid])
         return rid
 
@@ -345,6 +361,12 @@ class NanoCPEngine:
         ssm_conv, ssm_h, ssm_coords = [], [], []
         firsts = []
         for req in reqs:
+            # the prefill forward always runs over the FULL prompt — a
+            # prefix-cache hit saves the KV WRITE (only the novel suffix
+            # scatters; the attached pages already hold identical KV, since
+            # equal chain keys imply an equal transcript), never the
+            # correctness of the first sampled token
+            hit = req.prefix_hit_tokens
             toks = jnp.asarray(self._prompts[req.rid])[None, :]
             logits, caches = transformer.forward(self.cfg, self.params, toks,
                                                  collect_kv=True)
@@ -370,18 +392,16 @@ class NanoCPEngine:
                     hs.append(hs_[:, 0])
             if lats:
                 # [nb, na, len, 1, dk] — MLA's single latent "head"
-                kv_k.append(jnp.stack(lats, axis=1)[..., None, :])
-                kv_coords.append(migrate.prefill_coords(
-                    self.cluster, req.rid, page, ps))
+                kv_k.append(jnp.stack(lats, axis=1)[:, :, hit:][..., None, :])
+                kv_coords.append(self._prompt_coords(req, hit, page, ps))
             elif ks:
                 khs = self._scatter.khs
                 # Hkv heads -> khs groups of kg heads (flattened last dim)
-                k3 = jnp.stack(ks, axis=1)          # [nb, na, len, Hkv, hd]
-                v3 = jnp.stack(vs, axis=1)
+                k3 = jnp.stack(ks, axis=1)[:, :, hit:]  # [nb, na, T, Hkv, hd]
+                v3 = jnp.stack(vs, axis=1)[:, :, hit:]
                 kv_k.append(k3.reshape(*k3.shape[:3], khs, -1))
                 kv_v.append(v3.reshape(*v3.shape[:3], khs, -1))
-                kv_coords.append(migrate.prefill_coords(
-                    self.cluster, req.rid, page, ps))
+                kv_coords.append(self._prompt_coords(req, hit, page, ps))
             if convs:
                 inst, slot = self.cluster.slot_map[req.rid]
                 ssm_conv.append(jnp.stack(convs, axis=1)[:, :, None])
@@ -399,7 +419,36 @@ class NanoCPEngine:
             coords = np.asarray(ssm_coords, np.int32).T
             self.state = self._scatter.scatter_ssm(self.state, conv, h,
                                                    coords)
+        self._register_prefixes(reqs)
         return self._finish_prefill_eos(eos_done, now)
+
+    def _prompt_coords(self, req, hit: int, page: int, ps: int) -> np.ndarray:
+        """Scatter coordinates for the prompt tokens the prefill must WRITE:
+        all of them on a cache miss (the contiguous sorted-order layout
+        ``migrate.prefill_coords`` assumes), only the novel suffix on a hit
+        (the attach breaks that layout, so positions resolve through the
+        page table's range map instead)."""
+        if hit == 0:
+            return migrate.prefill_coords(self.cluster, req.rid, page, ps)
+        c3 = self.cluster.page_table.position_coords(
+            req.rid, range(hit, req.prompt_len))
+        return np.stack([c3[0], c3[1] % ps, c3[1] // ps,
+                         c3[2]]).astype(np.int32)
+
+    def _register_prefixes(self, reqs: list) -> None:
+        """Register the admitted requests' cacheable prompt pages in the
+        trie (one cache_hold per new replica) — BEFORE any prefill-EOS
+        finish frees the pages, so even a one-shot request's prefix KV
+        outlives it."""
+        if self.prefix_trie is None:
+            return
+        pt = self.cluster.page_table
+        for req in reqs:
+            if req.prefix_keys:
+                self.hot_path_stats["prefix_inserts"] += \
+                    self.prefix_trie.insert(pt, req.rid, req.prefix_keys,
+                                            req.prompt_len)
+            self.hot_path_stats["prefix_hit_tokens"] += req.prefix_hit_tokens
 
     def _prefill_batch_encdec(self, reqs: list, now: float) -> None:
         """Whisper admission: encode frames, teacher-force the decoder
@@ -536,11 +585,50 @@ class NanoCPEngine:
             self.timings.get("reshard_us", 0.0)
             + (time.perf_counter() - t0) * 1e6)
 
+    def _apply_copies(self, copies: list) -> None:
+        """Apply owed data-plane KV copies ((src, dst) [3, T] coordinate
+        pairs: CoW splits, hot-prefix replication) through the re-shard
+        collective — gathers read pre-copy pools, so one batched call is
+        safe for any mix whose sources are never also destinations."""
+        if not copies:
+            return
+        src = np.concatenate([s for s, _ in copies], axis=1)
+        dst = np.concatenate([d for _, d in copies], axis=1)
+        if src.shape[1] == 0:
+            return
+        self.state = self._reshard(self.state, src, dst)
+        self.hot_path_stats["copy_tokens"] += int(src.shape[1])
+
+    def _cow_appends(self) -> None:
+        """Pre-lowering CoW pass: any active request whose next decode
+        append would land in a SHARED frame (a fork/prefix sibling still
+        reads it) gets its partial tails split to exclusive clones first —
+        ``routing.lower_plan`` appends assuming exclusive write targets.
+        Raises ``KVSpillError`` into the caller's spill-retry loop when a
+        clone cannot allocate."""
+        pt = self.cluster.page_table
+        copies = []
+        for rid in sorted(self.cluster.active):
+            req = self.cluster.active[rid]
+            if req.moe_binding >= 0 and \
+                    pt.append_needs_cow(rid, req.moe_binding):
+                copies.append(pt.exclusive_tails(rid))
+        self._apply_copies(copies)
+
     def _handle_spill(self, err: KVSpillError, now: float) -> list:
-        """A decode append overran its shard at table lowering: escalate the
-        spilled request onto shards with headroom, or — when no shard in the
-        node can take the KV — finish it with a clean request-level OOM.
-        Returns the requests finished here (empty when escalation worked)."""
+        """A decode append overran its shard at table lowering: evict cold
+        prefix-cache replicas on the spilled instance first (cache-only
+        frames are convenience copies — they go before ANY live request is
+        escalated), then escalate the spilled request onto shards with
+        headroom, or — when no shard in the node can take the KV — finish
+        it with a clean request-level OOM.  Returns the requests finished
+        here (empty when relief worked)."""
+        if self.prefix_trie is not None:
+            keep = getattr(self.cluster.active.get(err.rid), "prefix_keys",
+                           ())
+            if self.prefix_trie.evict(self.cluster.page_table, 1,
+                                      instance=err.instance, keep=keep):
+                return []            # the append can take a frame now: retry
         escs = (self.scheduler.relieve_spill(self.cluster, err.rid,
                                              err.instance)
                 if hasattr(self.scheduler, "relieve_spill") else [])
@@ -583,6 +671,14 @@ class NanoCPEngine:
                 f"{'encdec' if self.is_encdec else 'dec'} pins per-slot "
                 f"device state — the MoE binding cannot move without a slot "
                 f"state migration (use fail_instance for crash semantics)")
+        # prefix-cache holds on the leaver are released FIRST: cache-only
+        # frames free immediately (nothing worth evacuating), and frames
+        # shared with live requests become exclusively theirs so the
+        # evacuation moves them like any other.  Not rolled back on a
+        # failed drain — losing convenience replicas is always safe.
+        if self.prefix_trie is not None:
+            self.prefix_trie.release_instance(self.cluster.page_table,
+                                              instance)
         # dead first so the evacuation planner never picks it as a receiver;
         # rolled back if the node lacks headroom (evacuate raises with the
         # page table untouched) — a failed drain must leave the instance
@@ -665,6 +761,11 @@ class NanoCPEngine:
             self._inflight = _Inflight(self._inflight.toks, keep,
                                        self._inflight.holders)
         records = cl.fail_instance(instance)
+        if self.prefix_trie is not None:
+            # the replicas died with the hardware and the page table purged
+            # its ledger — FORGET them without releasing (a release would
+            # double-free into the instance's fresh pool)
+            self.prefix_trie.drop_instance(instance)
         return self._recover(records, now)
 
     def _discard_inflight(self, rids: set) -> None:
@@ -686,7 +787,7 @@ class NanoCPEngine:
         cl = self.cluster
         pt = cl.page_table
         ledger = {s: pt.free_frames(s) for s in cl.alive_instances()}
-        items, finished = [], []
+        items, finished, cows = [], [], []
         for rec in records:
             req = rec.req
             rid = req.rid
@@ -726,10 +827,16 @@ class NanoCPEngine:
             self.results[rid].recovered = True
             self.hot_path_stats["recovered_tokens"] += resident
             self.hot_path_stats["reprefill_tokens"] += lost
+            # surviving shards may carry SHARED partial tails (a fork or
+            # prefix sibling still reads them): split to exclusive clones
+            # before restore_ranges appends into the tail slack —
+            # place_recovery already priced the clone frames as pads
+            cows.append(pt.exclusive_tails(rid))
             positions, coords = pt.restore_ranges(rid, split, ranges)
             req.kv_binding = sorted(set(req.kv_binding) | set(split)
                                     | {req.moe_binding})
             items.append((req, positions, coords))
+        self._apply_copies(cows)
         if items:
             self._reprefill_ranges(items)
         return finished
@@ -842,6 +949,76 @@ class NanoCPEngine:
         self.hot_path_stats["compacts"] += 1
         return records
 
+    def fork_request(self, parent_rid: int, max_new_tokens: int,
+                     next_token: int | None = None,
+                     now: float | None = None) -> int:
+        """Fork an ACTIVE request mid-decode: the child attaches to the
+        parent's resident KV (full frames shared by refcount — zero data
+        movement; partial tails CoW-cloned so divergent appends never
+        tramp each other) and decodes independently from here on.
+
+        ``next_token`` overrides the child's PENDING token (the parent's
+        last sample, not yet consumed by a forward pass) — the fork point's
+        divergence, e.g. a different sampling candidate.  It replaces that
+        token in the child's transcript too, so ``prompt + tokens`` is
+        always the sequence the child actually processes.  Default is the
+        parent's, in which case greedy decoding makes the branches
+        identical.  ``max_new_tokens`` counts the child's TOTAL emitted
+        tokens, inherited ones included (the parent's finish semantics).
+        Decoder-only attention archs only: per-slot device state (SSM,
+        whisper) has no page identity to share."""
+        assert self._append_tokens and not self._pinned_slots, \
+            "fork_request needs a decoder-only attention arch"
+        now = self._now() if now is None else now
+        if self._inflight is not None:
+            # settle the pipeline: the fork must snapshot a harvested state
+            # (the in-flight iteration's token is part of the lineage)
+            self._harvest(now)
+        cl = self.cluster
+        parent = cl.active.get(parent_rid)
+        assert parent is not None, f"fork of inactive request {parent_rid}"
+        pt = cl.page_table
+        rid = len(self._prompts)
+        self._prompts[rid] = list(self._prompts[parent_rid])
+        try:
+            src, dst = pt.fork_request(rid, parent_rid)
+        except KVSpillError as err:
+            # tail clones lack a frame: cold cache replicas go first
+            if self.prefix_trie is None or not self.prefix_trie.evict(
+                    pt, 1, instance=err.instance):
+                raise
+            src, dst = pt.fork_request(rid, parent_rid)
+        self._apply_copies([(src, dst)])
+        B = np.bincount([r.moe_binding for r in cl.active.values()],
+                        minlength=cl.num_instances)
+        members = [s for s in parent.kv_binding
+                   if s not in cl.dead_instances] or [parent.moe_binding]
+        m = int(min(members, key=lambda s: (B[s], s)))
+        child = Request(rid=rid, prompt_len=parent.prompt_len,
+                        max_new_tokens=max_new_tokens, arrival=now,
+                        prefix_keys=parent.prefix_keys,
+                        generated=parent.generated, status="running",
+                        kv_binding=sorted(set(parent.kv_binding) | {m}),
+                        moe_binding=m, node=cl.node_of(m),
+                        start_time=now,
+                        token_times=list(parent.token_times))
+        cl.active[rid] = child
+        cl.assign_slot(rid, m)
+        res = GenResult(rid, self._prompts[rid])
+        res.tokens = list(self.results[parent_rid].tokens)
+        self.results[rid] = res
+        if next_token is not None:
+            # the pending token's KV was never appended: overriding the
+            # input must override the transcript entry it came from, or the
+            # recorded lineage would claim a token the child never saw
+            assert res.tokens and self.next_tok[parent_rid] == res.tokens[-1]
+            res.tokens[-1] = int(next_token)
+            self.next_tok[rid] = int(next_token)
+        else:
+            self.next_tok[rid] = self.next_tok[parent_rid]
+        self.hot_path_stats["forks"] += 1
+        return rid
+
     # ------------------------------------------------------------------ #
     def _harvest(self, now: float) -> list:
         """Materialize the in-flight iteration's tokens (async copy started
@@ -902,6 +1079,10 @@ class NanoCPEngine:
         # escalation records precede relaxation records, matching the order
         # the scheduler applied their page-table bookkeeping.
         self._apply_escalations(plan.escalations + plan.relaxations)
+        # data-plane copies owed outside the escalation records (hot-prefix
+        # replication, scheduler-side CoW splits): same collective, same
+        # ordering argument — before this step's admissions scatter
+        self._apply_copies(plan.copies)
         # typed admission-control outcomes: a rejected/shed request never
         # ran (its GenResult stays token-free), but it finishes HERE — in
         # the done list, in ``self.finished``, flagged on the result —
@@ -940,6 +1121,8 @@ class NanoCPEngine:
         attempts = len(self.cluster.active) + 1
         while True:
             try:
+                if self._append_tokens:
+                    self._cow_appends()
                 tbl = routing.lower_plan(self.cluster, plan,
                                          buckets=self.shape_buckets,
                                          append_tokens=self._append_tokens,

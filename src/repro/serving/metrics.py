@@ -131,6 +131,18 @@ def mean_ttft(requests) -> float:
     return float(np.mean(ts)) if ts else float("inf")
 
 
+def prefix_hit_rate(result) -> float:
+    """Fraction of admitted prompt tokens served from the global prefix
+    cache (attached to cached frames instead of prefilled).  Takes any
+    object with ``prefix_hit_tokens`` / ``prompt_tokens`` counters — the
+    simulator's ``SimResult`` or an engine stats dict wrapper.  0.0 when no
+    prompt tokens were admitted (cache off or empty trace)."""
+    tot = getattr(result, "prompt_tokens", 0)
+    if tot <= 0:
+        return 0.0
+    return getattr(result, "prefix_hit_tokens", 0) / tot
+
+
 def imbalance_pct(values) -> float:
     """(max/mean - 1) * 100; the paper's per-instance imbalance metric."""
     v = np.asarray(values, dtype=np.float64)

@@ -20,6 +20,7 @@ from ..configs.base import ModelConfig
 from ..core.bucketing import ShapeBuckets
 from ..core.comm import ring_round
 from ..core.page_table import KVSpillError
+from ..core.prefix import PrefixTrie
 from ..core.scheduler import BaseScheduler, UniformCPScheduler
 from ..core.state import ClusterState, Request
 from .latency_model import LatencyModel
@@ -95,6 +96,19 @@ class SimResult:
     degraded_finishes: int = 0                             # requests finished early
     joins: int = 0                                         # instances (re)joined
     reprefill_time: float = 0.0                            # recovery s charged
+    # global prefix-cache accounting (mirrors the engine's hot_path_stats):
+    # hit tokens are prompt positions ATTACHED to cached frames instead of
+    # prefilled, CoW splits are shared tails cloned before a write, and
+    # every cache-driven copy is charged into sim time like a re-shard
+    prompt_tokens: int = 0                                 # admitted prompt tokens
+    prefix_hit_tokens: int = 0                             # tokens served from cache
+    prefix_inserts: int = 0                                # new cache holds taken
+    cow_splits: int = 0                                    # shared tails cloned
+    cow_tokens: int = 0                                    # KV tokens those clones copied
+    cow_time: float = 0.0                                  # clone copy s charged
+    copy_tokens: int = 0                                   # replication/pad KV tokens copied
+    evicted_prefix_frames: int = 0                         # cache frames evicted this run
+    prefill_time: float = 0.0                              # novel-suffix prefill s charged
 
 
 class ClusterSimulator:
@@ -102,12 +116,24 @@ class ClusterSimulator:
                  num_instances: int = 32, instances_per_node: int = 8,
                  kv_capacity_tokens: int = 1_000_000, page_size: int = 64,
                  latency: LatencyModel | None = None, multi_step: int = 1,
-                 sched_overhead: float = 150e-6):
+                 sched_overhead: float = 150e-6, prefix_cache: bool = False,
+                 charge_prefill: bool = False):
         self.cfg = cfg
         self.scheduler = scheduler
         self.latency = latency or LatencyModel(cfg)
         self.multi_step = multi_step
         self.sched_overhead = sched_overhead
+        if prefix_cache:
+            assert cfg.has_attention and not cfg.is_encoder_decoder, \
+                "prefix_cache needs a decoder-only attention arch"
+        self.prefix_trie = PrefixTrie(page_size) if prefix_cache else None
+        scheduler.prefix_cache = self.prefix_trie
+        # charge the (novel-suffix) prefill forward into sim time at
+        # admission — off by default so existing decode-only sweeps keep
+        # their numbers; the prefix-cache benchmark turns it on to measure
+        # the TTFT a hit saves
+        self.charge_prefill = charge_prefill
+        self._registered = set()                 # rids whose prompt is cached
         self.cluster = ClusterState(num_instances=num_instances,
                                     instances_per_node=instances_per_node,
                                     kv_capacity_tokens=kv_capacity_tokens,
@@ -246,16 +272,97 @@ class ClusterSimulator:
                 and len(cl.binding_nodes(e.new_binding)) == 1)
         return now + t_intra + t_inter
 
-    def _relieve_or_oom(self, res: SimResult, cl: ClusterState, r: Request,
-                        err: KVSpillError, now: float) -> float:
-        """A decode append overran its shard between scheduling passes:
-        force-escalate (charged) like the engine's spill path, else finish
-        the request with a request-level OOM."""
-        escs = (self.scheduler.relieve_spill(cl, err.rid, err.instance)
+    def _charge_copies(self, res: SimResult, copies: list,
+                       now: float) -> tuple[float, int]:
+        """Charge cache-driven copy coords ((src, dst) [3, T] pairs — hot-
+        prefix replication, CoW pads, tail clones) at the same per-link-
+        class price the re-shard path pays.  Returns (now, tokens moved)."""
+        cl, lm = self.cluster, self.latency
+        W = cl.instances_per_node
+        intra = inter = 0
+        for src, dst in copies:
+            n = src.shape[1]
+            if n == 0:
+                continue
+            x = int((src[0] // W != dst[0] // W).sum())
+            intra += n - x
+            inter += x
+        if intra + inter == 0:
+            return now, 0
+        t_i = lm.kv_reshard_time(intra)
+        t_x = lm.kv_reshard_time(inter, inter=True)
+        res.cross_reshard_time += t_x
+        res.cross_node_bytes += int(
+            inter * lm.kv_bytes_per_token * lm.num_attn_layers)
+        return now + t_i + t_x, intra + inter
+
+    def _register_admissions(self, res: SimResult, now: float) -> float:
+        """Post-admission pass over newly placed requests: register their
+        cacheable prompt pages in the trie (the engine does this at
+        prefill), account hit tokens, and optionally charge the NOVEL-
+        suffix prefill — the attached pages' skipped compute is exactly
+        the TTFT win the share-ratio sweep measures."""
+        cl = self.cluster
+        novel = 0
+        for rid, req in cl.active.items():
+            if rid in self._registered:
+                continue
+            self._registered.add(rid)
+            res.prompt_tokens += req.prompt_len
+            res.prefix_hit_tokens += req.prefix_hit_tokens
+            novel += req.prompt_len - req.prefix_hit_tokens
+            if self.prefix_trie is not None and req.prefix_keys:
+                res.prefix_inserts += self.prefix_trie.insert(
+                    cl.page_table, rid, req.prefix_keys, req.prompt_len)
+        if self.charge_prefill and novel > 0:
+            t = self.latency.reprefill_time(novel)
+            res.prefill_time += t
+            now += t
+        return now
+
+    def _cow_tail(self, res: SimResult, rid: int, now: float) -> float:
+        """Clone every shared partial tail the next write would hit (fork /
+        restore slack); the copy rides the reshard collective, charged."""
+        src, dst = self.cluster.page_table.exclusive_tails(rid)
+        if src.shape[1] == 0:
+            return now
+        res.cow_splits += 1
+        res.cow_tokens += src.shape[1]
+        now2, _ = self._charge_copies(res, [(src, dst)], now)
+        res.cow_time += now2 - now
+        return now2
+
+    def _append_decode_token(self, res: SimResult, cl: ClusterState,
+                             r: Request, now: float) -> float:
+        """One decode append with the engine's full spill ladder: CoW-split
+        a shared tail first, on spill evict cache-only frames (cheapest
+        relief — no live KV moves; ``keep`` protects the spiller's own
+        chain), then force-escalate (charged), else OOM-finish."""
+        pt = cl.page_table
+        spill = None
+        for attempt in range(2):
+            try:
+                if (self.prefix_trie is not None
+                        and pt.append_needs_cow(r.rid, r.moe_binding)):
+                    now = self._cow_tail(res, r.rid, now)
+                pt.append_token(r.rid, r.moe_binding)
+                return now
+            except KVSpillError as err:
+                spill = err
+                if (attempt == 0 and self.prefix_trie is not None
+                        and self.prefix_trie.evict(pt, 2,
+                                                   instance=err.instance,
+                                                   keep=r.prefix_keys)):
+                    continue
+                break
+        escs = (self.scheduler.relieve_spill(cl, spill.rid, spill.instance)
                 if hasattr(self.scheduler, "relieve_spill") else [])
         if escs:
             now = self._charge_reshard(res, escs, now)
-            cl.page_table.append_token(r.rid, r.moe_binding)
+            if (self.prefix_trie is not None
+                    and pt.append_needs_cow(r.rid, r.moe_binding)):
+                now = self._cow_tail(res, r.rid, now)
+            pt.append_token(r.rid, r.moe_binding)
             return now
         cl.finish(r, now)
         r.status = "oom"
@@ -302,6 +409,11 @@ class ClusterSimulator:
                 continue
             if lost == 0:
                 continue
+            # restore appends into surviving tail slack — shared tails
+            # (prefix/fork siblings) must be CoW-split first so the replay
+            # never overwrites a frame another owner still reads
+            if self.prefix_trie is not None:
+                now = self._cow_tail(res, req.rid, now)
             pt.restore_ranges(req.rid, split, ranges)
             req.kv_binding = sorted(set(req.kv_binding) | set(split)
                                     | {req.moe_binding})
@@ -326,6 +438,8 @@ class ClusterSimulator:
         import time as _time
         res = SimResult()
         res.submitted = len(workload.requests)
+        ev0 = (self.prefix_trie.evicted_frames
+               if self.prefix_trie is not None else 0)
         cl = self.cluster
         arrivals = sorted(workload.requests, key=lambda r: r.arrival)
         ai = 0
@@ -346,6 +460,11 @@ class ClusterSimulator:
                     res.joins += 1
                 elif inst not in cl.dead_instances:
                     records = cl.fail_instance(inst)
+                    # the ledger is already purged: forget the dead
+                    # replicas WITHOUT releasing (a release would
+                    # double-free into the fresh pool)
+                    if self.prefix_trie is not None:
+                        self.prefix_trie.drop_instance(inst)
                     res.failures += 1
                     now = self._recover(res, records, now)
             # admit arrivals whose (post-prefill) ready time has passed
@@ -353,7 +472,9 @@ class ClusterSimulator:
                 tr = arrivals[ai]
                 cl.enqueue(Request(rid=tr.rid, prompt_len=tr.prompt_len,
                                    max_new_tokens=tr.max_new_tokens,
-                                   arrival=tr.arrival), now)
+                                   arrival=tr.arrival,
+                                   prefix_keys=getattr(tr, "prefix_keys",
+                                                       ())), now)
                 ai += 1
             t0 = _time.perf_counter()
             plan = self.scheduler.schedule(cl, now)
@@ -363,6 +484,14 @@ class ClusterSimulator:
             # re-shard time (the engine instead dispatches migrate.KVReshard)
             now = self._charge_reshard(
                 res, plan.escalations + plan.relaxations, now)
+            if self.prefix_trie is not None or self.charge_prefill:
+                now = self._register_admissions(res, now)
+            # cache-driven copies the scheduler planned (hot-prefix
+            # replication, evacuation CoW pads): same collective as the
+            # re-shard, charged into sim time so replication isn't free
+            if plan.copies:
+                now, moved = self._charge_copies(res, plan.copies, now)
+                res.copy_tokens += moved
             # typed admission-control outcomes: statuses were stamped by the
             # controller; the drop is accounted HERE (finish_time + finished
             # list) so no request ever silently vanishes from the metrics
@@ -427,12 +556,9 @@ class ClusterSimulator:
                     r.generated += 1
                     r.token_times.append(now)
                     if append:
-                        try:
-                            cl.page_table.append_token(r.rid, r.moe_binding)
-                        except KVSpillError as err:
-                            now = self._relieve_or_oom(res, cl, r, err, now)
-                            if r.status == "oom":
-                                continue
+                        now = self._append_decode_token(res, cl, r, now)
+                        if r.status == "oom":
+                            continue
                     if r.done:
                         done.append(r)
                 for r in done:
@@ -443,4 +569,6 @@ class ClusterSimulator:
             if ai >= len(arrivals) and not cl.active and not cl.waiting:
                 break
         res.sim_time = now
+        if self.prefix_trie is not None:
+            res.evicted_prefix_frames = self.prefix_trie.evicted_frames - ev0
         return res

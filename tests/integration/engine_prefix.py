@@ -1,0 +1,272 @@
+"""Prefix-cache engine cells: global CoW prefix cache, live (PR 8).
+
+Each mode drives ``NanoCPEngine`` end to end on fake host devices and
+asserts the cache contract:
+
+  * equality — STAGGERED arrivals sharing a 3-page prompt prefix, run twice
+               (cache on / cache off) at the given (I, TP): tokens must be
+               identical between the two runs AND equal to the single-device
+               reference, while the cache-on run actually hit (attached
+               pages skip the KV scatter but never change a logit).
+  * fork     — fork a request mid-decode with a forced divergence token:
+               full frames end up refcount-shared, the partial tail is
+               CoW-cloned, parent and child both finish token-for-token
+               equal to their references, step donation held.
+  * evict    — tiny pools: finished requests leave cache-held frames behind;
+               decode growth then spills, and the spill path reclaims cache
+               frames (cheapest relief) before any escalation — everything
+               finishes exactly, ``evicted_frames`` > 0.
+  * chaos    — the instance holding the SHARED prefix frames crashes
+               mid-decode: the trie forgets its replicas without release,
+               and every surviving owner re-prefills its own copy of the
+               shared ranges — both finish token-for-token.
+
+All modes assert zero leaked frames (``frame_audit``) and — after warmup —
+no new donation copies.
+
+Usage: engine_prefix.py MODE [I TP]   (I/TP only for mode=equality)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+VOCAB = 256
+PAGE = 16
+
+
+def reference(cfg, params, prompt, n):
+    seq, out = list(map(int, prompt)), []
+    for _ in range(n):
+        logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+        t = int(jnp.argmax(logits[0, -1]))
+        out.append(t)
+        seq.append(t)
+    return out
+
+
+def check_frames(cl):
+    for s, (free, held) in cl.page_table.frame_audit().items():
+        if s in cl.dead_instances:
+            assert held == 0, (s, free, held)
+        else:
+            assert free + held == cl.page_table.frames_per_instance, \
+                (s, free, held)
+
+
+def drain(eng, max_steps, guard=True):
+    cl = eng.cluster
+    for _ in range(max_steps):
+        if not (cl.active or cl.waiting or eng._inflight is not None):
+            return
+        if guard:
+            with jax.transfer_guard("disallow"):
+                eng.step()
+        else:
+            eng.step()
+    raise AssertionError(f"prefix cell exceeded {max_steps} steps")
+
+
+def build(cfg, params, I, TP, W=None, cap=4096, cache=True):
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
+    degrees = (1, 2, 3) if I >= 3 else (1, 2, 2)
+    return NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=W or I,
+        kv_capacity_tokens=cap, page_size=PAGE,
+        buckets=CPBuckets(edges=(64, 160), degrees=degrees),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=I),
+        max_slots_per_instance=4, audit_donation_every_step=True,
+        prefix_cache=cache)
+
+
+def _setup(seed=0):
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(seed), cfg))
+    return cfg, params
+
+
+# --------------------------------------------------------------------------- #
+def run_equality(I: int, TP: int) -> None:
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, VOCAB, (3 * PAGE,))      # 3 cacheable pages
+    tails = [rng.integers(0, VOCAB, (n,)) for n in (12, 30, 2)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    n_new = 6
+
+    def run(cache):
+        eng = build(cfg, params, I, TP, cache=cache)
+        # staggered: rid 0 prefills (and populates the cache) before the
+        # siblings arrive — concurrent arrivals can never hit each other
+        eng.add_request(prompts[0], max_new_tokens=n_new)
+        eng.step()
+        eng.step()
+        for p in prompts[1:]:
+            eng.add_request(p, max_new_tokens=n_new)
+        drain(eng, 64, guard=False)               # admission mid-run: no guard
+        check_frames(eng.cluster)
+        return eng
+
+    on, off = run(True), run(False)
+    hits = on.hot_path_stats["prefix_hit_tokens"]
+    assert hits == 2 * 3 * PAGE, (hits, "both siblings must attach 3 pages")
+    assert on.hot_path_stats["prefix_inserts"] > 0
+    assert off.hot_path_stats["prefix_hit_tokens"] == 0
+    for rid, p in enumerate(prompts):
+        ref = reference(cfg, params, p, n_new)
+        assert on.results[rid].tokens == ref, (rid, on.results[rid].tokens, ref)
+        assert off.results[rid].tokens == ref, (rid, off.results[rid].tokens)
+        print(f"  rid {rid}: cache-on == cache-off == ref ({ref})")
+    print(f"  hit_tokens={hits} inserts={on.hot_path_stats['prefix_inserts']} "
+          f"trie={on.prefix_trie.stats()}")
+    print(f"mode=equality I={I} TP={TP}: PASS")
+
+
+# --------------------------------------------------------------------------- #
+def run_fork() -> None:
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, VOCAB, (PAGE + 12,))     # partial tail page
+    n_new = 12
+    eng = build(cfg, params, 4, 2)
+    eng.add_request(prompt, max_new_tokens=n_new)
+    eng.step()
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+    for _ in range(3):
+        with jax.transfer_guard("disallow"):
+            eng.step()
+    # force divergence: replace the parent's PENDING token (tokens[-1],
+    # not yet consumed by a forward) with a non-greedy candidate
+    ref_parent = reference(cfg, params, prompt, n_new)
+    if eng._inflight is not None:                     # settle the pipeline
+        eng._harvest(eng._now())
+    k = len(eng.results[0].tokens)
+    assert 3 <= k < n_new, (k, "fork must land mid-decode")
+    forced = (ref_parent[k - 1] + 1) % VOCAB
+    child = eng.fork_request(0, n_new, next_token=forced)
+    assert eng.results[child].tokens == ref_parent[:k - 1] + [forced]
+    assert eng.cluster.page_table.cow_splits >= 1     # tail page was cloned
+    drain(eng, 64)
+    check_frames(eng.cluster)
+
+    seq = list(map(int, prompt)) + ref_parent[:k - 1] + [forced]
+    ref_child = ref_parent[:k - 1] + [forced] + reference(
+        cfg, params, seq, n_new - k)
+    assert eng.results[0].tokens == ref_parent, (eng.results[0].tokens)
+    assert eng.results[child].tokens == ref_child, (
+        eng.results[child].tokens, ref_child)
+    assert eng.results[child].tokens != ref_parent    # genuinely diverged
+    st = eng.aot.stats
+    assert st.donation_copies == copies_before, st.as_dict()
+    print(f"  parent={ref_parent}")
+    print(f"  child ={eng.results[child].tokens} (forked at {k})")
+    print(f"  cow_splits={eng.cluster.page_table.cow_splits} "
+          f"forks={eng.hot_path_stats['forks']}")
+    print("mode=fork: PASS")
+
+
+# --------------------------------------------------------------------------- #
+def run_evict() -> None:
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, VOCAB, (2 * PAGE,))
+    eng = build(cfg, params, 2, 2, cap=192)           # 12 frames / instance
+    # phase 1: two short sharers finish and leave cache-held frames behind
+    p0 = np.concatenate([shared, rng.integers(0, VOCAB, (8,))])
+    p1 = np.concatenate([shared, rng.integers(0, VOCAB, (4,))])
+    eng.add_request(p0, max_new_tokens=2)
+    eng.step()
+    eng.step()
+    eng.add_request(p1, max_new_tokens=2)
+    drain(eng, 32, guard=False)
+    assert eng.hot_path_stats["prefix_hit_tokens"] == 2 * PAGE
+    held0 = eng.prefix_trie.cached_frames()
+    assert held0 > 0, "finished requests must leave cache holds"
+    # phase 2: decode growth must reclaim those frames via the spill path
+    p2 = rng.integers(0, VOCAB, (90,))
+    p3 = rng.integers(0, VOCAB, (90,))
+    eng.add_request(p2, max_new_tokens=96)
+    eng.add_request(p3, max_new_tokens=96)
+    eng.step()
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+    drain(eng, 200)
+    check_frames(eng.cluster)
+    assert eng.prefix_trie.evicted_frames > 0, \
+        "pressure never reclaimed a cache frame — shrink the pools"
+    for rid, (p, n) in enumerate([(p0, 2), (p1, 2), (p2, 96), (p3, 96)]):
+        ref = reference(cfg, params, p, n)
+        assert eng.results[rid].tokens == ref, (rid, eng.results[rid].tokens)
+    st = eng.aot.stats
+    assert st.donation_copies == copies_before, st.as_dict()
+    print(f"  evicted_frames={eng.prefix_trie.evicted_frames} (of {held0} "
+          f"held) oom={eng.hot_path_stats.get('oom_finishes', 0)}")
+    print("mode=evict: PASS")
+
+
+# --------------------------------------------------------------------------- #
+def run_chaos() -> None:
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, VOCAB, (3 * PAGE,))
+    p0 = np.concatenate([shared, rng.integers(0, VOCAB, (12,))])
+    p1 = np.concatenate([shared, rng.integers(0, VOCAB, (24,))])
+    n_new = 16
+    eng = build(cfg, params, 4, 2)
+    eng.add_request(p0, max_new_tokens=n_new)
+    eng.step()
+    eng.step()
+    eng.add_request(p1, max_new_tokens=n_new)
+    drain_steps = 0
+    while eng.cluster.waiting or eng.hot_path_stats["prefix_hit_tokens"] == 0:
+        eng.step()
+        drain_steps += 1
+        assert drain_steps < 16, "sibling never admitted with a hit"
+    assert eng.hot_path_stats["prefix_hit_tokens"] == 3 * PAGE
+    # the shared pages all live on ONE instance's frames — kill it
+    trie = eng.prefix_trie
+    victims = {inst for node in trie.nodes.values() for inst in node.replicas}
+    victim = min(victims)
+    for _ in range(3):
+        eng.step()
+    eng.fail_instance(victim)
+    assert all(victim not in node.replicas for node in trie.nodes.values())
+    drain(eng, 96, guard=False)
+    check_frames(eng.cluster)
+    hp = eng.hot_path_stats
+    # each surviving owner replays its OWN copy of the shared ranges (the
+    # sharing died with the hardware): both lost [0, 48) at minimum
+    assert hp["reprefill_tokens"] >= 2 * 3 * PAGE, hp["reprefill_tokens"]
+    for rid, p in enumerate([p0, p1]):
+        ref = reference(cfg, params, p, n_new)
+        assert eng.results[rid].tokens == ref, (rid, eng.results[rid].tokens)
+        assert eng.results[rid].recovered, (rid, "expected a recovery")
+    print(f"  victim={victim} reprefill_tokens={hp['reprefill_tokens']} "
+          f"failures={hp['failures']}")
+    print("mode=chaos: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1]
+    if mode == "equality":
+        run_equality(int(sys.argv[2]), int(sys.argv[3]))
+    elif mode == "fork":
+        run_fork()
+    elif mode == "evict":
+        run_evict()
+    elif mode == "chaos":
+        run_chaos()
+    else:
+        raise SystemExit(f"unknown mode {mode}")

@@ -325,6 +325,36 @@ def test_interval_shares_match_table1():
         assert shares[len(table)] == 0.0, (kind, shares)
 
 
+def test_shares_kind_reproduces_measured_mix():
+    """The measure -> regenerate loop: a trace generated from another
+    trace's ``interval_shares`` reproduces that mix within sampling
+    noise — the live-distribution replacement for the two-point
+    long-ratio blend."""
+    live = make_workload("openrouter", rate=400, duration=10, seed=3)
+    shares = live.interval_shares()
+    wl = make_workload("shares", rate=400, duration=10, seed=4,
+                       shares=shares)
+    assert wl.requests, "regenerated trace must not be empty"
+    got = wl.interval_shares()
+    for key, want in shares.items():
+        assert got[key] == pytest.approx(want, abs=0.05), (key, got, shares)
+    # only intervals the measurement saw are ever sampled
+    for key, want in shares.items():
+        if want == 0.0:
+            assert got[key] == 0.0, (key, got)
+
+
+def test_shares_kind_validation():
+    with pytest.raises(ValueError, match="needs a shares"):
+        make_workload("shares", rate=1, duration=1)
+    with pytest.raises(ValueError, match="only applies"):
+        make_workload("mixed", rate=1, duration=1,
+                      shares={"64-1000": 1.0})
+    with pytest.raises(ValueError, match="zero share"):
+        make_workload("shares", rate=1, duration=1,
+                      shares={"64-1000": 0.0})
+
+
 def test_tiny_trace_deterministic():
     a = slo.make_tiny_trace(3, 2, gap=0.01)
     b = slo.make_tiny_trace(3, 2, gap=0.01)

@@ -172,6 +172,29 @@ def test_engine_slo(mode, pipeline):
     assert "PASS" in out
 
 
+# global CoW prefix-cache cells: shared KV as a first-class placement
+# object on the REAL engine — attach-instead-of-prefill equality on two
+# topologies, fork-mid-decode with a forced divergence token, cache
+# eviction as the cheapest spill relief, and crash recovery re-prefilling
+# the shared ranges per surviving owner — token-for-token vs reference
+# with clean frame audits (tests/integration/engine_prefix.py).
+PREFIX_CELLS = [
+    ("equality", "4", "2"),
+    ("equality", "2", "4"),
+    ("fork",),
+    ("evict",),
+    ("chaos",),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("args", PREFIX_CELLS,
+                         ids=["-".join(c) for c in PREFIX_CELLS])
+def test_engine_prefix(args):
+    out = run_integration("engine_prefix.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_multinode_conformance_cell():
     """Full conformance workload on a two-node W=4, I=8 topology (nothing

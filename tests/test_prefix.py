@@ -1,0 +1,307 @@
+"""Refcounted frame ownership + global CoW prefix cache (PR 8).
+
+Control-plane-only tests: GlobalPageTable refcounts, PrefixTrie
+insert/lookup/evict, CoW splits, fork, and the workload/simulator knobs.
+The device-equality checks live in tests/integration/engine_prefix.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.page_table import CACHE_OWNER, GlobalPageTable, KVSpillError
+from repro.core.prefix import PrefixTrie, group_keys, page_keys
+from repro.core.waterfill import waterfill
+from repro.serving import metrics
+from repro.serving.workload import make_workload
+
+PAGE = 16
+
+
+def _pt(instances=2, frames=8):
+    return GlobalPageTable(instances, frames_per_instance=frames,
+                           page_size=PAGE)
+
+
+# --------------------------------------------------------------------------- #
+# content keys
+# --------------------------------------------------------------------------- #
+def test_page_keys_chain_and_sensitivity():
+    toks = list(range(3 * PAGE + 5))
+    keys = page_keys(toks, PAGE)
+    assert len(keys) == 3                      # partial tail page never keyed
+    # chaining: a longer transcript with the same head shares the head keys
+    assert page_keys(toks + [7] * PAGE, PAGE)[:3] == keys
+    # any token change invalidates that page AND every deeper page
+    mut = list(toks)
+    mut[PAGE] += 1
+    keys2 = page_keys(mut, PAGE)
+    assert keys2[0] == keys[0]
+    assert keys2[1] != keys[1] and keys2[2] != keys[2]
+    # dtype canonicalisation: int32 vs python ints hash identically
+    assert page_keys(np.asarray(toks, np.int32), PAGE) == keys
+
+
+def test_group_keys_disjoint_and_prefix_consistent():
+    a, b = group_keys(0, 4), group_keys(1, 4)
+    assert not set(a) & set(b)
+    assert group_keys(0, 2) == a[:2]           # shorter member shares the head
+
+
+# --------------------------------------------------------------------------- #
+# refcounted attach / free
+# --------------------------------------------------------------------------- #
+def _audit_ok(pt):
+    for s, (free, held) in pt.frame_audit().items():
+        assert free + held == pt.frames_per_instance, (s, free, held)
+
+
+def test_attach_shares_frames_and_decref_frees_last():
+    pt = _pt()
+    trie = PrefixTrie(PAGE)
+    toks = list(range(2 * PAGE))
+    keys = page_keys(toks, PAGE)
+    pt.allocate(1, {0: 2 * PAGE})
+    assert trie.insert(pt, 1, keys, 2 * PAGE) == 2
+    frames = [f for _, _, f in pt.aligned_pages(1, 2 * PAGE)]
+    hit = trie.lookup(keys)
+    assert [p for p, _ in hit] == [0, 1]
+    # attach a second request to the cached pages + one novel page
+    attach = {0: (0, [reps[0] for _, reps in hit])}
+    pt.allocate(2, {0: PAGE}, prefix=attach)
+    for f in frames:
+        assert pt.frame_refcount(0, f) == 3    # rid 1 + rid 2 + cache hold
+        assert pt.frame_shared(1, 0, f) and pt.frame_shared(2, 0, f)
+    _audit_ok(pt)
+    pt.free_request(1)
+    for f in frames:
+        assert pt.frame_refcount(0, f) == 2    # still live: rid 2 + cache
+    pt.free_request(2)
+    for f in frames:
+        assert pt.frame_refcount(0, f) == 1    # cache hold keeps them
+    assert trie.evict(pt, 8) == 2              # now evictable -> really freed
+    assert pt.pools[0].free_frames == pt.frames_per_instance
+    _audit_ok(pt)
+
+
+def test_attach_ranges_must_tile_prefix():
+    pt = _pt()
+    pt.allocate(1, {0: 2 * PAGE})
+    f = pt.shard_frames(1, 0)
+    with pytest.raises(AssertionError):
+        pt.allocate(2, {0: PAGE}, prefix={0: (PAGE, [f[1]])})  # hole at [0,P)
+
+
+def test_eviction_skips_live_replicas_deepest_first():
+    pt = _pt(1, frames=16)
+    trie = PrefixTrie(PAGE)
+    ka = page_keys(list(range(3 * PAGE)), PAGE)
+    kb = page_keys(list(range(100, 100 + PAGE)), PAGE)
+    pt.allocate(1, {0: 3 * PAGE})
+    pt.allocate(2, {0: PAGE})
+    trie.insert(pt, 1, ka, 3 * PAGE)
+    trie.insert(pt, 2, kb, PAGE)
+    # rid 1 still maps its frames -> refcount 2 -> NOT evictable
+    assert trie.evict(pt, 8) == 0
+    pt.free_request(1)
+    pt.free_request(2)
+    # deepest-first: chain a's leaf (depth 2) goes before its root
+    assert trie.evict(pt, 1) == 1
+    assert ka[2] not in trie.nodes and ka[0] in trie.nodes
+    # keep= protects a chain a concurrent admission just matched
+    assert trie.evict(pt, 8, keep=kb) == 2
+    assert kb[0] in trie.nodes and not set(ka) & set(trie.nodes)
+    assert trie.evicted_frames == 3
+    _audit_ok(pt)
+
+
+def test_lookup_stops_at_first_hole_and_respects_allowed():
+    pt = _pt(2, frames=8)
+    trie = PrefixTrie(PAGE)
+    keys = page_keys(list(range(2 * PAGE)), PAGE)
+    pt.allocate(1, {0: 2 * PAGE})
+    trie.insert(pt, 1, keys, 2 * PAGE)
+    assert len(trie.lookup(keys, allowed={1})) == 0    # wrong instance
+    pt.free_request(1)
+    trie.evict(pt, 1)                                  # leaf gone -> hole
+    assert [p for p, _ in trie.lookup(keys)] == [0]
+
+
+# --------------------------------------------------------------------------- #
+# copy-on-write
+# --------------------------------------------------------------------------- #
+def test_cow_split_clones_and_releases_claim():
+    pt = _pt(1)
+    pt.allocate(1, {0: PAGE + 4})
+    src_frames = list(pt.shard_frames(1, 0))
+    src, dst = pt.fork_request(2, 1)
+    # full head frame shared, partial tail cloned with the resident tokens
+    assert pt.frame_refcount(0, src_frames[0]) == 2
+    assert src.shape == dst.shape == (3, 4)
+    assert pt.shard_frames(2, 0)[0] == src_frames[0]
+    assert pt.shard_frames(2, 0)[1] != src_frames[1]
+    # both branches can now append without CoW
+    assert not pt.append_needs_cow(1, 0) and not pt.append_needs_cow(2, 0)
+    pt.append_token(1, 0)
+    pt.append_token(2, 0)
+    _audit_ok(pt)
+    pt.free_request(1)
+    assert pt.frame_refcount(0, src_frames[0]) == 1    # child still reads it
+    pt.free_request(2)
+    assert pt.pools[0].free_frames == pt.frames_per_instance
+
+
+def test_append_into_shared_tail_requires_cow():
+    pt = _pt(1)
+    trie = PrefixTrie(PAGE)
+    pt.allocate(1, {0: PAGE + 4})
+    # cache_hold on the partial tail simulates a sibling owner
+    tail = pt.shard_frames(1, 0)[-1]
+    pt.cache_hold(0, tail)
+    assert pt.append_needs_cow(1, 0)
+    with pytest.raises(AssertionError):
+        pt.append_token(1, 0)
+    src, dst = pt.exclusive_tails(1)
+    assert src.shape[1] == 4 and pt.cow_splits == 1
+    assert not pt.append_needs_cow(1, 0)
+    pt.append_token(1, 0)
+    assert pt.cache_release(0, tail)
+    pt.free_request(1)
+    _audit_ok(pt)
+    del trie
+
+
+def test_move_out_of_shared_frame_is_a_copy():
+    pt = _pt(2)
+    pt.allocate(1, {0: PAGE})
+    f = pt.shard_frames(1, 0)[0]
+    pt.cache_hold(0, f)
+    src, dst = pt.move_pages(1, [(0, 1, PAGE)])
+    assert src.shape[1] == PAGE
+    # the source frame did NOT return to the pool: the cache still owns it
+    assert pt.frame_refcount(0, f) == 1
+    assert pt.pools[0].free_frames == pt.frames_per_instance - 1
+    toks = pt.shard_tokens(1)
+    assert toks.get(1) == PAGE and sum(toks.values()) == PAGE
+    assert pt.cache_release(0, f)
+    pt.free_request(1)
+    _audit_ok(pt)
+
+
+def test_movable_tail_stops_at_shared_frame():
+    pt = _pt(1)
+    pt.allocate(1, {0: 3 * PAGE})
+    frames = pt.shard_frames(1, 0)
+    assert pt.movable_tail(1, 0) == 3 * PAGE
+    pt.cache_hold(0, frames[1])
+    assert pt.movable_tail(1, 0) == PAGE       # only the tail page past it
+    pt.cache_release(0, frames[1])
+    pt.free_request(1)
+
+
+def test_fork_preflight_leaves_table_untouched_on_spill():
+    pt = _pt(1, frames=2)
+    pt.allocate(1, {0: PAGE + 4})              # 2 frames: pool exhausted
+    with pytest.raises(KVSpillError):
+        pt.fork_request(2, 1)
+    assert 2 not in pt._pages and pt.shard_tokens(1) == {0: PAGE + 4}
+    pt.free_request(1)
+    _audit_ok(pt)
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle: drain vs fail, aliasing guard
+# --------------------------------------------------------------------------- #
+def test_drop_instance_forgets_without_release():
+    pt = _pt(2)
+    trie = PrefixTrie(PAGE)
+    keys = page_keys(list(range(PAGE)), PAGE)
+    pt.allocate(1, {0: PAGE})
+    trie.insert(pt, 1, keys, PAGE)
+    pt.free_request(1)
+    pt.drop_instance(0)                        # ledger purged with the frames
+    assert trie.drop_instance(0) == 1          # forget, do NOT release
+    assert not trie.nodes
+    pt.join_instance(0)                        # aliasing guard stays quiet
+    _audit_ok(pt)
+
+
+def test_fresh_pool_guard_catches_stale_cache_hold():
+    pt = _pt(2)
+    trie = PrefixTrie(PAGE)
+    keys = page_keys(list(range(PAGE)), PAGE)
+    pt.allocate(1, {0: PAGE})
+    trie.insert(pt, 1, keys, PAGE)
+    pt.free_request(1)
+    # a drain that forgets to release the trie's holds must be caught, not
+    # silently alias the held frame into the fresh pool
+    with pytest.raises(RuntimeError, match="alias"):
+        pt._fresh_pool(0)
+    assert trie.release_instance(pt, 0) == 1
+    pt._fresh_pool(0)
+    _audit_ok(pt)
+
+
+# --------------------------------------------------------------------------- #
+# planner inputs
+# --------------------------------------------------------------------------- #
+def test_waterfill_minimums_are_floors():
+    split = waterfill([0, 0, 0], 30, minimums=[20, 0, 0])
+    assert split[0] >= 20 and split.sum() == 30
+    # floors + caps: the floor is clamped to the cap, total preserved
+    split = waterfill([0, 0], 10, capacities=[4, 100], minimums=[8, 0])
+    assert split[0] <= 4 and split.sum() == 10
+    # degenerate exact-fit: floors exceed total, granted proportionally
+    split = waterfill([0, 0], 10, minimums=[8, 8])
+    assert split.sum() == 10 and (split <= 8).all()
+
+
+def test_aligned_pages_skips_partial_and_unaligned():
+    pt = _pt(2)
+    pt.allocate(1, {0: PAGE + 4, 1: PAGE})     # shard 1 starts mid-page
+    pages = pt.aligned_pages(1, 2 * PAGE + 4)
+    assert [(p, s) for p, s, _ in pages] == [(0, 0)]
+    pt.free_request(1)
+
+
+def test_position_coords_resolves_attached_layout():
+    pt = _pt(2)
+    trie = PrefixTrie(PAGE)
+    keys = page_keys(list(range(PAGE)), PAGE)
+    pt.allocate(1, {0: PAGE})
+    trie.insert(pt, 1, keys, PAGE)
+    hit = trie.lookup(keys)
+    pt.allocate(2, {1: 6}, prefix={0: (0, [hit[0][1][0]])})
+    coords = pt.position_coords(2, range(PAGE, PAGE + 6))
+    assert (coords[0] == 1).all()              # suffix lives on instance 1
+    head = pt.position_coords(2, range(PAGE))
+    assert (head[0] == 0).all()                # attached page on instance 0
+    pt.free_request(1)
+    pt.free_request(2)
+    trie.release_all(pt)
+    _audit_ok(pt)
+
+
+# --------------------------------------------------------------------------- #
+# workload knob + metrics
+# --------------------------------------------------------------------------- #
+def test_shared_prefix_groups_emit_group_chains():
+    wl = make_workload("sharegpt4o", rate=20.0, duration=5.0, seed=1,
+                       shared_prefix_groups=2, shared_prefix_frac=0.9,
+                       page_size=64)
+    keyed = [r for r in wl.requests if r.prefix_keys]
+    assert keyed, "expected some requests long enough to carry keys"
+    for r in keyed:
+        n = len(r.prefix_keys)
+        assert n == int(r.prompt_len * 0.9) // 64
+        assert r.prefix_keys in (group_keys(0, n), group_keys(1, n))
+    assert 0.0 < wl.prefix_share(64) <= 0.9
+    off = make_workload("sharegpt4o", rate=20.0, duration=5.0, seed=1)
+    assert all(r.prefix_keys == () for r in off.requests)
+    assert off.prefix_share() == 0.0
+
+
+def test_prefix_hit_rate_metric():
+    class R:
+        prompt_tokens = 200
+        prefix_hit_tokens = 50
+    assert metrics.prefix_hit_rate(R()) == 0.25
+    assert metrics.prefix_hit_rate(object()) == 0.0

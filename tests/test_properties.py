@@ -277,3 +277,79 @@ def test_head_layout_sharding_invariants(hkv, gmul, tp, per):
     assume(((hq + tp - 1) // tp * tp) % hkv == 0)   # hp | hkv alignment
     _check_tile_kv(hq, hkv, tp, per=per)
     _check_pad_q(hq, hkv, tp, per=per)
+
+
+# --------------------------------------------------------------------------- #
+# refcounted prefix cache: no interleaving leaks or double-frees
+# --------------------------------------------------------------------------- #
+@SET
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+def test_prefix_fork_free_evict_conserves_frames(ops, seed):
+    """Random admit(+cache attach)/insert/fork/append/free/evict
+    interleavings: the refcount ledger never leaks a frame and never
+    double-frees one.  ``frame_audit`` cross-checks ledger vs page maps
+    every step; free + held must always equal the pool size; a full
+    teardown returns every frame."""
+    from repro.core.page_table import GlobalPageTable, KVSpillError
+    from repro.core.prefix import PrefixTrie, page_keys
+
+    PAGE, FRAMES = 8, 24
+    rng = np.random.default_rng(seed)
+    pt = GlobalPageTable(1, frames_per_instance=FRAMES, page_size=PAGE)
+    trie = PrefixTrie(PAGE)
+    live, keys_of, nxt = [], {}, 0
+
+    def audit():
+        (free, held), = pt.frame_audit().values()
+        assert free + held == FRAMES, (free, held)
+
+    def cow_then_append(rid):
+        try:
+            if pt.append_needs_cow(rid, 0):
+                pt.exclusive_tails(rid)
+            pt.append_token(rid, 0)
+        except KVSpillError:
+            pass
+
+    for op in ops:
+        if op in (0, 1):                       # admit, attaching what's cached
+            plen = int(rng.integers(4, 3 * PAGE + 4))
+            group = int(rng.integers(2))
+            keys = page_keys([group * 1000 + i for i in range(plen)], PAGE)
+            hit = trie.lookup(keys)
+            P = len(hit) * PAGE
+            attach = ({0: (0, [reps[0] for _, reps in hit])} if hit else None)
+            try:
+                pt.allocate(nxt, {0: plen - P}, prefix=attach)
+            except MemoryError:
+                trie.evict(pt, 2, keep=keys)
+                continue
+            trie.insert(pt, nxt, keys, plen)
+            live.append(nxt)
+            keys_of[nxt] = keys
+            nxt += 1
+        elif op == 2 and live:                 # fork a live request
+            parent = int(rng.choice(live))
+            try:
+                pt.fork_request(nxt, parent)
+            except KVSpillError:
+                continue
+            live.append(nxt)
+            keys_of[nxt] = keys_of[parent]
+            nxt += 1
+        elif op == 3 and live:                 # free one
+            rid = live.pop(int(rng.integers(len(live))))
+            pt.free_request(rid)
+            keys_of.pop(rid)
+        elif op == 4:                          # evict under fake pressure
+            trie.evict(pt, int(rng.integers(1, 4)))
+        elif op == 5 and live:                 # decode append (CoW-guarded)
+            cow_then_append(int(rng.choice(live)))
+        audit()
+    for rid in live:
+        pt.free_request(rid)
+    trie.release_all(pt)
+    audit()
+    assert pt.pools[0].free_frames == FRAMES   # nothing leaked
+    assert not pt._owners                      # ledger fully drained
