@@ -46,13 +46,14 @@ DEFAULTS = {
     "slo_sweep": ("BENCH_slo_sweep.json", "BENCH_slo_sweep.smoke.json"),
     "prefix_cache": ("BENCH_prefix_cache.json",
                      "BENCH_prefix_cache.smoke.json"),
+    "disagg": ("BENCH_disagg_sweep.json", "BENCH_disagg_sweep.smoke.json"),
 }
 
 # metrics where BIGGER is better (sustainable rate, attainment, goodput):
 # the regression ratio inverts (baseline/current), so a DROP fails the gate
 # and an improvement never does.  Prefix match on "file:key".
 HIGHER_IS_BETTER_PREFIXES = ("slo_sweep:", "prefix_cache:hit_rate",
-                             "prefix_cache:saved")
+                             "prefix_cache:saved", "disagg:")
 
 # built-in per-metric EXTRA tolerance (prefix of "file:key" -> added ON
 # TOP of the global --tol, so a looser global gate — the nightly's
@@ -146,6 +147,21 @@ def prefix_metrics(rep: dict) -> dict:
     return out
 
 
+def disagg_metrics(rep: dict) -> dict:
+    """Gate the cell-ratio sweep's headline shape: per mode (colocated /
+    cellsN) the short-tier TTFT knee rate and the attainment at every
+    swept rate.  All higher-is-better — the sim is deterministic, so a
+    drop means the disaggregated handoff path lost serving capacity (a
+    knee that merely MOVES UP when the nightly full grid extends the
+    rate range never fails the subset comparison)."""
+    out = {}
+    for mode, row in rep.get("curves", {}).items():
+        out[f"{mode}.knee"] = float(row["knee_rate"])
+        for r in row.get("rows", []):
+            out[f"{mode}.att_r{r['rate']}"] = float(r["ttft_attainment"])
+    return out
+
+
 def compare(name: str, cur: dict, base: dict, tol: float,
             metric_tol: dict | None = None) -> list[str]:
     failures = []
@@ -185,6 +201,7 @@ def main() -> int:
                     default=DEFAULTS["slo_sweep"][0])
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     default=DEFAULTS["prefix_cache"][0])
+    ap.add_argument("--disagg", default=DEFAULTS["disagg"][0])
     ap.add_argument("--tol", type=float, default=float(
         os.environ.get("BENCH_REGRESSION_TOL", "0.25")))
     ap.add_argument("--metric-tol", action="append", default=[],
@@ -217,7 +234,8 @@ def main() -> int:
     for key, extract in (("decode", decode_metrics),
                          ("escalation", escalation_metrics),
                          ("slo_sweep", slo_metrics),
-                         ("prefix_cache", prefix_metrics)):
+                         ("prefix_cache", prefix_metrics),
+                         ("disagg", disagg_metrics)):
         cur_path = getattr(args, key)
         base_path = os.path.join(BASE_DIR, DEFAULTS[key][1])
         if not os.path.exists(base_path):

@@ -1,0 +1,196 @@
+"""Disaggregated prefill/decode cell-ratio sweep: the TTFT knee, priced.
+
+Sweeps offered request rate x prefill-cell count on the paper-scale
+simulator (deepseek-v3 analytic data plane, 32 instances, real control
+plane) over the >=5%-long mixed trace — the workload where monolithic
+prefill is the head-of-line hazard.  Both modes charge prefill CHUNKED
+(``charge_prefill=True``): colocated drains chunks round-robin on the
+global clock (prefill compute steals decode iterations), disaggregated
+streams them from dedicated cells with every handoff chunk priced as a
+KV re-shard over the cell->decode link class, overlapped with the next
+chunk's compute.
+
+Headline metric is the **short-request TTFT knee**: the highest offered
+rate at which >= ``TARGET`` of all *submitted* short requests (prompt <
+``SHORT_MAX``) get their first token within ``TTFT_SLO``.  Unfinished
+shorts count as violations — the denominator is what arrived, not what
+the scheduler deigned to finish — so colocated cannot flatter its curve
+by starving the queue.  Full-scan knee (attainment is not monotone in
+rate under admission/recovery dynamics), same convention as
+``slo_sweep.py``.
+
+Emits ``BENCH_disagg_sweep.json`` (or ``--out``).  ``--smoke`` shrinks
+the grid to the CI cells gated by ``check_regression.py``; the full
+sweep (more ratios + a long_ratio=0 control separating colocated
+prefill-serialization loss from long-tail pressure) runs nightly.
+Exits 1 unless
+the best disaggregated cell ratio's knee is STRICTLY above colocated on
+the long mix — the disaggregation claim is asserted, not eyeballed.
+
+  PYTHONPATH=src python benchmarks/disagg_sweep.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "benchmarks")
+from common import BUCKETS, CFG, N_INST, PER_NODE  # noqa: E402
+
+from repro.core.scheduler import DualBalancedScheduler  # noqa: E402
+from repro.serving.simulator import ClusterSimulator  # noqa: E402
+from repro.serving.workload import make_workload  # noqa: E402
+
+TTFT_SLO = 0.3          # s, first token deadline for the short tier
+TARGET = 0.9            # attainment the knee must clear
+SHORT_MAX = 10_000      # tokens; below this a request is "short tier"
+LONG_RATIO = 0.05       # the paper's >=5%-long mixed trace
+DURATION = 3.0          # s of offered arrivals per point
+HORIZON = 60.0          # s simulated; unfinished-by-horizon = violation
+KV_CAP = 1_000_000      # per-instance KV tokens (paper scale)
+
+# cell counts: 0 = colocated baseline; the disaggregated ratios carve
+# prefill cells out of the SAME 32 instances, so the decode side shrinks
+# — the win has to pay for its own capacity loss
+CELLS_FULL = (0, 4, 8)
+CELLS_SMOKE = (0, 8)
+RATES_FULL = (5, 10, 20, 40, 60, 120)
+RATES_SMOKE = (10, 20, 40)
+CONTROL_RATES = (10, 40)    # long_ratio=0 control points (full mode only)
+
+
+def run_point(cells: int, rate: float, long_ratio: float) -> dict:
+    """One (cell-count, rate) point: short-tier TTFT attainment over
+    SUBMITTED shorts (missing first token == inf TTFT == violation)."""
+    sched = DualBalancedScheduler(buckets=BUCKETS)
+    sim = ClusterSimulator(CFG, sched, num_instances=N_INST,
+                           instances_per_node=PER_NODE,
+                           kv_capacity_tokens=KV_CAP, multi_step=4,
+                           charge_prefill=True, prefill_cells=cells)
+    wl = make_workload("mixed", rate=rate, duration=DURATION,
+                       long_ratio=long_ratio, seed=0)
+    res = sim.run(wl, horizon=HORIZON)
+    fin = {r.rid: r for r in res.finished if r.status == "finished"}
+    shorts = [r for r in wl.requests if r.prompt_len < SHORT_MAX]
+    tt = []
+    for q in shorts:
+        r = fin.get(q.rid)
+        tt.append(r.token_times[0] - q.arrival
+                  if r is not None and r.token_times else float("inf"))
+    tt.sort()
+    n = len(tt)
+    served = sum(1 for t in tt if t != float("inf"))
+    return {
+        "rate": rate,
+        "n_short": n,
+        "short_served": served,
+        "ttft_attainment": sum(1 for t in tt if t <= TTFT_SLO) / n,
+        "ttft_p50": tt[n // 2],
+        "ttft_p99": tt[min(n - 1, int(n * 0.99))],
+        "finished": len(fin),
+        "submitted": len(wl.requests),
+    }
+
+
+def knee(rows: list[dict]) -> float:
+    """Highest swept rate with attainment >= TARGET (full scan)."""
+    ok = [r["rate"] for r in rows if r["ttft_attainment"] >= TARGET]
+    return max(ok) if ok else 0.0
+
+
+def sweep(smoke: bool) -> dict:
+    cells_grid = CELLS_SMOKE if smoke else CELLS_FULL
+    rates = RATES_SMOKE if smoke else RATES_FULL
+    out = {}
+    for cells in cells_grid:
+        mode = "colocated" if cells == 0 else f"cells{cells}"
+        rows = []
+        t0 = time.time()
+        for rate in rates:
+            rows.append(run_point(cells, rate, LONG_RATIO))
+        k = knee(rows)
+        out[mode] = {"prefill_cells": cells, "knee_rate": k, "rows": rows}
+        att = {r["rate"]: round(r["ttft_attainment"], 3) for r in rows}
+        print(f"sim  long={LONG_RATIO:.0%} {mode:10s} knee={k:>6} "
+              f"att={att} ({time.time() - t0:.0f}s)", flush=True)
+    return out
+
+
+def sweep_control(cells_grid: tuple) -> dict:
+    """long_ratio=0 control: separates the two effects.  Colocated
+    serializes ALL prefill chunks on the global clock, so it collapses
+    even with no longs at all (pure serialization loss); the long tail
+    then shows up as the extra attainment drop the *intermediate* cell
+    ratio takes when longs enter the mix (cells4 at the knee rate: ~0.95
+    attainment at 0% long vs ~0.58 at 5%)."""
+    out = {}
+    for cells in cells_grid:
+        mode = "colocated" if cells == 0 else f"cells{cells}"
+        rows = [run_point(cells, rate, 0.0) for rate in CONTROL_RATES]
+        out[mode] = {"prefill_cells": cells, "rows": rows}
+        att = {r["rate"]: round(r["ttft_attainment"], 3) for r in rows}
+        print(f"sim  long=0%  {mode:10s} (control) att={att}", flush=True)
+    return out
+
+
+def check_headline(curves: dict) -> list[str]:
+    """Disaggregation must strictly improve the TTFT knee over colocated
+    on the long mix, and the colocated knee must be bracketed by the
+    grid (a 0-vs-0 'win' would be vacuous)."""
+    failures = []
+    colo = curves["colocated"]["knee_rate"]
+    disagg = {m: row["knee_rate"] for m, row in curves.items()
+              if m != "colocated"}
+    if colo <= 0:
+        failures.append(
+            f"colocated knee not bracketed by the rate grid (knee={colo}); "
+            "add a lower rate so the comparison is meaningful")
+    best_mode, best = max(disagg.items(), key=lambda kv: kv[1])
+    if not best > colo:
+        failures.append(
+            f"disaggregated TTFT knee is not strictly above colocated on "
+            f"the {LONG_RATIO:.0%}-long mix: best {best_mode}={best} vs "
+            f"colocated={colo}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI grid (gated by check_regression.py)")
+    ap.add_argument("--out", default="BENCH_disagg_sweep.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    curves = sweep(args.smoke)
+    rep = {
+        "smoke": bool(args.smoke),
+        "ttft_slo": TTFT_SLO,
+        "target": TARGET,
+        "long_ratio": LONG_RATIO,
+        "num_instances": N_INST,
+        "curves": curves,
+    }
+    if not args.smoke:
+        rep["control_long0"] = sweep_control(CELLS_FULL)
+    rep["elapsed_s"] = round(time.time() - t0, 1)
+
+    with open(args.out, "w") as f:
+        json.dump(rep, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({rep['elapsed_s']}s)")
+
+    failures = check_headline(curves)
+    for msg in failures:
+        print(f"HEADLINE FAIL: {msg}", flush=True)
+    if failures:
+        return 1
+    knees = {m: row["knee_rate"] for m, row in curves.items()}
+    print(f"headline OK: disaggregated TTFT knee strictly beats colocated "
+          f"on the {LONG_RATIO:.0%}-long mix ({knees})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

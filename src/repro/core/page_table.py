@@ -218,7 +218,14 @@ class GlobalPageTable:
         ranges must tile [0, P) exactly.  ``split`` then counts only the
         NOVEL suffix tokens, which land in fresh frames after the attached
         pages (attached pages are full, so the suffix starts page-aligned)
-        in sorted-instance order starting at absolute position P."""
+        in sorted-instance order starting at absolute position P.
+
+        Invariant: every live token has exactly one resolvable (instance,
+        frame, offset) home, and frames are conserved — allocate/free pairs
+        balance per pool.  Pinned by the page-table tests in
+        tests/test_control_plane.py, the attach semantics in
+        tests/test_prefix.py, and the frame-conservation audits in
+        tests/test_properties.py."""
         assert rid not in self._pages, f"request {rid} already allocated"
         if not self.can_allocate(split):
             raise MemoryError(f"request {rid}: split {split} does not fit")
@@ -366,6 +373,11 @@ class GlobalPageTable:
         destination shard cannot allocate the frames it needs — callers plan
         moves against per-shard headroom (``free_frames``) so this only fires
         on a planner bug.
+
+        Pinned by tests/test_escalation.py (escalate/relax re-shards),
+        tests/test_handoff.py (chunked prefill scatters straight to decode
+        destinations through these coordinates), and the ``escalation`` /
+        ``disagg`` conformance shards (token equality across the move).
         """
         srcs = {s for s, _, n in moves if n > 0}
         dsts = {d for _, d, n in moves if n > 0}
@@ -464,7 +476,12 @@ class GlobalPageTable:
         Returns ``(src_coords, dst_coords)`` int32 [3, T] for the data-plane
         copy — same gather->scatter contract as ``move_pages`` (the gather
         reads the shared frame, which nothing scatters into).  Raises
-        ``KVSpillError`` when the instance has no free frame."""
+        ``KVSpillError`` when the instance has no free frame.
+
+        Invariant: a shared frame is never appended into — writers split
+        first, so other owners' tokens are bit-identical before and after.
+        Pinned by tests/test_prefix.py, the CoW/refcount audits in
+        tests/test_properties.py, and the ``prefix`` conformance shard."""
         assert self.frame_shared(rid, instance, frame), (
             rid, instance, frame, "cow_split of an exclusive frame")
         frames = self._frames_by_shard[rid][instance]

@@ -321,8 +321,109 @@ class BaseScheduler:
         (src, dst) coordinate pairs for ``IterationPlan.copies``)."""
         return []
 
+    # -- disaggregated prefill staging --------------------------------------
+    def _resolve_stage_hit(self, cluster: ClusterState, req: Request):
+        """Resolve the request's prefix-cache hit for prefill staging
+        (``PrefixHit`` or None).  Base policies are cache-oblivious."""
+        return None
+
+    def _try_stage_prefill(self, cluster: ClusterState, req: Request,
+                           now: float) -> str:
+        """Stage one request into a dedicated prefill cell (disaggregated
+        serving — only called when ``cluster.prefill_cells > 0``).
+
+        The NOVEL prompt suffix is allocated on the least-loaded prefill
+        instance; cached prefix pages attach on their decode-instance
+        owners exactly as in colocated admission, so a prefix hit
+        short-circuits those chunks before they are ever planned.  The
+        request parks in ``cluster.prefilling`` — invisible to decode
+        planning — until the streamed handoff (core/handoff.py) completes
+        and ``admit_handoff`` activates it.
+
+        Returns ``"staged"`` (parked), ``"decode"`` (fully-cached prompt:
+        prefill short-circuits entirely, the caller falls through to normal
+        decode admission), or ``"defer"`` (no prefill cell can hold the
+        novel suffix right now)."""
+        hit = self._resolve_stage_hit(cluster, req)
+        novel = req.prompt_len - (hit.tokens if hit else 0)
+        if hit is not None and novel <= 0:
+            return "decode"
+        cells = [p for p in cluster.prefill_instances()
+                 if cluster.kv_headroom(p) >= novel]
+        if not cells:
+            return "defer"
+        p = max(cells, key=lambda s: (cluster.kv_headroom(s), -s))
+        split = {p: novel}
+        if not cluster.page_table.can_allocate(split):
+            return "defer"
+        cluster.page_table.allocate(req.rid, split,
+                                    prefix=hit.attach if hit else None)
+        if hit is not None:
+            self.prefix_cache.touch(hit.keys, hit.chosen)
+            req.prefix_hit_tokens = hit.tokens
+        req.status = "prefilling"
+        req.start_time = now
+        req.kv_binding = (sorted(set(hit.attach) | {p}) if hit
+                          else [int(p)])
+        cluster.prefilling[req.rid] = req
+        return "staged"
+
+    def handoff_candidates(self, cluster: ClusterState, task,
+                           tokens: int) -> list[int]:
+        """Ordered decode destinations able to absorb a ``tokens``-sized
+        streamed chunk: members of the node already holding the most of
+        this request's landed KV first (handoff traffic stays on the fast
+        link class whenever it can), then the rest, least-loaded first."""
+        page = cluster.page_table.page_size
+        need = tokens + page            # one page of slack for the tail
+        bound = task.binding()
+        home = cluster.node_of(bound[0]) if bound else -1
+        return sorted(
+            (s for s in cluster.decode_instances()
+             if cluster.kv_headroom(s) >= need),
+            key=lambda s: (0 if cluster.node_of(s) == home else 1,
+                           cluster.kv_load(s), s))
+
+    def admit_handoff(self, cluster: ClusterState, req: Request,
+                      binding: list, now: float) -> None:
+        """Activate a request whose streamed handoff completed.
+
+        The KV is ALREADY placed — ``binding`` is the MEASURED realized
+        binding the handoff produced (attach owners + lazily opened
+        destinations), not a prediction — so admission here only binds MoE
+        to the least-batch member, pins the decode slot, and moves the
+        request from ``prefilling`` to ``active``.  Pinned by
+        tests/test_handoff.py (degree selection) and the ``disagg``
+        conformance cells (token equality through the full path)."""
+        holders = {s for s, t in
+                   cluster.page_table.shard_tokens(req.rid).items() if t > 0}
+        members = sorted(set(binding) | holders)
+        B = np.bincount([r.moe_binding for r in cluster.active.values()],
+                        minlength=cluster.num_instances)
+        m = min(members, key=lambda s: (B[s], s))
+        req.moe_binding, req.kv_binding = int(m), members
+        req.node = cluster.node_of(int(m))
+        req.status = "running"
+        cluster.prefilling.pop(req.rid, None)
+        cluster.active[req.rid] = req
+        cluster.assign_slot(req.rid, int(m))
+
     # -- main entry ---------------------------------------------------------
     def schedule(self, cluster: ClusterState, now: float = 0.0) -> IterationPlan:
+        """One control-plane pass: the single entry every driver (engine,
+        simulator, launch planner) calls per iteration.
+
+        Order is the contract (each stage sees the previous stage's state):
+        rebalance -> escalate -> relax -> shed expired -> admission loop
+        (prefill staging under disaggregation, placement otherwise,
+        preemption-by-relaxation on a tier-0 bounce) -> queue-cap rejection
+        -> hot-prefix replication -> plan fill.  Invariant: every request
+        popped from the waiting queue lands in EXACTLY one typed outcome
+        (admitted / staged / still-waiting / shed / rejected) — there is no
+        silent drop (pinned by tests/test_admission.py and the slo
+        conformance shard); escalation/relaxation records carry their page-table
+        bookkeeping already applied, the physical re-shard still owed
+        (pinned by tests/test_escalation.py and the escalation shard)."""
         self.rebalance(cluster)
         plan = _mk_plan(cluster)
         # escalations run BEFORE admission so new placements see the
@@ -339,7 +440,7 @@ class BaseScheduler:
         # never bounced
         if self.admission is not None:
             plan.shed = self.admission.shed_expired(cluster, now)
-        admitted, still_waiting = [], []
+        admitted, staged, still_waiting = [], [], []
         # preemption-by-relaxation budget: at most one forced relax pass per
         # schedule() step — each pass batches its frame moves into the same
         # gather->scatter, so unbounded retries inside one step would stack
@@ -351,6 +452,20 @@ class BaseScheduler:
             minlength=cluster.num_instances)
         while cluster.waiting:
             req = cluster.waiting.popleft()
+            if cluster.prefill_cells:
+                # disaggregated: novel prompt tokens go to a prefill cell;
+                # only a FULLY-cached prompt (novel == 0) falls through to
+                # direct decode admission — nothing to prefill, so the
+                # handoff short-circuits entirely (PR 8 riding PR 9)
+                verdict = self._try_stage_prefill(cluster, req, now)
+                if verdict == "staged":
+                    staged.append(req)
+                    continue
+                if verdict == "defer":
+                    still_waiting.append(req)
+                    if self.hol_blocking:
+                        break
+                    continue
             ok = self._try_place(cluster, req, batch_counts, now)
             if not ok and preempt_left > 0 and self.admission.tier(req) == 0:
                 # preemption-by-relaxation (relax-before-reject): before a
@@ -392,6 +507,7 @@ class BaseScheduler:
             plan.copies.extend(self.replicate_hot(cluster))
         plan = _fill_plan(cluster, plan)
         plan.admitted = admitted
+        plan.staged = staged
         plan.deferred = len(still_waiting)
         cluster.moe_batch = plan.batch_sizes()
         return plan
@@ -512,7 +628,9 @@ class DualBalancedScheduler(BaseScheduler):
         the least-loaded node members and WaterFills the request's resident
         tokens across the new binding; page-table bookkeeping happens here,
         the physical move is the returned records' coordinate tensors.
-        """
+        Pinned by tests/test_escalation.py and the ``escalation``
+        conformance shard (token equality through a forced mid-decode
+        re-shard)."""
         if not (self.has_kv and self.allow_escalation):
             return []
         out = []
@@ -548,7 +666,9 @@ class DualBalancedScheduler(BaseScheduler):
         batches the whole pass into ONE gather->scatter.
         Page-table bookkeeping happens here; the physical move is the
         returned records' coordinate tensors, same as escalation.
-        """
+        Pinned by tests/test_escalation.py, the escalate<->relax round
+        trip in tests/test_properties.py, and the ``relaxation``
+        conformance shard."""
         if not (self.has_kv and self.allow_escalation
                 and self.allow_relaxation):
             return []
@@ -1111,22 +1231,18 @@ class DualBalancedScheduler(BaseScheduler):
             return np.asarray(split_arr, np.int64)
         return arr
 
-    def _place_prefix(self, cluster: ClusterState, req: Request, B):
-        """Prefix-aware admission: resolve the longest cached prefix within
-        ONE rotation-window segment (a binding never leaves its segment, so
-        replicas elsewhere are unusable), ATTACH the request to the replica
-        frames, and WaterFill only the novel suffix around the hit.  The
-        home node is the node already holding the most attached KV — decode
-        appends and the suffix stay next to the hit.  None -> no usable hit
-        (the caller falls through to the normal placement)."""
+    def _resolve_hit(self, cluster: ClusterState, req: Request,
+                     pool: list[int]):
+        """Longest usable cached prefix within ONE rotation-window segment
+        of ``pool`` (a binding never leaves its segment, so replicas
+        elsewhere are unusable), replica-resolved to concrete attach runs.
+        Returns a ``PrefixHit`` or None."""
         trie = self.prefix_cache
-        pt = cluster.page_table
-        page = pt.page_size
+        page = cluster.page_table.page_size
         win = cluster.window
-        alive = cluster.alive_instances()
         best = None
-        for seg in sorted({i // win for i in alive}):
-            allowed = {i for i in alive if i // win == seg}
+        for seg in sorted({i // win for i in pool}):
+            allowed = {i for i in pool if i // win == seg}
             hit = trie.lookup(req.prefix_keys, allowed=allowed)
             if hit and (best is None or len(hit) > len(best)):
                 best = hit
@@ -1151,9 +1267,35 @@ class DualBalancedScheduler(BaseScheduler):
             runs.setdefault(inst, []).append((p, reps[inst]))
         if not chosen:
             return None
-        P = len(chosen) * page
         attach = {inst: (pages_[0][0] * page, [f for _, f in pages_])
                   for inst, pages_ in runs.items()}
+        return PrefixHit(req.prefix_keys, attach, chosen,
+                         len(chosen) * page)
+
+    def _resolve_stage_hit(self, cluster: ClusterState, req: Request):
+        """Prefix hit for PREFILL STAGING: replicas must live on DECODE
+        instances (staged pages on prefill cells are transient and never
+        enter the trie), so the attach pool excludes prefill cells."""
+        if not (self.has_kv and self.prefix_cache is not None
+                and req.prefix_keys):
+            return None
+        return self._resolve_hit(cluster, req, cluster.decode_instances())
+
+    def _place_prefix(self, cluster: ClusterState, req: Request, B):
+        """Prefix-aware admission: resolve the longest cached prefix within
+        ONE rotation-window segment (a binding never leaves its segment, so
+        replicas elsewhere are unusable), ATTACH the request to the replica
+        frames, and WaterFill only the novel suffix around the hit.  The
+        home node is the node already holding the most attached KV — decode
+        appends and the suffix stay next to the hit.  None -> no usable hit
+        (the caller falls through to the normal placement)."""
+        pt = cluster.page_table
+        page = pt.page_size
+        hit_rec = self._resolve_hit(cluster, req,
+                                    cluster.alive_instances())
+        if hit_rec is None:
+            return None
+        attach, P = hit_rec.attach, hit_rec.tokens
         node_tokens = {}
         for inst, (_, fr) in attach.items():
             n = cluster.node_of(inst)
@@ -1167,7 +1309,6 @@ class DualBalancedScheduler(BaseScheduler):
         m_cands = [s for s in members
                    if cluster.kv_headroom(s) >= self.kv_reserve] or members
         m = min(m_cands, key=lambda s: (B[s], s))
-        hit_rec = PrefixHit(req.prefix_keys, attach, chosen, P)
         suffix = req.length - P
         if suffix <= 0:
             # fully cached prompt: nothing to prefill, appends go to m
@@ -1251,6 +1392,20 @@ class DualBalancedScheduler(BaseScheduler):
 
     # Alg. 1, lines 6-18 (+ hierarchical two-level fill for W < I)
     def place(self, cluster: ClusterState, req: Request, B=None):
+        """Admission placement: ``(moe_binding, kv_binding, split)`` or
+        None when nothing fits (caller keeps the request queued).
+
+        Invariants: the MoE binding is always a kv_binding member and
+        reserves ``kv_reserve`` append room SPECIFICALLY (not in
+        aggregate), the CP degree comes from the ``CPBuckets`` length
+        profile, and the fill is hierarchical — home node first, remote
+        members recruited only when the whole home node cannot hold the
+        request, priced with ``inter_node_penalty`` so short requests
+        stay 100% node-local.  A prefix-cache hit re-homes placement
+        onto the replica holders instead (``_place_prefix``).  Pinned by
+        tests/test_control_plane.py::test_dual_balanced_invariants,
+        tests/test_multinode.py (node-locality + penalty), and the
+        ``dense``/``multinode-fault`` conformance shards."""
         if B is None:
             B = np.bincount([r.moe_binding for r in cluster.active.values()],
                             minlength=cluster.num_instances)

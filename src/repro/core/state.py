@@ -100,11 +100,25 @@ class ClusterState:
     # whose collectives cannot cross a pod confine the ring to the pod;
     # bindings never leave their window segment.
     routing_window: int = 0
+    # --- disaggregated prefill/decode cells ---
+    # number of instances dedicated to chunked prefill, taken from the TAIL
+    # of the instance range (decode keeps its node-0 alignment).  0 =
+    # colocated: every instance is mixed-role, the pre-disaggregation
+    # behavior.  Decode candidate sets (``node_instances`` /
+    # ``remote_instances``) exclude prefill-role instances, so a decode KV
+    # binding can never land on a prefill cell; staged pages reach decode
+    # only through the streamed handoff (core/handoff.py).
+    prefill_cells: int = 0
 
     page_table: GlobalPageTable = None
     active: dict = field(default_factory=dict)       # rid -> Request
     waiting: deque = field(default_factory=deque)    # FIFO of Request
     finished: list = field(default_factory=list)
+    # rid -> Request staged in a prefill cell: admitted, pages allocated,
+    # but held OUT of ``active`` until the streamed handoff completes so
+    # decode planning (lowering, escalation, relaxation) never sees a
+    # half-prefilled request
+    prefilling: dict = field(default_factory=dict)
     dead_instances: set = field(default_factory=set)
     moe_batch: np.ndarray = None                     # B_s, per current iteration
     # stable decode-slot pinning: rid -> (instance, slot).  Slots persist for
@@ -116,6 +130,13 @@ class ClusterState:
         if self.routing_window:
             assert self.num_instances % self.routing_window == 0
             assert self.routing_window % self.instances_per_node == 0
+        assert 0 <= self.prefill_cells < self.num_instances, \
+            "prefill_cells must leave at least one decode instance"
+        # the role partition is FIXED at construction (elastic growth via
+        # ``join_instance`` appends decode-role instances; it never re-roles
+        # an existing prefill cell mid-run)
+        self._prefill_set = set(range(self.num_instances - self.prefill_cells,
+                                      self.num_instances))
         self.page_table = GlobalPageTable(
             self.num_instances,
             frames_per_instance=self.kv_capacity_tokens // self.page_size,
@@ -146,24 +167,46 @@ class ClusterState:
         """Link class a round/transfer between two instances traverses."""
         return "intra" if self.same_node(a, b) else "inter"
 
+    def role_of(self, instance: int) -> str:
+        """Cell role of an instance: ``"prefill"`` (dedicated chunked-prefill
+        cell, tail of the instance range) or ``"decode"`` (mixed-role when
+        ``prefill_cells == 0`` — it then also runs in-place prefill)."""
+        return "prefill" if instance in self._prefill_set else "decode"
+
+    def prefill_instances(self) -> list[int]:
+        """Alive dedicated prefill cells (empty when colocated)."""
+        return [i for i in sorted(self._prefill_set)
+                if i not in self.dead_instances]
+
+    def decode_instances(self) -> list[int]:
+        """Alive decode-role instances — the only legal KV-binding members."""
+        return [i for i in range(self.num_instances)
+                if i not in self.dead_instances
+                and i not in self._prefill_set]
+
     def node_instances(self, node: int) -> list[int]:
+        """Alive DECODE-role instances of ``node`` (prefill cells are never
+        decode placement candidates)."""
         w = self.instances_per_node
         return [i for i in range(node * w, min((node + 1) * w,
                                                self.num_instances))
-                if i not in self.dead_instances]
+                if i not in self.dead_instances
+                and i not in self._prefill_set]
 
     def alive_instances(self) -> list[int]:
         return [i for i in range(self.num_instances)
                 if i not in self.dead_instances]
 
     def remote_instances(self, node: int) -> list[int]:
-        """Alive instances OUTSIDE ``node`` but within its rotation-window
-        segment (candidates for cross-node spill — recruited only when the
-        home node is full; a binding never leaves its window)."""
+        """Alive DECODE instances OUTSIDE ``node`` but within its
+        rotation-window segment (candidates for cross-node spill — recruited
+        only when the home node is full; a binding never leaves its
+        window)."""
         win = self.window
         seg = (node * self.instances_per_node) // win
         return [i for i in self.alive_instances()
-                if self.node_of(i) != node and i // win == seg]
+                if self.node_of(i) != node and i // win == seg
+                and i not in self._prefill_set]
 
     def binding_nodes(self, binding) -> set[int]:
         return {self.node_of(s) for s in binding}
@@ -220,14 +263,25 @@ class ClusterState:
         (surviving shards untouched), prune it from every binding, and
         re-home orphaned decode slots onto a surviving binding member.
 
-        Returns a ``FailureRecord`` per affected ACTIVE request.  Requests
-        stay active — nothing is silently re-enqueued; the caller (engine /
-        simulator) chooses the typed recovery path per record: partial-shard
-        re-prefill of the lost ranges into a replacement placement, or a
-        degraded finish when the cluster lacks headroom."""
+        Returns a ``FailureRecord`` per affected ACTIVE or PREFILLING
+        request.  Requests stay active — nothing is silently re-enqueued;
+        the caller (engine / simulator) chooses the typed recovery path per
+        record: partial-shard re-prefill of the lost ranges into a
+        replacement placement, or a degraded finish when the cluster lacks
+        headroom.  A PREFILLING request whose prefill cell died keeps its
+        already-streamed pages (they live on decode instances) and owes only
+        the unstreamed tail — the same partial re-prefill machinery applies
+        (pinned by tests/integration/engine_disagg.py crash cell)."""
         self.dead_instances.add(instance)
         lost = self.page_table.drop_instance(instance)
         records = []
+        for rid, req in self.prefilling.items():
+            ranges = lost.get(rid, [])
+            if not ranges and instance not in req.kv_binding:
+                continue
+            if instance in req.kv_binding:
+                req.kv_binding = [s for s in req.kv_binding if s != instance]
+            records.append(FailureRecord(req, ranges, False))
         for rid, req in self.active.items():
             slot_lost = (self.slot_map.get(rid, (-1, -1))[0] == instance
                          or req.moe_binding == instance)
@@ -247,9 +301,10 @@ class ClusterState:
                     self.move_slot(rid, m)
                 else:
                     # nothing of the binding survived: full KV loss.  Pick a
-                    # fresh home so recovery has a valid MoE binding to plan
-                    # around (-1 only when the whole cluster is dead).
-                    cands = self.alive_instances()
+                    # fresh DECODE-role home so recovery has a valid MoE
+                    # binding to plan around (-1 only when every decode
+                    # instance is dead).
+                    cands = self.decode_instances()
                     if cands:
                         m = min(cands, key=self.kv_load)
                         req.moe_binding = m
@@ -325,6 +380,11 @@ class IterationPlan:
     # preemption-by-relaxation events: a short request's failed placement
     # triggered a forced relax pass that freed the headroom to admit it
     preemptions: int = 0
+    # requests STAGED into a prefill cell this pass (disaggregated serving:
+    # novel prompt tokens allocated on a prefill instance, request parked in
+    # ``cluster.prefilling``).  The caller owes the chunked forwards and the
+    # streamed handoff (core/handoff.py) before these ever decode.
+    staged: list = field(default_factory=list)
     # data-plane KV copies decided this pass OUTSIDE the escalation records:
     # (src, dst) int32 [3, T] coordinate pairs (KVReshard contract) from
     # copy-on-write splits and hot-prefix replication.  Like escalations,

@@ -131,6 +131,75 @@ def build_prefill_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
     return Cell(cfg.name, shape.name, "prefill", fn, (params_sds, batch_sds), {})
 
 
+def build_chunked_prefill_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+                               multi_pod: bool = False,
+                               chunk_tokens: int = 64 * PAGE) -> Cell:
+    """Dedicated prefill-CELL step for disaggregated serving (PR 9).
+
+    A prompt assigned to a prefill cell runs as a sequence of page-aligned
+    chunks instead of one monolithic forward: each chunk step forwards the
+    causal prefix ``[0, end)`` and emits ONLY the tail chunk's KV, stacked
+    over layers (``chunk_k``/``chunk_v``: ``[n_attn_layers, B, C, H, hd]``)
+    — exactly the layer-batched slab the engine's handoff scatters to its
+    decode destination (``NanoCPEngine._process_prefill_chunks``), plus the
+    last-position logits (the first generated token comes from the
+    full-prompt chunk).  Output bytes — and therefore the streamed handoff
+    transfer the simulator prices per link class — are bounded by
+    ``chunk_tokens`` regardless of prompt length, so a 1M-token prompt
+    never holds the cell (or a single XLA program) for the whole prompt.
+
+    The jitted ``fn`` is the WORST-CASE chunk (full-prefix forward, final
+    chunk emitted); ``meta["chunk_ends"]`` carries the whole ladder of
+    prefix lengths the launcher compiles — earlier chunks lower strictly
+    smaller programs.  Dry-run safe: ShapeDtypeStructs only, no device
+    allocation.  Attention decoder-only archs (chunked KV streaming
+    targets the paged k/v pools; per-slot SSM/enc-dec state cannot
+    stream)."""
+    assert cfg.has_attention and not cfg.is_encoder_decoder \
+        and cfg.family not in ("ssm", "hybrid"), \
+        f"{cfg.name}: chunked prefill cells need a decoder-only attention arch"
+    assert chunk_tokens > 0 and chunk_tokens % PAGE == 0, chunk_tokens
+    dp_axes = _dp_axes(multi_pod)
+    params_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = sharding.train_param_specs(cfg, params_sds)
+    shard_fn = sharding.make_shard_fn(mesh, dp_axes)
+    B, S = shape.global_batch, shape.seq_len
+    C = min(chunk_tokens, S)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    pattern = cfg.block_pattern()
+
+    def chunk_step(params, batch):
+        logits, caches = transformer.forward(cfg, params, batch["tokens"],
+                                             collect_kv=True, shard=shard_fn)
+        ks, vs = [], []
+        for li, kind in enumerate(pattern):
+            if kind["mixer"] != "attn":
+                continue
+            a, b = caches[li]["kv"]
+            if cfg.is_mla:
+                ks.append(jnp.concatenate([a, b], axis=-1))
+            else:
+                ks.append(a)
+                vs.append(b)
+        # [na, nb, B, T, H, hd] -> tail chunk only (T axis): the slab the
+        # handoff streams; everything earlier was emitted by prior chunks
+        out = {"last_logits": logits[:, -1],
+               "chunk_k": jnp.stack(ks)[:, :, :, -C:]}
+        if vs:
+            out["chunk_v"] = jnp.stack(vs)[:, :, :, -C:]
+        return out
+
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    bspecs = {"tokens": P(dp, None)}
+    fn = jax.jit(chunk_step, in_shardings=(sharding.to_named(mesh, pspecs),
+                                           sharding.to_named(mesh, bspecs)))
+    ends = tuple(min(S, e) for e in range(C, S + C, C))
+    return Cell(cfg.name, shape.name, "chunked_prefill", fn,
+                (params_sds, batch_sds),
+                {"chunk_tokens": C, "num_chunks": len(ends),
+                 "chunk_ends": ends})
+
+
 # --------------------------------------------------------------------------- #
 # decode cells (NanoCP DCP serve step, tables from the real control plane)
 # --------------------------------------------------------------------------- #
@@ -255,6 +324,10 @@ def build_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool = False,
             cfg = dataclasses.replace(cfg, ssm_chunk=64)
         return build_train_cell(cfg, shape, mesh, multi_pod=multi_pod, **kw)
     if shape.kind == "prefill":
+        if kw.get("chunked"):
+            return build_chunked_prefill_cell(
+                cfg, shape, mesh, multi_pod=multi_pod,
+                **{k: v for k, v in kw.items() if k == "chunk_tokens"})
         return build_prefill_cell(cfg, shape, mesh, multi_pod=multi_pod)
     return build_decode_cell(cfg, shape, mesh, multi_pod=multi_pod,
                              **{k: v for k, v in kw.items()

@@ -45,6 +45,7 @@ appends).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -57,6 +58,7 @@ from ..core import dcp, migrate, routing
 from ..core.aot import AOTGraphEngine
 from ..core.comm import node_local_rounds, ring_round
 from ..core.bucketing import CPBuckets, DEFAULT_BUCKETS, ShapeBuckets
+from ..core.handoff import HandoffTask
 from ..core.page_table import KVSpillError
 from ..core.prefix import PrefixTrie, page_keys
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
@@ -121,7 +123,9 @@ class NanoCPEngine:
                  pipeline: bool = True,
                  audit_donation_every_step: bool = False,
                  admission=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 prefill_cells: int = 0,
+                 chunk_tokens: int | None = None):
         self.cfg = cfg
         self.mesh = mesh
         self.tp = tp or mesh.shape["model"]
@@ -136,7 +140,8 @@ class NanoCPEngine:
         self.cluster = ClusterState(num_instances=num_instances,
                                     instances_per_node=instances_per_node,
                                     kv_capacity_tokens=kv_capacity_tokens,
-                                    page_size=page_size, kv_stripes=ps)
+                                    page_size=page_size, kv_stripes=ps,
+                                    prefill_cells=prefill_cells)
         # cross pools are read-only during decode (whisper): no KV appends —
         # and therefore no decode-time KV growth to escalate for
         self._append_tokens = cfg.has_attention and not self.is_encdec
@@ -174,6 +179,28 @@ class NanoCPEngine:
                 "prefix_cache needs a decoder-only attention arch"
         self.prefix_trie = PrefixTrie(page_size) if prefix_cache else None
         self.scheduler.prefix_cache = self.prefix_trie
+        # disaggregated prefill/decode cells (PR 9): the tail `prefill_cells`
+        # instances never decode — long prompts prefill there in fixed-size
+        # chunks whose KV streams into the decode cluster as each chunk
+        # finishes (core.handoff drives the bookkeeping; the physical write
+        # is the same donated PrefillScatter the admission path uses)
+        if prefill_cells:
+            assert self._append_tokens and not pinned_slots, \
+                "disaggregated prefill cells need a decoder-only attention " \
+                "arch (chunked KV streaming targets the paged k/v pools)"
+        self.chunk_tokens = chunk_tokens or 4 * page_size
+        assert self.chunk_tokens > 0 and self.chunk_tokens % page_size == 0, \
+            f"chunk_tokens must be a positive page multiple " \
+            f"(got {self.chunk_tokens}, page={page_size})"
+        # rid -> HandoffTask for requests parked in cluster.prefilling;
+        # per-cell FIFO of rids owed chunk forwards; first sampled token
+        # (device scalar) stashed until handoff completes and the request
+        # activates on the decode cluster
+        self._handoff: dict = {}
+        self._cell_queue: dict = {}
+        self._first_tok: dict = {}
+        self._cp_buckets = getattr(self.scheduler, "buckets", None) \
+            or CPBuckets(edges=(), degrees=(1,))
         # the data plane's rotation window is the CLUSTER ring (node
         # boundaries are a link class, not a routing wall) — bindings may
         # span nodes on W < I topologies
@@ -258,7 +285,9 @@ class NanoCPEngine:
             "rejected": 0, "shed": 0, "preemptions": 0,
             # PR 8: global prefix cache + refcounted frame ownership
             "prefix_hit_tokens": 0, "prefix_inserts": 0,
-            "copy_tokens": 0, "forks": 0}
+            "copy_tokens": 0, "forks": 0,
+            # PR 9: disaggregated prefill cells + streamed KV handoff
+            "staged": 0, "prefill_chunks": 0, "handoff_tokens": 0}
         self._donation_ptrs = None
 
     # ------------------------------------------------------------------ #
@@ -535,6 +564,177 @@ class NanoCPEngine:
         return reqs
 
     # ------------------------------------------------------------------ #
+    # disaggregated prefill cells: chunked prefill + streamed KV handoff
+    # ------------------------------------------------------------------ #
+    def _stage_handoff(self, req: Request) -> None:
+        """Open a HandoffTask for a request the scheduler staged on a
+        prefill cell (``plan.staged``): the placeholder pages are already
+        allocated (novel suffix on the cell, prefix-hit pages attached on
+        their decode owners) — this just queues the chunk forwards."""
+        cl = self.cluster
+        p = next(i for i in req.kv_binding if cl.role_of(i) == "prefill")
+        attach = tuple(i for i in req.kv_binding if i != p)
+        hit = req.prefix_hit_tokens - req.prefix_hit_tokens % self._dims0.page
+        self._handoff[req.rid] = HandoffTask(
+            req.rid, req.prompt_len, hit, self.chunk_tokens,
+            self._dims0.page, p, attach=attach)
+        self._cell_queue.setdefault(p, deque()).append(req.rid)
+        self.hot_path_stats["staged"] += 1
+
+    def _process_prefill_chunks(self, now: float) -> list:
+        """Advance every alive prefill cell by ONE chunk of its head task,
+        streaming each finished chunk's KV straight into the decode cluster
+        — so a 1M-token prompt never holds a cell (or the engine loop) for
+        one monolithic forward, and decode admission overlaps the tail of
+        prefill.
+
+        Streaming order is position-REVERSED: ``move_pages`` re-homes the
+        TAIL of the cell's placeholder fill, the chunk forward recomputes
+        exactly those positions' KV (a causal prefix forward over
+        ``[0, end)`` keeping rows ``[end-chunk, end)``), and the scatter
+        writes STRAIGHT to the decode destination coordinates.  Placeholder
+        frames on a prefill cell therefore never hold live KV — a handoff
+        never copies garbage, a cell crash never loses device state, and
+        the donated-scatter discipline (one batched ``scatter_kv`` per
+        step) is identical to the admission path's.  The first generated
+        token is sampled from the full-prompt chunk's logits and recorded
+        when the handoff completes.  Returns requests finished at
+        activation (prefill-EOS).  Pinned by the ``disagg`` conformance
+        cells (token parity vs colocated) and ``tests/test_handoff.py``.
+        """
+        cl = self.cluster
+        pt = cl.page_table
+        pattern = self.cfg.block_pattern()
+        ps = self._scatter.ps
+        kv_k, kv_v, kv_coords = [], [], []
+        ready = []
+        for p in sorted(cl.prefill_instances()):
+            if p in cl.dead_instances:
+                continue
+            q = self._cell_queue.get(p)
+            while q and (q[0] not in cl.prefilling
+                         or self._handoff.get(q[0]) is None
+                         or self._handoff[q[0]].instance != p):
+                q.popleft()                      # stale (crashed/re-staged)
+            if not q:
+                continue
+            rid = q[0]
+            task = self._handoff[rid]
+            cands = self.scheduler.handoff_candidates(
+                cl, task, task.next_chunk().tokens)
+            if not cands:
+                continue     # decode backpressure: no headroom, retry later
+            chunk, dest = task.complete_chunk(self._cp_buckets, cands)
+            # the positions about to move: the tail of the placeholder fill
+            ranges = pt.request_positions(rid)[p]
+            pos = [i for st, ln in ranges
+                   for i in range(st, st + ln)][-chunk.tokens:]
+            _, dst = pt.move_pages(rid, [(p, dest, chunk.tokens)])
+            end = pos[-1] + 1
+            toks = jnp.asarray(self._prompts[rid][:end])[None, :]
+            logits, caches = transformer.forward(self.cfg, self.params, toks,
+                                                 collect_kv=True)
+            if end == task.prompt_len and rid not in self._first_tok:
+                self._first_tok[rid] = jnp.argmax(logits[0, -1])
+            ks, vs, lats = [], [], []
+            for li, kind in enumerate(pattern):
+                if kind["mixer"] != "attn":
+                    continue
+                a, b = caches[li]["kv"]
+                if self.cfg.is_mla:
+                    lats.append(jnp.concatenate([a[:, 0], b[:, 0]], axis=-1))
+                else:
+                    ks.append(a[:, 0])
+                    vs.append(b[:, 0])
+            sel = jnp.asarray(pos)
+            if lats:
+                kv_k.append(jnp.stack(lats, axis=1)[:, :, sel][..., None, :])
+            else:
+                khs = self._scatter.khs
+                k3 = jnp.stack(ks, axis=1)[:, :, sel]
+                v3 = jnp.stack(vs, axis=1)[:, :, sel]
+                kv_k.append(k3.reshape(*k3.shape[:3], khs, -1))
+                kv_v.append(v3.reshape(*v3.shape[:3], khs, -1))
+            inst, frame, off = dst
+            kv_coords.append(np.stack([inst, frame % ps, frame // ps,
+                                       off]).astype(np.int32))
+            self.hot_path_stats["prefill_chunks"] += 1
+            self.hot_path_stats["handoff_tokens"] += chunk.tokens
+            if task.done:
+                q.popleft()
+                ready.append(rid)
+        if kv_k:
+            k = jnp.concatenate(kv_k, axis=2)
+            v = jnp.concatenate(kv_v, axis=2) if kv_v else None
+            self.state = self._scatter.scatter_kv(
+                self.state, k, v, np.concatenate(kv_coords, axis=1))
+        return self._activate_handoffs(ready, now)
+
+    def _activate_handoffs(self, rids: list, now: float) -> list:
+        """Promote fully-streamed requests to the decode cluster: the
+        binding is the MEASURED one (attach owners + lazily opened stream
+        destinations — ``HandoffTask.binding``), the first token (sampled
+        from the full-prompt chunk) is recorded now, and a first-token EOS
+        finishes without ever occupying a decode slot."""
+        if not rids:
+            return []
+        cl = self.cluster
+        firsts, reqs = [], []
+        for rid in rids:
+            req = cl.prefilling[rid]
+            task = self._handoff.pop(rid)
+            self.scheduler.admit_handoff(cl, req, task.binding(), now)
+            firsts.append(self._first_tok.pop(rid))
+            reqs.append(req)
+        eos_done = self._record_first_tokens(reqs, firsts, now)
+        self._register_prefixes(reqs)
+        return self._finish_prefill_eos(eos_done, now)
+
+    def _restage_prefilling(self, rec, now: float) -> list:
+        """PR 6 recovery for a request parked mid-handoff.  A dead prefill
+        cell loses only PLACEHOLDER frames (live KV streams straight to
+        decode destinations), so the crash costs exactly the unstreamed
+        tail: re-stage it on a surviving cell (``restore_ranges`` re-homes
+        the lost positions as fresh placeholders; the normal chunk stream
+        recomputes them) — or degrade when no cell has headroom, or when a
+        DECODE member holding streamed/attached pages died (the landed
+        prefix is gone; typed finish, never a hang)."""
+        cl = self.cluster
+        pt = cl.page_table
+        req = rec.req
+        rid = req.rid
+        task = self._handoff.get(rid)
+        lost = sum(n for _, n in rec.lost)
+        if task is not None and task.instance in cl.dead_instances \
+                and lost > 0:
+            survived = task.survived_tokens()
+            cells = [c for c in cl.prefill_instances()
+                     if c not in cl.dead_instances
+                     and cl.kv_headroom(c) >= lost]
+            if cells:
+                p2 = max(cells, key=lambda s: (cl.kv_headroom(s), -s))
+                pt.restore_ranges(rid, {p2: lost}, list(rec.lost))
+                req.kv_binding = sorted(set(task.binding()) | {p2})
+                self._handoff[rid] = HandoffTask(
+                    rid, req.prompt_len, survived, self.chunk_tokens,
+                    self._dims0.page, p2, attach=tuple(task.binding()))
+                self._cell_queue.setdefault(p2, deque()).append(rid)
+                self.results[rid].recovered = True
+                self.hot_path_stats["recovered_tokens"] += survived
+                self.hot_path_stats["reprefill_tokens"] += lost
+                return []
+        self._handoff.pop(rid, None)
+        self._first_tok.pop(rid, None)
+        cl.prefilling.pop(rid, None)
+        pt.free_request(rid)
+        self.results[rid].recovered = False
+        req.status = "degraded"
+        req.finish_time = now
+        self.finished.append(req)
+        self.hot_path_stats["degraded_finishes"] += 1
+        return [req]
+
+    # ------------------------------------------------------------------ #
     def _table_shardings_for(self, tbl) -> dict:
         """Per-field NamedShardings for the table upload (shard over `data`).
 
@@ -663,7 +863,29 @@ class NanoCPEngine:
         Raises ``UnsupportedDrainError`` for archs whose per-slot device
         state is pinned (SSM recurrent state, whisper self-attn caches) —
         the slot cannot move without a state migration, so a graceful drain
-        is impossible; the refusal leaves the cluster untouched."""
+        is impossible; the refusal leaves the cluster untouched.
+
+        Draining a PREFILL CELL is the crash path with zero data loss by
+        construction: cell frames are placeholders (streamed KV already
+        lives on decode destinations), so the unstreamed tail simply
+        re-stages on a surviving cell.  Pinned by tests/test_fault.py and
+        the ``multinode-fault`` (`engine_fault.py`) / ``chaos``
+        (``drainforce``/``refusal``) conformance cells; tokens stay equal
+        through a graceful drain."""
+        if self.cluster.role_of(instance) == "prefill":
+            # a prefill cell's frames are PLACEHOLDERS — each chunk's pages
+            # move to their decode destination BEFORE its KV is computed, so
+            # there is never live device state to evacuate.  A drain is the
+            # crash path with zero data loss: mark the cell dead and
+            # re-stage its queued tails on surviving cells; the normal
+            # chunk stream recomputes them deterministically (tokens
+            # unchanged — pinned by the disagg conformance cells).
+            records = self.cluster.fail_instance(instance)
+            if self.prefix_trie is not None:
+                self.prefix_trie.drop_instance(instance)
+            self._recover(records, self._now())
+            self.hot_path_stats["drains"] += 1
+            return []
         if not (self._append_tokens
                 and getattr(self.scheduler, "allow_rebalance", True)):
             raise UnsupportedDrainError(
@@ -723,7 +945,11 @@ class NanoCPEngine:
         into a replacement WaterFill placement (surviving shards untouched),
         or a degraded finish when the alive cluster lacks headroom.  Never
         hangs, never leaks frames.  Returns the requests finished (degraded)
-        here."""
+        here.  Pinned by tests/test_fault.py, the kill/join property in
+        tests/test_properties.py, and the ``chaos``/``disagg`` conformance
+        shards (recovered tokens == a from-scratch run; degraded tokens a
+        prefix of it; prefill-cell crashes re-stage only the unstreamed
+        tail)."""
         now = self._now() if now is None else now
         cl = self.cluster
         assert 0 <= instance < cl.num_instances, instance
@@ -791,6 +1017,12 @@ class NanoCPEngine:
         for rec in records:
             req = rec.req
             rid = req.rid
+            if rid in cl.prefilling:
+                # parked mid-handoff on a prefill cell: re-stage the
+                # unstreamed tail (or degrade) — the streamed prefix on
+                # decode instances survives untouched
+                finished += self._restage_prefilling(rec, now)
+                continue
             if rid not in cl.active:
                 continue
             resident = sum(pt.shard_tokens(rid).values())
@@ -966,7 +1198,12 @@ class NanoCPEngine:
         identical.  ``max_new_tokens`` counts the child's TOTAL emitted
         tokens, inherited ones included (the parent's finish semantics).
         Decoder-only attention archs only: per-slot device state (SSM,
-        whisper) has no page identity to share."""
+        whisper) has no page identity to share.  Invariant:
+        ``prompt + tokens`` is the child's processed sequence exactly, and
+        shared frames are never appended into without a CoW split — pinned
+        by tests/test_prefix.py, the fork audits in
+        tests/test_properties.py, and the ``prefix`` ``fork`` conformance
+        cell (both lineages vs independent references)."""
         assert self._append_tokens and not self._pinned_slots, \
             "fork_request needs a decoder-only attention arch"
         now = self._now() if now is None else now
@@ -1063,6 +1300,20 @@ class NanoCPEngine:
     def step(self, now: float | None = None) -> list:
         """One scheduling+decode iteration, pipelined one step ahead.
 
+        Order: advance prefill-cell chunk streams (completed handoffs
+        activate BEFORE this step's schedule sees the active set) ->
+        schedule (stage/admit/escalate/relax/shed/reject) -> batched
+        donated prefill scatter -> lower routing tables -> harvest the
+        in-flight iteration's tokens -> dispatch this iteration.
+
+        Invariants: steady state is a dict lookup + replay — no compile,
+        no implicit transfer, donation holds (``aot.stats`` audits
+        ``donation_copies``; pinned by tests/test_hot_path.py and every
+        conformance cell's transfer-guard window) — and a ``KVSpillError``
+        at lowering is relieved (cache evict -> relieve_spill) or finished
+        as a typed request-level OOM, never raised to the caller (pinned
+        by the ``escalation`` ``oom`` cells).
+
         Returns the requests whose completion became visible during this
         call (i.e. at the harvest of the previously dispatched iteration).
         """
@@ -1070,8 +1321,21 @@ class NanoCPEngine:
         now = self._now() if now is None else now
         self.timings = {}
 
+        # -- disaggregated cells: advance the chunk streams FIRST, so a
+        #    completed handoff activates on the decode cluster before this
+        #    step's schedule/lowering sees the active set -------------------
+        handoff_done = []
+        if self.cluster.prefill_cells:
+            t0 = time.perf_counter()
+            handoff_done = self._process_prefill_chunks(now)
+            self.timings["handoff_us"] = (time.perf_counter() - t0) * 1e6
+
         # -- schedule + admit (prefill -> on-device KV migration) ----------
         plan = self.scheduler.schedule(self.cluster, now)
+        # requests the scheduler parked on a prefill cell this step: open
+        # their handoff tasks (first chunk forwards run next step)
+        for req in plan.staged:
+            self._stage_handoff(req)
         # mid-decode CP escalations AND relaxations decided by the
         # scheduler: dispatch the live KV re-shard FIRST so the gather reads
         # the pools before this step's admissions scatter into (possibly
@@ -1101,11 +1365,11 @@ class NanoCPEngine:
         self.hot_path_stats["rejected"] += len(plan.rejected)
         self.hot_path_stats["shed"] += len(plan.shed)
         self.hot_path_stats["preemptions"] += plan.preemptions
-        prefill_done = dropped
+        prefill_done = handoff_done + dropped
         if plan.admitted:
             t0 = time.perf_counter()
-            prefill_done = dropped + (self._prefill_batch(plan.admitted, now)
-                                      or [])
+            prefill_done = prefill_done + (
+                self._prefill_batch(plan.admitted, now) or [])
             self.timings["prefill_us"] = (time.perf_counter() - t0) * 1e6
         if not self.cluster.active:
             # drain a trailing iteration
@@ -1220,6 +1484,7 @@ class NanoCPEngine:
     def run(self, max_iters: int = 1000) -> dict:
         it = 0
         while ((self.cluster.active or self.cluster.waiting
+                or self.cluster.prefilling
                 or self._inflight is not None) and it < max_iters):
             self.step()
             it += 1

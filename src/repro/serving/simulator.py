@@ -12,13 +12,16 @@ per-instance MAX (the straggler effect of Fig. 4).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
+from heapq import heappop, heappush
 
 import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.bucketing import ShapeBuckets
 from ..core.comm import ring_round
+from ..core.handoff import HandoffTask, plan_chunks
 from ..core.page_table import KVSpillError
 from ..core.prefix import PrefixTrie
 from ..core.scheduler import BaseScheduler, UniformCPScheduler
@@ -109,6 +112,25 @@ class SimResult:
     copy_tokens: int = 0                                   # replication/pad KV tokens copied
     evicted_prefix_frames: int = 0                         # cache frames evicted this run
     prefill_time: float = 0.0                              # novel-suffix prefill s charged
+    # disaggregated prefill/decode accounting: prefill is charged CHUNKED
+    # (never one monolithic lump) — colocated chunks drain one per outer
+    # iteration on the global clock (bounded HoL), disaggregated chunks
+    # advance per-prefill-cell clocks with every streamed handoff priced
+    # by the link class it crosses
+    staged: int = 0                                        # requests staged to prefill cells
+    prefill_chunks: int = 0                                # chunk forwards charged
+    handoff_tokens: int = 0                                # KV tokens streamed to decode
+    handoff_time: float = 0.0                              # handoff transfer s charged
+
+
+class _DegreeOne:
+    """CP-bucket stand-in for schedulers without DCP buckets."""
+    @staticmethod
+    def cp_degree(length: int) -> int:
+        return 1
+
+
+_DEGREE_ONE = _DegreeOne()
 
 
 class ClusterSimulator:
@@ -117,7 +139,8 @@ class ClusterSimulator:
                  kv_capacity_tokens: int = 1_000_000, page_size: int = 64,
                  latency: LatencyModel | None = None, multi_step: int = 1,
                  sched_overhead: float = 150e-6, prefix_cache: bool = False,
-                 charge_prefill: bool = False):
+                 charge_prefill: bool = False, prefill_cells: int = 0,
+                 chunk_tokens: int | None = None):
         self.cfg = cfg
         self.scheduler = scheduler
         self.latency = latency or LatencyModel(cfg)
@@ -128,21 +151,44 @@ class ClusterSimulator:
                 "prefix_cache needs a decoder-only attention arch"
         self.prefix_trie = PrefixTrie(page_size) if prefix_cache else None
         scheduler.prefix_cache = self.prefix_trie
-        # charge the (novel-suffix) prefill forward into sim time at
-        # admission — off by default so existing decode-only sweeps keep
-        # their numbers; the prefix-cache benchmark turns it on to measure
-        # the TTFT a hit saves
+        # charge the (novel-suffix) prefill forward into sim time — off by
+        # default so existing decode-only sweeps keep their numbers; the
+        # prefix-cache benchmark turns it on to measure the TTFT a hit
+        # saves.  The charge is CHUNKED (core/handoff.plan_chunks), never a
+        # monolithic lump: one chunk per outer iteration drains round-robin
+        # across held requests, so a short prompt admitted behind a long
+        # one starts decoding between the long's chunks (pinned by
+        # tests/test_simulator.py).
         self.charge_prefill = charge_prefill
+        # disaggregated cells: dedicate the TAIL `prefill_cells` instances
+        # to chunked prefill; prompts stream into the decode cluster
+        # chunk-by-chunk (core/handoff.py) with the handoff priced by link
+        # class.  Implies prefill charging — a disaggregated sweep that
+        # didn't price prefill would show a free lunch.
+        self.prefill_cells = prefill_cells
+        self.chunk_tokens = chunk_tokens or 64 * page_size
+        if prefill_cells:
+            self.charge_prefill = True
         self._registered = set()                 # rids whose prompt is cached
+        self._hold = {}           # colocated: rid -> pending chunk sizes
+        self._prefill_fifo = deque()             # colocated chunk round-robin
+        self._tasks = {}          # disagg: rid -> HandoffTask
+        self._cell_queue = {}     # disagg: prefill instance -> deque of rids
+        self._cell_clock = {}     # disagg: prefill instance -> busy-until s
+        self._ready = []          # disagg: heap of (ready_time, rid)
         self.cluster = ClusterState(num_instances=num_instances,
                                     instances_per_node=instances_per_node,
                                     kv_capacity_tokens=kv_capacity_tokens,
-                                    page_size=page_size)
+                                    page_size=page_size,
+                                    prefill_cells=prefill_cells)
         self.buckets = ShapeBuckets(
             m_buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512),
             s_buckets=(0, 1, 2, 4, 8, 16, 32, 64),
             window=instances_per_node)
         self._uniform_cp = isinstance(scheduler, UniformCPScheduler)
+        # CP degree buckets for measured-footprint handoff degree selection;
+        # non-DCP policies carry none and stream at degree 1
+        self._cp_buckets = getattr(scheduler, "buckets", None) or _DEGREE_ONE
 
     # ------------------------------------------------------------------ #
     def _iteration_time(self, plan, res: SimResult | None = None
@@ -299,25 +345,204 @@ class ClusterSimulator:
     def _register_admissions(self, res: SimResult, now: float) -> float:
         """Post-admission pass over newly placed requests: register their
         cacheable prompt pages in the trie (the engine does this at
-        prefill), account hit tokens, and optionally charge the NOVEL-
-        suffix prefill — the attached pages' skipped compute is exactly
-        the TTFT win the share-ratio sweep measures."""
+        prefill), account hit tokens, and queue the NOVEL-suffix prefill
+        as CHUNKS — the attached pages' skipped compute is exactly the
+        TTFT win the share-ratio sweep measures.  Nothing is charged here:
+        ``_drain_one_chunk`` charges one chunk per outer iteration so a
+        long prompt can never lump its whole forward onto requests
+        admitted beside it (pinned by tests/test_simulator.py)."""
         cl = self.cluster
-        novel = 0
+        ps = cl.page_size
         for rid, req in cl.active.items():
             if rid in self._registered:
                 continue
             self._registered.add(rid)
             res.prompt_tokens += req.prompt_len
             res.prefix_hit_tokens += req.prefix_hit_tokens
-            novel += req.prompt_len - req.prefix_hit_tokens
             if self.prefix_trie is not None and req.prefix_keys:
                 res.prefix_inserts += self.prefix_trie.insert(
                     cl.page_table, rid, req.prefix_keys, req.prompt_len)
-        if self.charge_prefill and novel > 0:
-            t = self.latency.reprefill_time(novel)
+            if (self.charge_prefill and not self.prefill_cells
+                    and req.prompt_len > req.prefix_hit_tokens):
+                hit = req.prefix_hit_tokens - req.prefix_hit_tokens % ps
+                self._hold[rid] = [
+                    c.tokens for c in plan_chunks(hit, req.prompt_len,
+                                                  self.chunk_tokens, ps)]
+                self._prefill_fifo.append(rid)
+        return now
+
+    def _drain_one_chunk(self, res: SimResult, now: float) -> float:
+        """Colocated chunked prefill: charge ONE pending chunk into the
+        global clock per outer iteration, round-robin across held
+        requests.  A held request decodes nothing until its own chunks
+        drain, but everyone else's decode iterations interleave with the
+        chunks — bounded head-of-line blocking instead of the old
+        admission-time lump."""
+        cl = self.cluster
+        while self._prefill_fifo:
+            rid = self._prefill_fifo.popleft()
+            chunks = self._hold.get(rid)
+            if not chunks or rid not in cl.active:
+                self._hold.pop(rid, None)
+                continue
+            t = self.latency.reprefill_time(chunks.pop(0))
             res.prefill_time += t
-            now += t
+            res.prefill_chunks += 1
+            if chunks:
+                self._prefill_fifo.append(rid)
+            else:
+                del self._hold[rid]
+            return now + t
+        return now
+
+    # ------------------------------------------------------------------ #
+    # disaggregated prefill cells: staging, per-cell clocks, handoff
+    # ------------------------------------------------------------------ #
+    def _stage_tasks(self, res: SimResult, staged: list, now: float) -> None:
+        """Turn this pass's scheduler stagings (``IterationPlan.staged``)
+        into ``HandoffTask``s queued FIFO on their prefill cell."""
+        cl = self.cluster
+        ps = cl.page_size
+        for req in staged:
+            p = next(i for i in req.kv_binding if cl.role_of(i) == "prefill")
+            attach = tuple(i for i in req.kv_binding if i != p)
+            hit = req.prefix_hit_tokens - req.prefix_hit_tokens % ps
+            task = HandoffTask(req.rid, req.prompt_len, hit,
+                               self.chunk_tokens, ps, p, attach=attach)
+            self._tasks[req.rid] = task
+            self._cell_queue.setdefault(p, deque()).append(req.rid)
+            res.staged += 1
+
+    def _advance_cells(self, res: SimResult, now: float) -> None:
+        """Advance every prefill cell's local clock up to ``now``: each
+        completed chunk picks its decode destination from the MEASURED
+        footprint (``HandoffTask.complete_chunk``), moves its pages there
+        (``GlobalPageTable.move_pages`` — the engine rides the same coords
+        into ``migrate.KVReshard``), and is priced by the link class the
+        handoff crosses.  The handoff overlaps the NEXT chunk's compute:
+        it delays the request's ready time, never the cell's clock.  A
+        chunk with no viable destination stalls its cell (backpressure)
+        until decode headroom frees up."""
+        cl, lm = self.cluster, self.latency
+        for p, q in self._cell_queue.items():
+            if p in cl.dead_instances:
+                continue
+            t = self._cell_clock.get(p, 0.0)
+            while q:
+                rid = q[0]
+                task = self._tasks.get(rid)
+                req = cl.prefilling.get(rid)
+                if task is None or req is None or task.instance != p:
+                    q.popleft()
+                    continue
+                t0 = max(t, req.start_time)
+                if t0 >= now:
+                    break
+                chunk = task.next_chunk()
+                cands = self.scheduler.handoff_candidates(cl, task,
+                                                          chunk.tokens)
+                if not cands:
+                    break
+                chunk, dest = task.complete_chunk(self._cp_buckets, cands)
+                tc = lm.reprefill_time(chunk.tokens)
+                t = t0 + tc
+                res.prefill_time += tc
+                res.prefill_chunks += 1
+                cl.page_table.move_pages(rid, [(p, dest, chunk.tokens)])
+                inter = not cl.same_node(p, dest)
+                th = lm.kv_reshard_time(chunk.tokens, inter=inter)
+                res.handoff_time += th
+                res.handoff_tokens += chunk.tokens
+                if inter:
+                    res.cross_reshard_time += th
+                    res.cross_node_bytes += int(
+                        chunk.tokens * lm.kv_bytes_per_token
+                        * lm.num_attn_layers)
+                if task.done:
+                    q.popleft()
+                    heappush(self._ready, (t + th, rid))
+            self._cell_clock[p] = t
+
+    def _admit_ready(self, res: SimResult, now: float) -> None:
+        """Activate requests whose final streamed chunk has landed: the
+        realized binding is the task's MEASURED one (attach owners +
+        lazily opened destinations), so ``admit_handoff`` only binds MoE
+        and pins the slot — no placement prediction anywhere."""
+        cl = self.cluster
+        while self._ready and self._ready[0][0] <= now:
+            _, rid = heappop(self._ready)
+            req = cl.prefilling.get(rid)
+            task = self._tasks.pop(rid, None)
+            if req is None or task is None:
+                continue
+            self.scheduler.admit_handoff(cl, req, task.binding(), now)
+
+    def _next_prefill_event(self, now: float) -> float:
+        """Earliest future time the disaggregated pipeline changes state
+        (chunk completion or handoff arrival) — the idle-clock jump when
+        nothing decodes but prefill cells still stream."""
+        cl, lm = self.cluster, self.latency
+        nxt = min((t for t, _ in self._ready), default=float("inf"))
+        for p, q in self._cell_queue.items():
+            if p in cl.dead_instances:
+                continue
+            t = self._cell_clock.get(p, 0.0)
+            for rid in q:
+                task = self._tasks.get(rid)
+                req = cl.prefilling.get(rid)
+                if task is None or req is None or task.done:
+                    continue
+                c = task.next_chunk()
+                nxt = min(nxt, max(t, req.start_time, now)
+                          + lm.reprefill_time(c.tokens))
+                break
+        return nxt
+
+    def _recover_prefilling(self, res: SimResult, req, rec,
+                            now: float) -> float:
+        """Resolve a failure record for a request still staged in a
+        prefill cell.  A dead PREFILL cell costs only the unstreamed
+        tail: what already streamed lives on decode instances
+        (``HandoffTask.survived_tokens``), so the task re-stages on a
+        surviving cell and recomputes just the remainder — PR 6's partial
+        re-prefill, priced through the normal chunk charging.  A dead
+        decode destination mid-stream (or no surviving cell) degrades the
+        request: a typed outcome, never a hang — the same invariant
+        active-request recovery keeps."""
+        cl = self.cluster
+        rid = req.rid
+        task = self._tasks.get(rid)
+        lost = sum(n for _, n in rec.lost)
+        if task is not None and task.instance in cl.dead_instances:
+            q = self._cell_queue.get(task.instance)
+            if q is not None and rid in q:
+                q.remove(rid)
+            if lost == 0 and task.done:
+                return now        # fully streamed; admission proceeds
+            survived = task.survived_tokens()
+            cells = [p for p in cl.prefill_instances()
+                     if cl.kv_headroom(p) >= lost]
+            if cells and lost > 0:
+                p2 = max(cells, key=lambda s: (cl.kv_headroom(s), -s))
+                cl.page_table.restore_ranges(rid, {p2: lost}, rec.lost)
+                req.kv_binding = sorted(set(task.binding()) | {p2})
+                req.start_time = now
+                t2 = HandoffTask(rid, req.prompt_len, survived,
+                                 self.chunk_tokens, cl.page_size, p2,
+                                 attach=tuple(task.binding()))
+                self._tasks[rid] = t2
+                self._cell_queue.setdefault(p2, deque()).append(rid)
+                res.recovered_tokens += survived
+                res.reprefill_tokens += lost
+                return now
+        self._tasks.pop(rid, None)
+        cl.prefilling.pop(rid, None)
+        cl.page_table.free_request(rid)
+        cl.free_slot(rid)
+        req.status = "degraded"
+        req.finish_time = now
+        res.finished.append(req)
+        res.degraded_finishes += 1
         return now
 
     def _cow_tail(self, res: SimResult, rid: int, now: float) -> float:
@@ -386,6 +611,9 @@ class ClusterSimulator:
         replayed = 0
         for rec in records:
             req = rec.req
+            if req.rid in cl.prefilling:
+                now = self._recover_prefilling(res, req, rec, now)
+                continue
             if req.rid not in cl.active:
                 continue
             resident = sum(pt.shard_tokens(req.rid).values())
@@ -476,9 +704,18 @@ class ClusterSimulator:
                                    prefix_keys=getattr(tr, "prefix_keys",
                                                        ())), now)
                 ai += 1
+            # disaggregated: advance the prefill-cell clocks up to `now`
+            # (streaming chunk handoffs), then activate every request whose
+            # final chunk landed — BEFORE schedule(), so this iteration's
+            # plan already decodes them (admission overlaps prefill's tail)
+            if self.prefill_cells:
+                self._advance_cells(res, now)
+                self._admit_ready(res, now)
             t0 = _time.perf_counter()
             plan = self.scheduler.schedule(cl, now)
             res.sched_wall += _time.perf_counter() - t0
+            if plan.staged:
+                self._stage_tasks(res, plan.staged, now)
             # escalations + relaxations: page-table bookkeeping already
             # applied by the scheduler; the simulator charges the data-plane
             # re-shard time (the engine instead dispatches migrate.KVReshard)
@@ -486,6 +723,8 @@ class ClusterSimulator:
                 res, plan.escalations + plan.relaxations, now)
             if self.prefix_trie is not None or self.charge_prefill:
                 now = self._register_admissions(res, now)
+            if self._prefill_fifo:
+                now = self._drain_one_chunk(res, now)
             # cache-driven copies the scheduler planned (hot-prefix
             # replication, evacuation CoW pads): same collective as the
             # re-shard, charged into sim time so replication isn't free
@@ -502,6 +741,14 @@ class ClusterSimulator:
             res.shed += len(plan.shed)
             res.preemptions += plan.preemptions
             if not cl.active:
+                # prefill cells may still be streaming with nothing decoding
+                # yet: jump the idle clock to the next chunk/handoff event
+                # instead of crawling by sched_overhead ticks
+                if self.prefill_cells and (cl.prefilling or self._ready):
+                    nxt = self._next_prefill_event(now)
+                    if nxt < float("inf"):
+                        now = max(now + self.sched_overhead, nxt)
+                        continue
                 if ai < len(arrivals):
                     now = max(now, arrivals[ai].arrival)
                     continue
@@ -553,6 +800,8 @@ class ClusterSimulator:
                 res.iterations += 1
                 done = []
                 for r in list(cl.active.values()):
+                    if r.rid in self._hold:
+                        continue      # colocated prefill chunks still owed
                     r.generated += 1
                     r.token_times.append(now)
                     if append:
@@ -566,7 +815,8 @@ class ClusterSimulator:
                     res.finished.append(r)
                 if not cl.active:
                     break
-            if ai >= len(arrivals) and not cl.active and not cl.waiting:
+            if (ai >= len(arrivals) and not cl.active and not cl.waiting
+                    and not cl.prefilling):
                 break
         res.sim_time = now
         if self.prefix_trie is not None:

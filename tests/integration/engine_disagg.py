@@ -1,0 +1,176 @@
+"""Disaggregated prefill/decode cells conformance case (one subprocess per
+cell).
+
+Drives ``NanoCPEngine`` with dedicated prefill cells (``prefill_cells=2``,
+chunked prefill + streamed KV handoff) against the SAME engine colocated
+(``prefill_cells=0``) and the single-device reference forward, and asserts:
+
+  * token-for-token equality: disaggregated == colocated == reference
+    (greedy), for every request — the handoff changes WHERE prefill runs
+    and how its KV lands, never the tokens;
+  * every request staged on a prefill cell and activated with a
+    decode-only measured binding (no prefill cell ever appears in a
+    decode-time ``kv_binding``);
+  * once every handoff completes, steady-state decode performs no implicit
+    transfers (``jax.transfer_guard``) and serve-state donation holds with
+    ZERO further copy-on-donates;
+  * (crash mode) killing the streaming cell mid-handoff re-stages the
+    unstreamed tail on the surviving cell — the request still finishes with
+    reference tokens and ``recovered=True`` (PR 6 partial re-prefill: only
+    the placeholder tail is recomputed).
+
+Usage: engine_disagg.py ARCH I TP [wN] [crash]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+STEPS = 4
+VOCAB = 256
+CELLS = 2
+CHUNK = 32          # 2 pages per chunk: the 180-token prompt streams 6x
+
+
+def _f32(params):
+    return jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        params)
+
+
+def build_engine(cfg, params, I: int, TP: int, w: int | None, cells: int):
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
+    return NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=w or I,
+        kv_capacity_tokens=4096, page_size=16,
+        buckets=CPBuckets(edges=(64, 160), degrees=(1, 2, 3)),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4),
+                                   s_buckets=(0, 1, 2, 4), window=I),
+        max_slots_per_instance=4, prefill_cells=cells, chunk_tokens=CHUNK)
+
+
+def _drive(eng, crash: bool) -> dict:
+    """Run to completion; in crash mode, kill the cell streaming the long
+    prompt once at least one of its chunks has landed."""
+    crashed = False
+    guard_base = None
+    for _ in range(300):
+        if not (eng.cluster.active or eng.cluster.waiting
+                or eng.cluster.prefilling or eng._inflight is not None):
+            break
+        if crash and not crashed:
+            task = eng._handoff.get(2)
+            if task is not None and task.computed >= 1 and not task.done:
+                p = task.instance
+                print(f"  crash: failing prefill cell {p} after "
+                      f"{task.streamed_tokens} of {task.novel_tokens} "
+                      f"novel tokens streamed")
+                eng.fail_instance(p)
+                crashed = True
+        if guard_base is None and not eng.cluster.prefilling \
+                and eng.hot_path_stats["staged"] >= 3:
+            # every handoff completed: from here decode is steady state
+            guard_base = dict(eng.aot.stats.as_dict())
+        if guard_base is not None:
+            with jax.transfer_guard("disallow"):
+                eng.step()
+        else:
+            eng.step()
+    assert not eng.cluster.active and not eng.cluster.prefilling \
+        and eng._inflight is None
+    if crash:
+        assert crashed, "crash point never reached (stream too fast?)"
+    assert guard_base is not None, "handoffs never completed"
+    st = eng.aot.stats.as_dict()
+    assert st["donation_copies"] == guard_base["donation_copies"], (
+        "steady-state dispatch copied instead of donating after the last "
+        "handoff", guard_base, st)
+    return eng.results
+
+
+def run_case(arch: str, I: int, TP: int, w: int | None,
+             crash: bool) -> None:
+    over = {"vocab_size": VOCAB}
+    if CONFIGS[arch].is_moe:
+        over["capacity_factor"] = 8.0
+    cfg = reduced(CONFIGS[arch], **over)
+    params = _f32(init_params(jax.random.PRNGKey(0), cfg))
+    print(f"{arch} I={I} TP={TP} W={w or I} cells={CELLS} chunk={CHUNK} "
+          f"crash={crash}")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)) for L in (24, 90, 180)]
+
+    disagg = build_engine(cfg, params, I, TP, w, CELLS)
+    for p in prompts:
+        disagg.add_request(p, max_new_tokens=STEPS)
+    disagg.step()
+    assert not disagg.cluster.waiting, "all requests must stage at step 1"
+    assert disagg.hot_path_stats["staged"] == len(prompts)
+    assert set(disagg.cluster.prefilling) == set(range(len(prompts)))
+    dres = _drive(disagg, crash)
+
+    # every finished binding is measured AND decode-only
+    for rid, req in [(r.rid, r) for r in disagg.finished]:
+        assert all(disagg.cluster.role_of(s) == "decode"
+                   for s in req.kv_binding), (rid, req.kv_binding)
+    assert disagg.hot_path_stats["prefill_chunks"] >= \
+        sum(-(-len(p) // CHUNK) for p in prompts)
+    assert disagg.hot_path_stats["handoff_tokens"] >= sum(
+        len(p) for p in prompts)
+    if crash:
+        assert dres[2].recovered is True, "long prompt must re-stage"
+        assert disagg.hot_path_stats["reprefill_tokens"] > 0
+        assert disagg.hot_path_stats["recovered_tokens"] > 0
+
+    # ---- colocated twin: same engine, no cells ----
+    colo = build_engine(cfg, params, I, TP, w, 0)
+    for p in prompts:
+        colo.add_request(p, max_new_tokens=STEPS)
+    for _ in range(300):
+        if not (colo.cluster.active or colo.cluster.waiting
+                or colo._inflight is not None):
+            break
+        colo.step()
+
+    # ---- reference: single-device greedy continuation ----
+    for rid in range(len(prompts)):
+        seq = list(map(int, prompts[rid]))
+        ref = []
+        for _ in range(STEPS):
+            logits, _ = transformer.forward(cfg, params,
+                                            jnp.asarray(seq)[None])
+            t = int(jnp.argmax(logits[0, -1]))
+            ref.append(t)
+            seq.append(t)
+        assert dres[rid].tokens == ref, (
+            "disagg vs ref", rid, dres[rid].tokens, ref)
+        assert colo.results[rid].tokens == ref, (
+            "colo vs ref", rid, colo.results[rid].tokens, ref)
+        print(f"  rid {rid}: disagg {dres[rid].tokens} == colo == ref")
+    print(f"  handoff: {disagg.hot_path_stats['prefill_chunks']} chunks, "
+          f"{disagg.hot_path_stats['handoff_tokens']} tokens, "
+          f"aot {disagg.aot.stats.as_dict()}")
+    print(f"{arch} I={I} TP={TP} cells={CELLS}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    arch, I, TP = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+    w = None
+    crash = False
+    for extra in sys.argv[4:]:
+        if extra.startswith("w"):
+            w = int(extra[1:])
+        elif extra == "crash":
+            crash = True
+        else:
+            raise SystemExit(f"unknown arg {extra}")
+    run_case(arch, I, TP, w, crash)

@@ -1,7 +1,8 @@
 """CI tooling gates, run as tier-1 tests: the conformance shard partition
-must cover every cell exactly once (tools/check_matrix.py) and the junit
+must cover every cell exactly once (tools/check_matrix.py), the junit
 merge must degrade loudly, not crash, on broken shard reports
-(tools/merge_junit.py)."""
+(tools/merge_junit.py), and the docs hypertext must have no dead links or
+anchors (tools/check_links.py)."""
 import os
 import subprocess
 import sys
@@ -11,6 +12,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "tools"))
 
+import check_links  # noqa: E402
 import check_matrix  # noqa: E402
 import merge_junit  # noqa: E402
 
@@ -130,3 +132,44 @@ def test_merge_propagates_test_failures(tmp_path):
            'errors="0" skipped="0" time="1"></testsuite>')
     out = str(tmp_path / "out.xml")
     assert merge_junit.main(out, [_write(tmp_path, "f.xml", bad)]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# check_links: the real docs, end to end
+# --------------------------------------------------------------------------- #
+def test_repo_docs_have_no_dead_links(capsys):
+    """README.md + docs/ as committed: every relative link and anchor
+    resolves — the gate that stops a rename or retitled heading from
+    stranding the architecture hypertext."""
+    assert check_links.main([]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------- #
+# check_links: defect detection (synthetic)
+# --------------------------------------------------------------------------- #
+def test_check_links_flags_dead_file_and_anchor(tmp_path):
+    (tmp_path / "a.md").write_text(
+        "# Alpha One\n[ok](b.md)\n[gone](missing.md)\n"
+        "[bad](b.md#no-such-heading)\n[ok2](#alpha-one)\n")
+    (tmp_path / "b.md").write_text("# Beta\ntext\n")
+    problems = check_links.check_file(str(tmp_path / "a.md"))
+    assert len(problems) == 2
+    assert any("DEAD LINK" in p and "missing.md" in p for p in problems)
+    assert any("DEAD ANCHOR" in p and "no-such-heading" in p
+               for p in problems)
+
+
+def test_check_links_ignores_fences_and_external(tmp_path):
+    (tmp_path / "c.md").write_text(
+        "# C\n```\n[not a link](nowhere.md)\n```\n"
+        "[ext](https://example.com/x#y)\n[mail](mailto:a@b.c)\n")
+    assert check_links.check_file(str(tmp_path / "c.md")) == []
+
+
+def test_github_slug_duplicates_and_markup(tmp_path):
+    (tmp_path / "d.md").write_text(
+        "# `core/handoff.py` — Streamed KV!\n## Repeat\n## Repeat\n")
+    slugs = check_links.heading_slugs(str(tmp_path / "d.md"))
+    assert "corehandoffpy--streamed-kv" in slugs
+    assert {"repeat", "repeat-1"} <= slugs

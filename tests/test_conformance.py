@@ -195,6 +195,27 @@ def test_engine_prefix(args):
     assert "PASS" in out
 
 
+# disaggregated prefill/decode cells (PR 9): chunked prefill on dedicated
+# cells + streamed KV handoff must be invisible in the tokens — equal to
+# the colocated engine AND the single-device reference at two topologies
+# (single-node GQA, two-node MLA), donation holding after the last handoff;
+# the crash cell kills the streaming cell mid-handoff and must recover via
+# PR 6 partial re-prefill (only the unstreamed placeholder tail recomputes)
+DISAGG_CELLS = [
+    ("tinyllama-1.1b", "6", "1", "w6"),
+    ("minicpm3-4b", "8", "1", "w4"),
+    ("tinyllama-1.1b", "6", "1", "w6", "crash"),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("args", DISAGG_CELLS,
+                         ids=["-".join(c) for c in DISAGG_CELLS])
+def test_engine_disagg(args):
+    out = run_integration("engine_disagg.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_multinode_conformance_cell():
     """Full conformance workload on a two-node W=4, I=8 topology (nothing

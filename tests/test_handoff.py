@@ -1,0 +1,241 @@
+"""Host-side unit tests for the streamed prefill->decode handoff seam
+(core/handoff.py): chunk-plan accounting and measured-footprint DCP degree
+selection.  These pin the bookkeeping the engine drives against real device
+transfers and the simulator against priced ones — plus the scheduler's
+staging/activation path (BaseScheduler._try_stage_prefill / admit_handoff)
+over a real ClusterState."""
+import pytest
+
+from repro.core.bucketing import CPBuckets
+from repro.core.handoff import Chunk, HandoffTask, plan_chunks
+from repro.core.scheduler import DualBalancedScheduler
+from repro.core.state import ClusterState, Request
+
+BK = CPBuckets(edges=(256, 1024), degrees=(1, 2, 4))
+
+
+# --------------------------------------------------------------------------- #
+# chunk planning
+# --------------------------------------------------------------------------- #
+def test_plan_chunks_covers_novel_suffix_exactly():
+    chunks = plan_chunks(128, 1000, 256, page_size=64)
+    assert chunks[0].start == 128
+    assert chunks[-1].end == 1000
+    for a, b in zip(chunks, chunks[1:]):
+        assert a.end == b.start
+    assert sum(c.tokens for c in chunks) == 1000 - 128
+    # every boundary except the prompt end is page-exact
+    assert all(c.start % 64 == 0 for c in chunks)
+    assert all(c.end % 64 == 0 for c in chunks[:-1])
+
+
+def test_plan_chunks_fully_cached_is_empty():
+    assert plan_chunks(512, 512, 256, page_size=64) == []
+
+
+def test_plan_chunks_single_partial_chunk():
+    assert plan_chunks(0, 100, 256, page_size=4) == [Chunk(0, 100)]
+
+
+def test_plan_chunks_rejects_bad_geometry():
+    with pytest.raises(ValueError):
+        plan_chunks(0, 100, 0, page_size=64)          # non-positive chunk
+    with pytest.raises(ValueError):
+        plan_chunks(0, 100, 100, page_size=64)        # not a page multiple
+    with pytest.raises(ValueError):
+        plan_chunks(30, 100, 64, page_size=64)        # unaligned prefix hit
+    with pytest.raises(ValueError):
+        plan_chunks(192, 100, 64, page_size=64)       # hit beyond prompt
+
+
+# --------------------------------------------------------------------------- #
+# measured-footprint degree selection
+# --------------------------------------------------------------------------- #
+def test_degree_opens_destinations_lazily_from_measured_tokens():
+    # 1200 novel tokens, chunks of 256: degree thresholds cross at 256
+    # (deg 2) and 1024 (deg 4) MEASURED tokens — destinations must open
+    # exactly when the landed footprint crosses them, not upfront
+    t = HandoffTask(rid=1, prompt_len=1200, prefix_hit=0, chunk_tokens=256,
+                    page_size=64, prefill_instance=9)
+    cands = [0, 1, 2, 3]
+    widths = []
+    while not t.done:
+        t.complete_chunk(BK, cands)
+        widths.append(t.measured_degree())
+    # 5 chunks: measured 256, 512, 768, 1024, 1200 -> deg 1, 2, 2, 2, 4...
+    # bucket is bisect_right so measured==256 still deg 1; the binding only
+    # ever widens, and never beyond the final bucket degree
+    assert widths == sorted(widths)
+    assert widths[0] == 1
+    assert widths[-1] == BK.cp_degree(1200) == 4
+    assert t.measured_tokens == 1200 and t.remaining_tokens == 0
+    assert sum(t.dest_tokens.values()) == 1200
+
+
+def test_prefix_hit_narrows_binding_mechanically():
+    # a mostly-cached request: 1088 of 1200 tokens attach on two owners.
+    # The attach owners count toward the measured footprint AND the
+    # realized width, so the 112 novel tokens never open a third
+    # destination even though the total footprint wants degree 4
+    t = HandoffTask(rid=2, prompt_len=1200, prefix_hit=1088, chunk_tokens=256,
+                    page_size=64, prefill_instance=9, attach=(4, 5))
+    chunk, dest = t.complete_chunk(BK, [0, 1, 2, 3, 4, 5])
+    assert t.done
+    # measured 1200 -> deg 4, realized width {4, 5} + at most the lazily
+    # opened destinations; 112 tokens open exactly the deficit
+    assert chunk.tokens == 112
+    assert set(t.binding()) >= {4, 5}
+    assert t.measured_degree() <= 4
+
+
+def test_streamed_chunks_stay_balanced_across_open_destinations():
+    t = HandoffTask(rid=3, prompt_len=4096, prefix_hit=0, chunk_tokens=256,
+                    page_size=64, prefill_instance=9)
+    while not t.done:
+        t.complete_chunk(BK, [0, 1, 2, 3])
+    loads = sorted(t.dest_tokens.values())
+    assert len(loads) == BK.cp_degree(4096) == 4
+    # least-loaded streaming: spread stays within one chunk of even
+    assert loads[-1] - loads[0] <= 256
+
+
+def test_caller_viability_filter_is_backpressure_not_overflow():
+    t = HandoffTask(rid=4, prompt_len=512, prefix_hit=0, chunk_tokens=256,
+                    page_size=64, prefill_instance=9)
+    _, d0 = t.complete_chunk(BK, [0, 1])
+    # the open destination fell out of the viable list: the chunk must go
+    # to a NEW viable candidate, never overfill the stale one
+    _, d1 = t.complete_chunk(BK, [2])
+    assert d1 == 2 and d1 != d0
+    with pytest.raises(RuntimeError):
+        t.complete_chunk(BK, [0, 1, 2])     # all chunks already streamed
+    t2 = HandoffTask(rid=5, prompt_len=256, prefix_hit=0, chunk_tokens=256,
+                     page_size=64, prefill_instance=9)
+    with pytest.raises(ValueError):
+        t2.complete_chunk(BK, [])           # no viable destination at all
+
+
+def test_survived_tokens_counts_only_landed_kv():
+    t = HandoffTask(rid=6, prompt_len=1000, prefix_hit=128, chunk_tokens=256,
+                    page_size=64, prefill_instance=9, attach=(7,))
+    t.complete_chunk(BK, [0, 1])
+    t.complete_chunk(BK, [0, 1])
+    # crash now: the attach pages + two streamed chunks live on decode
+    # instances; the unstreamed tail is owed to a re-staged task
+    assert t.survived_tokens() == 128 + 512
+    assert t.remaining_tokens == 1000 - 128 - 512
+    assert t.survived_tokens() % 64 == 0    # page-aligned mid-stream
+
+
+# --------------------------------------------------------------------------- #
+# scheduler staging / activation over a real ClusterState
+# --------------------------------------------------------------------------- #
+def _cluster(prefill_cells=2):
+    return ClusterState(num_instances=8, instances_per_node=4,
+                        kv_capacity_tokens=64 * 64, page_size=64,
+                        prefill_cells=prefill_cells)
+
+
+def test_stage_prefill_parks_request_out_of_active():
+    cl = _cluster()
+    sched = DualBalancedScheduler(buckets=BK)
+    req = Request(rid=1, prompt_len=640, max_new_tokens=4)
+    cl.enqueue(req, 0.0)
+    plan = sched.schedule(cl, now=0.0)
+    assert [r.rid for r in plan.staged] == [1]
+    assert not plan.admitted and not cl.active
+    assert req.status == "prefilling" and 1 in cl.prefilling
+    # novel tokens allocated on a dedicated prefill cell (tail instances)
+    shards = cl.page_table.shard_tokens(1)
+    assert set(shards) <= set(cl.prefill_instances())
+    assert sum(shards.values()) == 640
+    # decode planning never sees it
+    assert all(not p.work and not p.slots for p in plan.instances)
+
+
+def test_admit_handoff_binds_measured_not_predicted():
+    cl = _cluster()
+    sched = DualBalancedScheduler(buckets=BK)
+    req = Request(rid=1, prompt_len=640, max_new_tokens=4)
+    cl.enqueue(req, 0.0)
+    sched.schedule(cl, now=0.0)
+    p = next(iter(cl.page_table.shard_tokens(1)))
+    task = HandoffTask(1, 640, 0, 256, 64, p)
+    while not task.done:
+        chunk, dest = task.complete_chunk(
+            BK, sched.handoff_candidates(cl, task, task.next_chunk().tokens))
+        cl.page_table.move_pages(1, [(p, dest, chunk.tokens)])
+    sched.admit_handoff(cl, req, task.binding(), now=1.0)
+    assert req.status == "running" and 1 in cl.active
+    assert 1 not in cl.prefilling
+    # the binding is the realized one: every member actually holds KV,
+    # the MoE binding is a member, and no prefill cell appears in it
+    holders = {s for s, t in cl.page_table.shard_tokens(1).items() if t > 0}
+    assert set(req.kv_binding) >= holders
+    assert req.moe_binding in req.kv_binding
+    assert all(cl.role_of(s) == "decode" for s in req.kv_binding)
+
+
+def test_staging_defers_when_no_cell_has_headroom():
+    sched = DualBalancedScheduler(buckets=BK)
+    cl2 = ClusterState(num_instances=8, instances_per_node=4,
+                       kv_capacity_tokens=64 * 4, page_size=64,
+                       prefill_cells=2)
+    big = Request(rid=3, prompt_len=10_000, max_new_tokens=4)
+    assert sched._try_stage_prefill(cl2, big, 0.0) == "defer"
+    assert 3 not in cl2.prefilling and not cl2.page_table.shard_tokens(3)
+
+
+def test_chunked_prefill_cell_bounds_output_to_chunk():
+    """launch.cells.build_chunked_prefill_cell: the worst-case chunk step
+    lowers with KV output bounded by chunk_tokens (layer-batched tail slab),
+    and the ladder covers the prompt in page-aligned chunks."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import CONFIGS, reduced
+    from repro.configs.base import ShapeCfg
+    from repro.launch import cells
+    from repro import compat
+
+    cfg = reduced(CONFIGS["tinyllama-1.1b"], vocab_size=128)
+    shape = ShapeCfg("prefill_tiny", "prefill", seq_len=320, global_batch=1)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    cell = cells.build_chunked_prefill_cell(cfg, shape, mesh,
+                                            chunk_tokens=cells.PAGE * 2)
+    assert cell.kind == "chunked_prefill"
+    C = cell.meta["chunk_tokens"]
+    assert C == cells.PAGE * 2
+    assert cell.meta["chunk_ends"][-1] == 320
+    assert cell.meta["num_chunks"] == -(-320 // C)
+    for a, b in zip(cell.meta["chunk_ends"], cell.meta["chunk_ends"][1:]):
+        assert b - a <= C and a % cells.PAGE == 0
+    out = jax.eval_shape(cell.fn, *cell.args)
+    assert out["chunk_k"].shape[3] == C          # [na, nb, B, C, H, hd]
+    assert out["chunk_v"].shape[3] == C
+    assert out["last_logits"].shape == (1, cfg.vocab_size)
+    # dry-run safe AND runnable: the worst-case chunk actually lowers
+    cell.fn.lower(jax.eval_shape(
+        lambda: cells.init_params(jax.random.PRNGKey(0), cfg)),
+        {"tokens": jax.ShapeDtypeStruct((1, 320), jnp.int32)})
+
+
+def test_prefill_cell_crash_keeps_streamed_pages():
+    cl = _cluster()
+    sched = DualBalancedScheduler(buckets=BK)
+    req = Request(rid=1, prompt_len=640, max_new_tokens=4)
+    cl.enqueue(req, 0.0)
+    sched.schedule(cl, now=0.0)
+    p = next(iter(cl.page_table.shard_tokens(1)))
+    task = HandoffTask(1, 640, 0, 256, 64, p)
+    chunk, dest = task.complete_chunk(
+        BK, sched.handoff_candidates(cl, task, 256))
+    cl.page_table.move_pages(1, [(p, dest, chunk.tokens)])
+    records = cl.fail_instance(p)
+    assert [rec.req.rid for rec in records] == [1]
+    (rec,) = records
+    assert not rec.slot_lost
+    # the streamed chunk survived on its decode destination; only the
+    # unstreamed tail was lost with the cell
+    assert sum(n for _, n in rec.lost) == 640 - 256
+    assert cl.page_table.shard_tokens(1).get(dest) == 256
+    assert task.survived_tokens() == 256

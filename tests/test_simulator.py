@@ -88,6 +88,98 @@ def test_cp_usage_is_sparse():
     assert multi / total < 0.2
 
 
+# --------------------------------------------------------------------------- #
+# chunked prefill charging + disaggregated cells (PR 9)
+# --------------------------------------------------------------------------- #
+from repro.serving.workload import TraceRequest, Workload  # noqa: E402
+
+
+def _sim(cells=0, **kw):
+    return ClusterSimulator(CFG, DualBalancedScheduler(buckets=BUCKETS),
+                            num_instances=8, instances_per_node=4,
+                            kv_capacity_tokens=600_000, page_size=64,
+                            charge_prefill=True, prefill_cells=cells,
+                            chunk_tokens=4096, **kw)
+
+
+def _long_short_trace():
+    return Workload("pin", [
+        TraceRequest(rid=0, arrival=0.0, prompt_len=200_000,
+                     max_new_tokens=8),
+        TraceRequest(rid=1, arrival=0.0, prompt_len=256, max_new_tokens=8),
+    ])
+
+
+def test_colocated_chunked_prefill_bounds_hol():
+    """The PR 9 bugfix pin: prefill is charged CHUNKED, never as one
+    admission-time lump — a short request admitted beside a 200k-token
+    prompt starts decoding between the long's chunks, so its TTFT stays
+    far below the long's whole prefill forward."""
+    res = _sim().run(_long_short_trace(), horizon=120.0)
+    by = {r.rid: r for r in res.finished}
+    assert by[0].status == by[1].status == "finished"
+    lump = LM.reprefill_time(200_000)
+    ttft_short = by[1].token_times[0] - by[1].arrival
+    assert ttft_short < 0.25 * lump
+    # the long request still pays its full forward before decoding
+    assert by[0].token_times[0] - by[0].arrival > lump
+    # chunk-sum conservation: totals match the old lump up to per-chunk
+    # kernel-launch overhead (reprefill_time is linear in tokens)
+    lump_total = LM.reprefill_time(200_000 - 200_000 % 4096) \
+        + LM.reprefill_time(200_000 % 4096) + LM.reprefill_time(256)
+    assert res.prefill_time == pytest.approx(
+        lump_total, rel=0.02, abs=res.prefill_chunks * 10 * LM.hw.kernel_base)
+    assert res.prefill_chunks == -(-200_000 // 4096) + 1
+
+
+def test_disaggregated_overlaps_decode_with_prefill_tail():
+    """Disaggregated cells: the long prompt streams chunk-by-chunk from a
+    prefill cell while the short request decodes on an undisturbed decode
+    cluster — and the handoff is priced, not free."""
+    dsim = _sim(cells=2)
+    colo = _sim(cells=0).run(_long_short_trace(), horizon=120.0)
+    disagg = dsim.run(_long_short_trace(), horizon=120.0)
+    cby = {r.rid: r for r in colo.finished}
+    dby = {r.rid: r for r in disagg.finished}
+    assert dby[0].status == dby[1].status == "finished"
+    # the short request's TTFT improves strictly: its (single-chunk)
+    # prefill no longer queues behind the long's chunks on the global clock
+    assert dby[1].token_times[0] < cby[1].token_times[0]
+    # the long request's KV landed on decode instances via the handoff
+    assert disagg.staged == 2
+    assert disagg.handoff_tokens == 200_000 + 256
+    assert disagg.handoff_time > 0
+    assert all(dsim.cluster.role_of(s) == "decode"
+               for s in dby[0].kv_binding)
+    # measured-footprint degree: the 200k request realized its bucket
+    # degree by the time it activated
+    assert len(dby[0].kv_binding) >= BUCKETS.cp_degree(200_000)
+
+
+def test_disaggregated_prefill_cell_crash_recovers_partial():
+    """A prefill cell dying mid-stream costs only the unstreamed tail:
+    the request re-stages on the surviving cell and still finishes."""
+    sim = _sim(cells=2)
+    wl = Workload("crash", [TraceRequest(rid=0, arrival=0.0,
+                                         prompt_len=200_000,
+                                         max_new_tokens=8)])
+    # the staging tie-breaks to the lowest-index cell (6 of {6, 7}):
+    # kill exactly that cell halfway through its stream
+    res = sim.run(wl, horizon=240.0,
+                  failure_events=[(0.5 * LM.reprefill_time(200_000), 6)])
+    (req,) = res.finished
+    if req.status == "finished":
+        # partial re-prefill: some tokens survived on decode instances,
+        # the lost tail was replayed (charged as normal chunks)
+        assert res.reprefill_tokens > 0
+        assert res.recovered_tokens + res.reprefill_tokens >= 200_000
+        assert all(sim.cluster.role_of(s) == "decode"
+                   for s in req.kv_binding)
+    else:
+        # no surviving cell could hold the tail: typed outcome, no hang
+        assert req.status == "degraded"
+
+
 def test_workload_interval_shares():
     wl = make_workload("sharegpt4o", rate=200, duration=30, seed=0)
     shares = wl.interval_shares()

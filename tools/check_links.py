@@ -1,0 +1,156 @@
+"""CI docs-link gate: every relative link and anchor must resolve.
+
+The README is being restructured into a thin index over
+``docs/ARCHITECTURE.md``, which makes it load-bearing hypertext: a renamed
+file, a moved section, or a retitled heading silently strands every link
+pointing at it.  This tool walks README.md + docs/**/*.md and FAILS (exit
+1) when any markdown link is dead:
+
+  * a relative path target that does not exist on disk
+    (``[x](docs/ARCHITECTURE.md)``, resolved against the linking file);
+  * an anchor — same-file ``#section`` or cross-file ``path#section`` —
+    that matches no heading in the target file (GitHub heading slugs:
+    lowercase, punctuation stripped, spaces to hyphens, ``-N`` suffixes
+    for duplicates).
+
+External links (``http(s)://``, ``mailto:``) are out of scope — CI must
+not depend on the network — and links inside fenced code blocks are
+ignored (they are examples, not navigation).
+
+Runs as a tier-1 test (tests/test_ci_tools.py) and as its own CI step.
+
+  python tools/check_links.py [FILE_OR_DIR ...]   # default: README.md docs/
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_TARGETS = ("README.md", "docs")
+
+# inline markdown link [text](target); images share the syntax via ![
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")   # http:, mailto:, ...
+
+
+def _strip_fences(text: str) -> list[str]:
+    """Markdown lines with fenced code blocks blanked (links in examples
+    are not navigation and must not fail the gate)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            out.append("")
+        else:
+            out.append("" if in_fence else line)
+    return out
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading: inline code/emphasis markers
+    dropped, lowercased, punctuation removed, spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)      # linked headings
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    """All anchor slugs a file exposes, with GitHub's ``-N`` suffixes for
+    repeated headings."""
+    with open(path, encoding="utf-8") as f:
+        lines = _strip_fences(f.read())
+    slugs: set[str] = set()
+    seen: dict[str, int] = {}
+    for line in lines:
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(path: str):
+    """(line_number, raw_target) for every inline link outside fences."""
+    with open(path, encoding="utf-8") as f:
+        lines = _strip_fences(f.read())
+    for i, line in enumerate(lines, start=1):
+        for m in _LINK.finditer(line):
+            yield i, m.group(1)
+
+
+def check_file(path: str) -> list[str]:
+    problems = []
+    base = os.path.dirname(os.path.abspath(path))
+    rel = os.path.relpath(path, REPO)
+    for ln, raw in iter_links(path):
+        if _EXTERNAL.match(raw):
+            continue
+        target, _, anchor = raw.partition("#")
+        if target:
+            dest = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                problems.append(f"{rel}:{ln}: DEAD LINK {raw!r} "
+                                f"(no such file {os.path.relpath(dest, REPO)})")
+                continue
+        else:
+            dest = os.path.abspath(path)        # same-file anchor
+        if anchor:
+            if not dest.endswith((".md", ".markdown")) or os.path.isdir(dest):
+                continue                        # anchors into code: skip
+            if anchor.lower() not in heading_slugs(dest):
+                problems.append(
+                    f"{rel}:{ln}: DEAD ANCHOR {raw!r} (no heading slugs "
+                    f"to '#{anchor}' in {os.path.relpath(dest, REPO)})")
+    return problems
+
+
+def collect_targets(targets: list[str]) -> list[str]:
+    files = []
+    for t in targets:
+        if os.path.isdir(t):
+            for root, _, names in os.walk(t):
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith((".md", ".markdown"))]
+        elif os.path.exists(t):
+            files.append(t)
+        else:
+            raise SystemExit(f"check_links: no such file or directory: {t}")
+    return files
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("targets", nargs="*",
+                    help="markdown files or directories "
+                         f"(default: {' '.join(DEFAULT_TARGETS)})")
+    args = ap.parse_args(argv)
+    targets = args.targets or [os.path.join(REPO, t)
+                               for t in DEFAULT_TARGETS
+                               if os.path.exists(os.path.join(REPO, t))]
+    files = collect_targets(targets)
+    problems = []
+    n_links = 0
+    for f in files:
+        n_links += sum(1 for _ in iter_links(f))
+        problems += check_file(f)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"check_links: {len(problems)} dead link(s) across "
+              f"{len(files)} file(s)")
+        return 1
+    print(f"check_links: {n_links} links across {len(files)} file(s) — OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
