@@ -53,7 +53,9 @@ DEFAULTS = {
 # the regression ratio inverts (baseline/current), so a DROP fails the gate
 # and an improvement never does.  Prefix match on "file:key".
 HIGHER_IS_BETTER_PREFIXES = ("slo_sweep:", "prefix_cache:hit_rate",
-                             "prefix_cache:saved", "disagg:")
+                             "prefix_cache:saved", "disagg:",
+                             "escalation:quant.fp8.bytes_ratio",
+                             "escalation:quant.int8.bytes_ratio")
 
 # built-in per-metric EXTRA tolerance (prefix of "file:key" -> added ON
 # TOP of the global --tol, so a looser global gate — the nightly's
@@ -109,6 +111,22 @@ def escalation_metrics(rep: dict) -> dict:
     out.update({f"relax.pages{c['pages_reclaimed']}.dispatch.p50":
                 float(c["dispatch"]["p50_us"])
                 for c in rep.get("relax_cells", [])})
+    # quantized-KV payload metrics are ANALYTIC (model geometry x dtype
+    # width + LatencyModel), hence deterministic: the default tolerance
+    # pins them exactly in practice.  bytes_ratio (bf16/quant payload) is
+    # higher-is-better — a drop means the quantized pools stopped saving
+    # bandwidth (see HIGHER_IS_BETTER_PREFIXES).
+    for c in rep.get("cells", [])[:1]:
+        if "bytes_per_token" in c:
+            out["bytes_per_token"] = float(c["bytes_per_token"])
+    for c in rep.get("quant_cells", []):
+        q = f"quant.{c['kv_dtype']}"
+        out[f"{q}.bytes_per_token"] = float(c["bytes_per_token"])
+        out[f"{q}.bytes_ratio"] = float(c["bytes_ratio"])
+        out[f"{q}.pages{c['pages_moved']}.modeled_reshard_us"] = \
+            float(c["modeled_reshard_us"])
+        out[f"{q}.pages{c['pages_moved']}.dispatch.p50"] = \
+            float(c["dispatch"]["p50_us"])
     return out
 
 

@@ -1,13 +1,23 @@
-"""KV re-shard micro-bench: live-migration latency vs pages moved.
+"""KV re-shard micro-bench: live-migration latency + bytes vs pages moved.
 
 Times ``migrate.KVReshard`` — the donated gather->scatter collective behind
 mid-decode CP escalation — on a real multi-device serve state, sweeping the
 number of KV pages moved between two instances.  Dispatch latency (host) and
 completion latency (host + device, ``block_until_ready``) are reported per
 page count; the compile of each padded token bucket is excluded by a warmup
-call.  Emits ``BENCH_escalation.json`` at the repo root (or ``--out``).
+call.  Each cell also records the ANALYTIC payload (``bytes_moved`` /
+``bytes_per_token`` from the LatencyModel at the engine's ``--kv-dtype``)
+and the modeled reshard time — deterministic numbers the regression gate
+can hold tightly, unlike CPU wall clock.
+
+``quant_cells`` re-runs the sweep on an fp8-pool engine (per-page scale
+sidecars travel with the move) and reports its measured dispatch plus the
+analytic bytes at both precisions: the bench itself exits nonzero unless
+the quantized bytes/token is strictly below bf16 (the headline the
+quantized pools exist for); ``check_regression.py`` then pins the ratio.
 
   PYTHONPATH=src python benchmarks/escalation.py [--smoke] [--out PATH]
+      [--kv-dtype bf16|fp8|int8]
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ def _summ(xs):
     }
 
 
-def run_bench(smoke: bool = False) -> dict:
+def run_bench(smoke: bool = False, kv_dtype: str = "bf16") -> dict:
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -40,15 +50,25 @@ def run_bench(smoke: bool = False) -> dict:
     from repro.configs import CONFIGS, reduced
     from repro.models import init_params
     from repro.serving.engine import NanoCPEngine
+    from repro.serving.latency_model import LatencyModel
 
     cfg = reduced(CONFIGS["tinyllama-1.1b"], num_layers=2, vocab_size=256)
     params = jax.tree.map(lambda x: x.astype(jnp.float32),
                           init_params(jax.random.PRNGKey(0), cfg))
     mesh = compat.make_mesh((2, 2), ("data", "model"))
     page = 16
-    eng = NanoCPEngine(cfg, params, mesh, num_instances=2,
-                       instances_per_node=2, kv_capacity_tokens=4096,
-                       page_size=page)
+
+    def build(kv: str) -> NanoCPEngine:
+        return NanoCPEngine(cfg, params, mesh, num_instances=2,
+                            instances_per_node=2, kv_capacity_tokens=4096,
+                            page_size=page, kv_dtype=kv)
+
+    eng = build(kv_dtype)
+    # analytic payload accounting at the engine's KV precision: bytes are
+    # deterministic (model geometry x dtype width), so the regression gate
+    # holds them tightly where wall clock would be noise
+    lm = LatencyModel(cfg, kv_dtype=kv_dtype)
+    bpt = lm.kv_bytes_per_token * lm.num_attn_layers   # all attention layers
 
     def coords(pages: int, direction: int) -> tuple:
         """Move ``pages`` full pages instance 0 -> 1 (or back)."""
@@ -58,29 +78,41 @@ def run_bench(smoke: bool = False) -> dict:
         dst = np.stack([np.full(t, 1 - direction), j // page, j % page])
         return src.astype(np.int32), dst.astype(np.int32)
 
+    def sweep(e: NanoCPEngine, page_counts, reps, model: LatencyModel,
+              tag: str = "") -> list:
+        out = []
+        per_tok = model.kv_bytes_per_token * model.num_attn_layers
+        for pages in page_counts:
+            # warmup: compile this token bucket (excluded from timings)
+            src, dst = coords(pages, 0)
+            e.state = e._reshard(e.state, src, dst)
+            jax.block_until_ready(jax.tree.leaves(e.state))
+            disp, total = [], []
+            for r in range(reps):
+                src, dst = coords(pages, (r + 1) % 2)  # ping-pong directions
+                t0 = time.perf_counter()
+                e.state = e._reshard(e.state, src, dst)
+                t1 = time.perf_counter()
+                jax.block_until_ready(jax.tree.leaves(e.state))
+                t2 = time.perf_counter()
+                disp.append((t1 - t0) * 1e6)
+                total.append((t2 - t0) * 1e6)
+            t = pages * page
+            out.append({"pages_moved": pages, "tokens_moved": t,
+                        "bytes_moved": t * per_tok,
+                        "bytes_per_token": per_tok,
+                        "modeled_reshard_us":
+                            model.kv_reshard_time(t) * 1e6,
+                        "dispatch": _summ(disp), "complete": _summ(total)})
+            print(f"{tag}pages={pages:4d} tokens={t:5d} "
+                  f"bytes={t * per_tok / 1e3:8.1f}kB  "
+                  f"dispatch p50 {out[-1]['dispatch']['p50_us']:8.1f}us  "
+                  f"complete p50 {out[-1]['complete']['p50_us']:8.1f}us")
+        return out
+
     page_counts = [1, 4, 16] if smoke else [1, 2, 4, 8, 16, 32, 64]
     reps = 3 if smoke else 10
-    cells = []
-    for pages in page_counts:
-        # warmup: compile this token bucket (excluded from timings)
-        src, dst = coords(pages, 0)
-        eng.state = eng._reshard(eng.state, src, dst)
-        jax.block_until_ready(jax.tree.leaves(eng.state))
-        disp, total = [], []
-        for r in range(reps):
-            src, dst = coords(pages, (r + 1) % 2)   # ping-pong directions
-            t0 = time.perf_counter()
-            eng.state = eng._reshard(eng.state, src, dst)
-            t1 = time.perf_counter()
-            jax.block_until_ready(jax.tree.leaves(eng.state))
-            t2 = time.perf_counter()
-            disp.append((t1 - t0) * 1e6)
-            total.append((t2 - t0) * 1e6)
-        cells.append({"pages_moved": pages, "tokens_moved": pages * page,
-                      "dispatch": _summ(disp), "complete": _summ(total)})
-        print(f"pages={pages:4d} tokens={pages * page:5d}  "
-              f"dispatch p50 {cells[-1]['dispatch']['p50_us']:8.1f}us  "
-              f"complete p50 {cells[-1]['complete']['p50_us']:8.1f}us")
+    cells = sweep(eng, page_counts, reps, lm)
 
     # ---- relax cells: reshard-BACK latency vs pages reclaimed, through
     # the real scheduler relax planner (de-escalation of a 2-wide binding
@@ -115,29 +147,57 @@ def run_bench(smoke: bool = False) -> dict:
             cl.active.pop(rid)
             cl.page_table.free_request(rid)
         relax_cells.append({"pages_reclaimed": pages, "tokens_moved": t,
+                            "bytes_moved": t * bpt,
                             "dispatch": _summ(disp),
                             "complete": _summ(total)})
         print(f"relax pages={pages:4d} tokens={t:5d}  "
               f"dispatch p50 {relax_cells[-1]['dispatch']['p50_us']:8.1f}us  "
               f"complete p50 {relax_cells[-1]['complete']['p50_us']:8.1f}us")
+
+    # ---- quantized reshard cells: the same sweep on an fp8-pool engine
+    # (KVReshard dequants with source page scales, requants at the
+    # destination — the scale sidecars ride the same donated collective).
+    # The cells carry the analytic bytes at BOTH precisions; the bench
+    # self-gates on the headline (quantized payload strictly below bf16).
+    qdt = kv_dtype if kv_dtype != "bf16" else "fp8"
+    lm_q = LatencyModel(cfg, kv_dtype=qdt)
+    lm_bf = LatencyModel(cfg, kv_dtype="bf16")
+    q_eng = eng if kv_dtype == qdt else build(qdt)
+    quant_cells = sweep(q_eng, page_counts, reps, lm_q, tag=f"{qdt} ")
+    bf_bpt = lm_bf.kv_bytes_per_token * lm_bf.num_attn_layers
+    for c in quant_cells:
+        c["kv_dtype"] = qdt
+        c["bf16_bytes_per_token"] = bf_bpt
+        c["bytes_ratio"] = bf_bpt / c["bytes_per_token"]
+        assert c["bytes_per_token"] < bf_bpt, (
+            "quantized KV must move fewer bytes per token than bf16",
+            qdt, c["bytes_per_token"], bf_bpt)
+    print(f"quant[{qdt}]: bytes/token {quant_cells[0]['bytes_per_token']:.0f} "
+          f"vs bf16 {bf_bpt:.0f} (x{quant_cells[0]['bytes_ratio']:.2f})")
     return {
         "bench": "kv_reshard_latency_vs_pages",
         "arch": "tinyllama-1.1b(reduced nl=2)",
         "topology": {"instances": 2, "tp": 2, "page_size": page},
+        "kv_dtype": kv_dtype,
         "smoke": smoke,
         "cells": cells,
         "relax_cells": relax_cells,
+        "quant_cells": quant_cells,
     }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "fp8", "int8"),
+                    help="KV pool precision of the MAIN sweep's engine "
+                         "(the quant cells always run a quantized engine)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_escalation.json"))
     args = ap.parse_args()
-    out = run_bench(smoke=args.smoke)
+    out = run_bench(smoke=args.smoke, kv_dtype=args.kv_dtype)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

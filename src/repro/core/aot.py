@@ -61,11 +61,17 @@ class AOTGraphEngine:
     def __init__(self, step_builder, mb_grid=(8, 16, 32, 64, 128, 256, 512,
                                               1024, 2048, 4096, 8192),
                  audit_every_step: bool = False,
-                 r_ladder: tuple | None = None):
+                 r_ladder: tuple | None = None,
+                 key_tag: str | None = None):
         self._builder = step_builder
         self._mb_grid = mb_grid
         self._cache: dict = {}
         self.stats = AOTStats()
+        # opaque suffix appended to every bucket key (e.g. the engine's
+        # kv_dtype for quantized pools): variants that lower different
+        # state dtypes must never share an executable.  None (the default)
+        # keeps keys exactly as before — bf16 engines are unaffected.
+        self.key_tag = key_tag
         # debug mode: audit donation on EVERY step instead of sampling the
         # warmup ones.  Cheap on accelerator backends where
         # ``unsafe_buffer_pointer`` is a metadata read; catches a
@@ -92,11 +98,15 @@ class AOTGraphEngine:
         full ring W-1: a step whose bindings stay within a few ring
         positions compiles with that many ppermute rounds instead of the
         whole cluster ring (W < I multi-node topologies keep the ring
-        cluster-wide, so this is what bounds the collectives per step)."""
+        cluster-wide, so this is what bounds the collectives per step).
+
+        When ``key_tag`` is set it is appended AFTER the R component, so
+        builders unpack the shape dims as ``key[:5]`` regardless of tag."""
         from .routing import _quantize_dim
+        tag = () if self.key_tag is None else (self.key_tag,)
         key = (M, S, _quantize_dim(MB), W)
         if R is None:
-            return key
+            return key + tag
         if S == 0:
             rq = 0
         elif self.r_ladder is not None:
@@ -105,7 +115,7 @@ class AOTGraphEngine:
             rq = min(rq, W - 1)
         else:
             rq = min(_round_pow2(max(R, 1)), W - 1)
-        return key + (rq,)
+        return key + (rq,) + tag
 
     # ---------------- offline capture (Alg. 2 l.7-17) ----------------
     def capture(self, keys) -> None:

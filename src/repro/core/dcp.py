@@ -37,7 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
 from ..configs.base import ModelConfig
-from ..kernels import ops, ref
+from ..kernels import ops, quant, ref
 from ..models import layers as L
 from . import comm
 from .moe_parallel import dense_decode_ffn, moe_decode_ffn
@@ -70,6 +70,11 @@ class DecodeDims:
                                      # treated as inactive — its KV append is
                                      # redirected to the scratch frame and
                                      # its sampled token comes back as -1
+    kv_dtype: str = "bf16"           # paged-KV pool storage format
+                                     # (kernels/quant.py): "bf16" keeps the
+                                     # model dtype (bit-identical legacy
+                                     # path); "fp8"/"int8" store quantized
+                                     # pools + per-page scale sidecars
 
     @property
     def num_rounds(self) -> int:
@@ -281,15 +286,28 @@ def init_serve_state(cfg: ModelConfig, dims: DecodeDims, num_instances: int,
         _, khs, ps = attn_tp_geometry(cfg, dims.tp)
         kg = kv_group_size(cfg, dims.tp)
         fp = -(-(dims.num_frames - 1) // ps) + 1     # frames/stripe + scratch
+        # quantized pools (dims.kv_dtype fp8/int8) store a narrow dtype plus
+        # a per-page f32 scale sidecar [nb, n_attn, I, tp, F'] that travels
+        # with the pools through every donated step / movement collective.
+        # Scales init to 1.0 (any positive value works: a frame is always
+        # refilled from offset 0 before it is read — the offset-0 rule,
+        # kernels/quant.py).
+        pdt = quant.kv_storage_dtype(dims.kv_dtype, dtype)
+        sc_shape = (nb, n_attn, I, dims.tp, fp)
         if cfg.is_mla:
             dk = cfg.kv_lora_rank + cfg.qk_rope_head_dim
             state["kv_pool"] = jnp.zeros(
-                (nb, n_attn, I, dims.tp, fp, dims.page, dk), dtype)
+                (nb, n_attn, I, dims.tp, fp, dims.page, dk), pdt)
+            if quant.is_quantized(dims.kv_dtype):
+                state["kv_scale"] = jnp.ones(sc_shape, jnp.float32)
         else:
             # last dim kg*hd: each model chunk stores its kv-head GROUP
             state["k_pool"] = jnp.zeros(
-                (nb, n_attn, I, dims.tp, fp, dims.page, kg * hd), dtype)
+                (nb, n_attn, I, dims.tp, fp, dims.page, kg * hd), pdt)
             state["v_pool"] = jnp.zeros_like(state["k_pool"])
+            if quant.is_quantized(dims.kv_dtype):
+                state["k_scale"] = jnp.ones(sc_shape, jnp.float32)
+                state["v_scale"] = jnp.ones(sc_shape, jnp.float32)
     if n_ssm:
         din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
         cw = cfg.ssm_conv_width
@@ -371,7 +389,7 @@ def _split_pages(bt, length, ps, p_j, mbt, page):
 
 
 def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
-                   tbl, *, dk, dv, geom):
+                   tbl, *, dk, dv, geom, k_scale=None, v_scale=None):
     """Phases 1-4 for one attention layer (per device).
 
     q: [M, hl, dk] local-slot queries.  k_pool/v_pool: [F', page, kg*(dk|dv)]
@@ -381,7 +399,11 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
     new_k/new_v: [M, kg*(dk|dv)] this step's token KV for the device's kv
     heads (written at append_frame/off iff the frame's stripe is p_j), or
     new_k=None for read-only pools (whisper cross-attention).
-    Returns merged [M, hl, dv], updated (k_pool, v_pool).
+    k_scale/v_scale: per-page dequant scales [F'] f32 iff the pool is
+    quantized (dims.kv_dtype fp8/int8); appends quantize into them under
+    the offset-0 rule (kernels/quant.py) and the paged kernel dequants
+    with them.  MLA passes its single kv_scale as k_scale.
+    Returns merged [M, hl, dv], updated (k_pool, v_pool, k_scale, v_scale).
     """
     M, S, N, W = dims.M, dims.S, dims.N, dims.W
     R = dims.num_rounds
@@ -404,9 +426,30 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
         mine = act & ((af_g % ps) == p_j) if ps > 1 else act
         af = jnp.where(mine, af_g // ps, Fp - 1)               # [M]
         ao = jnp.where(mine, tbl["append_off"][0], jnp.arange(M) % page)
-        k_pool = k_pool.at[af, ao].set(new_k.astype(k_pool.dtype))
-        if v_pool is not None:
-            v_pool = v_pool.at[af, ao].set(new_v.astype(v_pool.dtype))
+        if k_scale is None:
+            k_pool = k_pool.at[af, ao].set(new_k.astype(k_pool.dtype))
+            if v_pool is not None:
+                v_pool = v_pool.at[af, ao].set(new_v.astype(v_pool.dtype))
+        else:
+            # offset-0 rule: an append landing at page offset 0 starts a
+            # fresh page, so it RESETS that page's scale to this token's
+            # amax/qmax; appends at later offsets CLIP into the page's
+            # existing scale (already-stored tokens are never re-scaled).
+            # Distinct active slots never share an append frame; duplicate
+            # scatter rows only hit the scratch frame (garbage anyway).
+            ks_eff = jnp.where(ao == 0,
+                               quant.amax_scale(new_k, dims.kv_dtype),
+                               k_scale[af])
+            k_pool = k_pool.at[af, ao].set(
+                quant.quantize(new_k, ks_eff[:, None], dims.kv_dtype))
+            k_scale = k_scale.at[af].set(ks_eff)
+            if v_pool is not None:
+                vs_eff = jnp.where(ao == 0,
+                                   quant.amax_scale(new_v, dims.kv_dtype),
+                                   v_scale[af])
+                v_pool = v_pool.at[af, ao].set(
+                    quant.quantize(new_v, vs_eff[:, None], dims.kv_dtype))
+                v_scale = v_scale.at[af].set(vs_eff)
 
     # -- Phase 1: Q-routing --
     if dims.backend == "dense" and R > 0:
@@ -450,7 +493,11 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
     out, lse = ops.paged_decode_attention(
         q_work, kp, vp, bt_dev, len_dev,
         scale=dk ** -0.5 if cfg.attention != "mla" else
-        (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5)
+        (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5,
+        # fused dequant: per-page scales follow the same local frame ids as
+        # the sub-pool; MLA's shared latent pool reuses k_scale for v.
+        k_scale=k_scale,
+        v_scale=(v_scale if v_pool is not None else k_scale))
     if ps > 1:
         # merge the stripe partials within the subgroup, slice back to hl
         g_o = jax.lax.all_gather(out, dims.model, axis=0,
@@ -476,7 +523,7 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
         parts = g_out[owner, jnp.maximum(row, 0)].transpose(1, 0, 2, 3)
         plse = g_lse[owner, jnp.maximum(row, 0)].transpose(1, 0, 2)
         merged, _ = ref.merge_lse(parts, plse, mask=mask.T)
-        return merged, k_pool, v_pool
+        return merged, k_pool, v_pool, k_scale, v_scale
     if R > 0:
         ret_o = comm.route_rounds(
             lambda d, idx: comm.gather_rows(out, idx),
@@ -498,11 +545,15 @@ def _dcp_attention(cfg, dims: DecodeDims, q, k_pool, v_pool, new_k, new_v,
     plse = l_pool[jnp.maximum(msrc.reshape(-1), 0)].reshape(
         M, W, -1).transpose(1, 0, 2)                                # [W, M, Hl]
     merged, _ = ref.merge_lse(parts, plse, mask=(msrc.T >= 0))
-    return merged, k_pool, v_pool
+    return merged, k_pool, v_pool, k_scale, v_scale
 
 
 def _attn_layer(cfg, dims, lp, x, pos, pools, tbl, hl, geom):
-    """One GQA/MLA attention layer (per device). pools = (k_pool, v_pool)."""
+    """One GQA/MLA attention layer (per device).
+
+    pools = (k_pool, v_pool, k_scale, v_scale); the scale entries are None
+    for bf16 pools (MLA: (kv_pool, None, kv_scale, None)).
+    """
     hd = cfg.head_dim_
     h = L.apply_norm(cfg, lp["ln1"], x)
     M = dims.M
@@ -525,12 +576,13 @@ def _attn_layer(cfg, dims, lp, x, pos, pools, tbl, hl, geom):
         k_rope = L.apply_rope(kv[..., kvr:][:, None, :], pos,
                               cfg.rope_theta)[:, 0, :]
         new_k = jnp.concatenate([c_kv, k_rope], axis=-1)           # [M, kvr+dr]
-        merged, kp, _ = _dcp_attention(cfg, dims, q, pools[0], None,
-                                       new_k, None, tbl, dk=kvr + dr, dv=kvr,
-                                       geom=geom)
+        merged, kp, _, ksc, _ = _dcp_attention(cfg, dims, q, pools[0], None,
+                                               new_k, None, tbl, dk=kvr + dr,
+                                               dv=kvr, geom=geom,
+                                               k_scale=pools[2])
         o = jnp.einsum("mhk,hkd->mhd", merged, mx["wv_b"])         # [M,hl,dv]
         o = o.reshape(M, hl * dv) @ lp["mixer"]["wo"]
-        return jax.lax.psum(o, dims.model), (kp, None)
+        return jax.lax.psum(o, dims.model), (kp, None, ksc, None)
     mx = lp["mixer"]
     kg = kv_group_size(cfg, dims.tp)
     q = h @ mx["wq"]
@@ -547,10 +599,12 @@ def _attn_layer(cfg, dims, lp, x, pos, pools, tbl, hl, geom):
         k = L.rms_norm_vec(k, mx["k_norm"])
     q = L.apply_rope(q, pos, cfg.rope_theta)
     k = L.apply_rope(k, pos, cfg.rope_theta).reshape(M, kg * hd)
-    merged, kp, vp = _dcp_attention(cfg, dims, q, pools[0], pools[1],
-                                    k, v, tbl, dk=hd, dv=hd, geom=geom)
+    merged, kp, vp, ksc, vsc = _dcp_attention(cfg, dims, q, pools[0], pools[1],
+                                              k, v, tbl, dk=hd, dv=hd,
+                                              geom=geom, k_scale=pools[2],
+                                              v_scale=pools[3])
     o = merged.reshape(M, hl * hd) @ mx["wo"]
-    return jax.lax.psum(o, dims.model), (kp, vp)
+    return jax.lax.psum(o, dims.model), (kp, vp, ksc, vsc)
 
 
 def _ssm_layer(cfg, dims, lp, x, sstate):
@@ -608,6 +662,7 @@ def build_decode_step(cfg: ModelConfig, dims: DecodeDims):
     hp = geom[0]
     hl = hp // dims.tp if hp else 0
     vs_local = cfg.padded_vocab // dims.tp
+    quantized = quant.is_quantized(dims.kv_dtype)
 
     def step(params, state, tbl):
         tokens = tbl["slot_token"][0]                              # [M]
@@ -636,19 +691,34 @@ def build_decode_step(cfg: ModelConfig, dims: DecodeDims):
                 lp = bp["layers"][li]
                 if kind["mixer"] == "attn":
                     # per-device sub-pool: [ai, I=0, tp=0, F', page, dk]
+                    # (scale sidecars [ai, I=0, tp=0, F'] when quantized)
                     if cfg.is_mla:
-                        pools = (blk["kv_pool"][ai, 0, 0], None)
+                        pools = (blk["kv_pool"][ai, 0, 0], None,
+                                 blk["kv_scale"][ai, 0, 0] if quantized
+                                 else None, None)
                     else:
                         pools = (blk["k_pool"][ai, 0, 0],
-                                 blk["v_pool"][ai, 0, 0])
+                                 blk["v_pool"][ai, 0, 0],
+                                 blk["k_scale"][ai, 0, 0] if quantized
+                                 else None,
+                                 blk["v_scale"][ai, 0, 0] if quantized
+                                 else None)
                     mix, pools_out = _attn_layer(cfg, dims, lp, x, pos,
                                                  pools, tbl, hl, geom)
                     if cfg.is_mla:
                         upd.setdefault("kv_pool", []).append(
                             pools_out[0][None])
+                        if quantized:
+                            upd.setdefault("kv_scale", []).append(
+                                pools_out[2][None])
                     else:
                         upd.setdefault("k_pool", []).append(pools_out[0][None])
                         upd.setdefault("v_pool", []).append(pools_out[1][None])
+                        if quantized:
+                            upd.setdefault("k_scale", []).append(
+                                pools_out[2][None])
+                            upd.setdefault("v_scale", []).append(
+                                pools_out[3][None])
                     ai += 1
                 else:
                     sstate = (blk["conv_x"][si, 0], blk["conv_B"][si, 0],
@@ -771,11 +841,11 @@ def build_encdec_decode_step(cfg: ModelConfig, dims: DecodeDims):
             if cfg.qkv_bias:
                 q = q + mx["bq"].astype(q.dtype)
             q = q.reshape(M, hl, hd)
-            merged, _, _ = _dcp_attention(cfg, dims, q,
-                                          blk["cross_k_pool"][0, 0],
-                                          blk["cross_v_pool"][0, 0],
-                                          None, None, tbl, dk=hd, dv=hd,
-                                          geom=geom)
+            merged, _, _, _, _ = _dcp_attention(cfg, dims, q,
+                                                blk["cross_k_pool"][0, 0],
+                                                blk["cross_v_pool"][0, 0],
+                                                None, None, tbl, dk=hd, dv=hd,
+                                                geom=geom)
             o = merged.reshape(M, hl * hd) @ mx["wo"]
             x = x + jax.lax.psum(o, dims.model)
             h = L.apply_norm(cfg, lp["ln2"], x)
@@ -945,6 +1015,9 @@ def serve_state_specs(cfg: ModelConfig, state, *, data="data", model="model",
         if k in ("k_pool", "v_pool", "kv_pool"):
             # [nb, n_attn, I, tp, F', page, (dk|hd)]
             specs[k] = P(None, None, da, model, None, None, None)
+        elif k in ("k_scale", "v_scale", "kv_scale"):
+            # per-page dequant scales: [nb, n_attn, I, tp, F']
+            specs[k] = P(None, None, da, model, None)
         elif k in ("conv_x",):
             specs[k] = P(None, None, da, None, None, model)
         elif k in ("conv_B", "conv_C"):

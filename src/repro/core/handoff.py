@@ -20,6 +20,14 @@ tokens to open extra destinations.  A prefill-cell crash truncates the
 stream the same way: only what landed counts (``survived_tokens`` seeds the
 partial re-prefill).
 
+Quantized pools need no extra plumbing here: the physical write of every
+streamed chunk is the engine's fused ``PrefillScatter`` (quantize-on-
+scatter — page scales are derived at landing, offset-0 resets / offset>0
+clips into the page's existing scale), and the page moves go through
+``GlobalPageTable.move_pages``, whose scale ledger clones the source
+frames' entries onto the destination.  Chunk plans themselves are
+precision-blind.
+
 Everything here is host-side bookkeeping (pure, deterministic) — pinned by
 ``tests/test_handoff.py``; the physical transfer lives in the engine and
 the priced transfer in the simulator.

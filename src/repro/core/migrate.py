@@ -198,28 +198,70 @@ class PrefillScatter:
         return jnp.asarray(np.concatenate([coords, pad], axis=1))
 
     # -- attention KV ------------------------------------------------------
+    def _quantized_scatter(self, pool, sc, x, ii, c, ff, oo, off):
+        """Scatter ``x`` into a quantized pool + its per-page scale sidecar.
+
+        Implements the offset-0 rule (kernels/quant.py) in one fused body:
+        pages receiving an offset-0 token in THIS call get a fresh scale =
+        the scatter-max of the call's per-token amax/qmax for that page;
+        every other written page keeps its scale and the new tokens clip
+        into it.  Pad rows (instance = I) drop from both scatters.
+        """
+        import jax.numpy as jnp
+        from ..kernels import quant
+        kv_dtype = self.dims.kv_dtype
+        tok = quant.amax_scale(x, kv_dtype)                  # [nb,na,T,khs]
+        fresh = jnp.zeros_like(sc).at[:, :, ii, c, ff].max(tok, mode="drop")
+        has0 = (jnp.zeros(sc.shape[2:], jnp.int32).at[ii, c, ff].max(
+            jnp.broadcast_to((off == 0)[:, None].astype(jnp.int32), c.shape),
+            mode="drop") > 0)
+        sc_new = jnp.where(has0[None, None],
+                           jnp.maximum(fresh, quant.SCALE_FLOOR), sc)
+        s_eff = sc_new[:, :, ii, c, ff]                      # [nb,na,T,khs]
+        pool_new = pool.at[:, :, ii, c, ff, oo].set(
+            quant.quantize(x, s_eff[..., None], kv_dtype), mode="drop")
+        return pool_new, sc_new
+
     def _kv_body(self, state, k, v, inst, stripe, subf, off):
         khs = self.khs
         import jax.numpy as jnp
+        from ..kernels import quant
         c = stripe[:, None] * khs + jnp.arange(khs, dtype=jnp.int32)
         ii, ff, oo = inst[:, None], subf[:, None], off[:, None]
+        quantized = quant.is_quantized(self.dims.kv_dtype)
         state = dict(state)
         if self.cfg.is_mla:
             kp = state["kv_pool"]
-            state["kv_pool"] = kp.at[:, :, ii, c, ff, oo].set(
-                k.astype(kp.dtype), mode="drop")
+            if quantized:
+                state["kv_pool"], state["kv_scale"] = self._quantized_scatter(
+                    kp, state["kv_scale"], k, ii, c, ff, oo, off)
+            else:
+                state["kv_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                    k.astype(kp.dtype), mode="drop")
         else:
             kp, vp = state["k_pool"], state["v_pool"]
-            state["k_pool"] = kp.at[:, :, ii, c, ff, oo].set(
-                k.astype(kp.dtype), mode="drop")
-            state["v_pool"] = vp.at[:, :, ii, c, ff, oo].set(
-                v.astype(vp.dtype), mode="drop")
+            if quantized:
+                state["k_pool"], state["k_scale"] = self._quantized_scatter(
+                    kp, state["k_scale"], k, ii, c, ff, oo, off)
+                state["v_pool"], state["v_scale"] = self._quantized_scatter(
+                    vp, state["v_scale"], v, ii, c, ff, oo, off)
+            else:
+                state["k_pool"] = kp.at[:, :, ii, c, ff, oo].set(
+                    k.astype(kp.dtype), mode="drop")
+                state["v_pool"] = vp.at[:, :, ii, c, ff, oo].set(
+                    v.astype(vp.dtype), mode="drop")
         return state
 
     def scatter_kv(self, state: dict, k, v, coords: np.ndarray) -> dict:
         """k (and v for non-MLA): [nb, na, T, khs, kg*d] device arrays (the
         Hkv head axis reshaped to khs groups of kg heads); coords from
-        ``prefill_coords`` (concatenated over the admitted batch)."""
+        ``prefill_coords`` (concatenated over the admitted batch).
+
+        Quantized pools (dims.kv_dtype fp8/int8): the quantize step is FUSED
+        into the scatter — full-precision prefill KV quantizes against the
+        per-page scales derived in the same donated call (offset-0 rule), so
+        unquantized KV never lands in the pool and the scale sidecar updates
+        atomically with the pages it describes."""
         tb = self._bucket(k.shape[2])
         k = self._pad_to(k, 2, tb)
         v = self._pad_to(v, 2, tb)
@@ -332,6 +374,7 @@ class KVReshard:
 
     def _body(self, state, src, dst):
         import jax.numpy as jnp
+        from ..kernels import quant
         khs, ps = self.sc.khs, self.sc.ps
         hh = jnp.arange(khs, dtype=jnp.int32)
         si, sf, so = src[0][:, None], src[1], src[2][:, None]
@@ -339,12 +382,40 @@ class KVReshard:
         c_s = (sf % ps)[:, None] * khs + hh
         c_d = (df % ps)[:, None] * khs + hh
         fs, fd = (sf // ps)[:, None], (df // ps)[:, None]
-        keys = ("kv_pool",) if self.sc.cfg.is_mla else ("k_pool", "v_pool")
+        kv_dtype = self.sc.dims.kv_dtype
         state = dict(state)
-        for key in keys:
-            p = state[key]
-            vals = p[:, :, si, c_s, fs, so]          # [nb, na, T, khs, d]
-            state[key] = p.at[:, :, di, c_d, fd, do].set(vals, mode="drop")
+        if not quant.is_quantized(kv_dtype):
+            keys = ("kv_pool",) if self.sc.cfg.is_mla else ("k_pool", "v_pool")
+            for key in keys:
+                p = state[key]
+                vals = p[:, :, si, c_s, fs, so]      # [nb, na, T, khs, d]
+                state[key] = p.at[:, :, di, c_d, fd, do].set(vals, mode="drop")
+            return state
+        # Quantized pools: scales travel with the re-shard.  Gather the moved
+        # tokens and DEQUANT with their source page scales (pre-move values),
+        # then REQUANT against the destination pages — fresh dst pages
+        # (receiving an offset-0 token in this batch) get a new scale from
+        # the moved tokens' scatter-max; partially-filled dst pages keep
+        # their scale and the arrivals clip into it (offset-0 rule).  No
+        # step ever mixes a value with another page's scale.
+        pairs = ((("kv_pool", "kv_scale"),) if self.sc.cfg.is_mla
+                 else (("k_pool", "k_scale"), ("v_pool", "v_scale")))
+        for key, skey in pairs:
+            p, sc = state[key], state[skey]
+            vals = quant.dequantize(p[:, :, si, c_s, fs, so],
+                                    sc[:, :, si, c_s, fs][..., None])
+            tok = quant.amax_scale(vals, kv_dtype)           # [nb,na,T,khs]
+            fresh = jnp.zeros_like(sc).at[:, :, di, c_d, fd].max(
+                tok, mode="drop")
+            has0 = (jnp.zeros(sc.shape[2:], jnp.int32).at[di, c_d, fd].max(
+                jnp.broadcast_to((dst[2] == 0)[:, None].astype(jnp.int32),
+                                 c_d.shape), mode="drop") > 0)
+            sc_new = jnp.where(has0[None, None],
+                               jnp.maximum(fresh, quant.SCALE_FLOOR), sc)
+            s_eff = sc_new[:, :, di, c_d, fd]
+            state[key] = p.at[:, :, di, c_d, fd, do].set(
+                quant.quantize(vals, s_eff[..., None], kv_dtype), mode="drop")
+            state[skey] = sc_new
         return state
 
     def __call__(self, state: dict, src: np.ndarray, dst: np.ndarray) -> dict:

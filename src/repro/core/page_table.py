@@ -29,6 +29,10 @@ import numpy as np
 # sentinel owner id for the global prefix cache's own holds (rids are >= 0)
 CACHE_OWNER = -1
 
+# sentinel scale for a frame whose per-page quant scale is device-derived and
+# not (yet) mirrored to the host ledger (real scales are strictly positive)
+SCALE_PENDING = -1.0
+
 
 class KVSpillError(MemoryError):
     """Mid-decode KV growth overran its shard: request ``rid`` needs a new
@@ -132,6 +136,17 @@ class GlobalPageTable:
     # cache holds.  THE refcount ledger — a frame is live iff it has an
     # entry, and returns to its pool exactly when the set empties.
     _owners: dict = field(default_factory=dict)
+    # (instance, frame) -> per-page quant scale (kernels/quant.py sidecar).
+    # LIFECYCLE ledger, not the numeric truth: the device scale arrays in
+    # the serve state are authoritative (scales are derived and consumed
+    # inside the fused scatter/reshard bodies and never round-trip to the
+    # host on the hot path), so most entries hold SCALE_PENDING.  The
+    # ledger exists so frame lifecycle stays auditable — an entry is
+    # created with the claim, cloned by CoW/fork, max-propagated by
+    # move_pages, and dropped with the last release; ``frame_audit``
+    # asserts it stays in lockstep with ``_owners``.  Always maintained
+    # (bf16 engines too): the bookkeeping is dtype-independent.
+    _frame_scale: dict = field(default_factory=dict)
     # monotone counter: copy-on-write splits performed (divergent appends,
     # shared-tail moves, forks) — the accounting surface for layer 4
     cow_splits: int = 0
@@ -144,6 +159,7 @@ class GlobalPageTable:
     # ---------------- frame ownership (refcounts) ----------------
     def _claim(self, owner: int, instance: int, frame: int) -> None:
         self._owners.setdefault((instance, frame), set()).add(owner)
+        self._frame_scale.setdefault((instance, frame), SCALE_PENDING)
 
     def _release(self, owner: int, instance: int, frame: int) -> bool:
         """Drop ``owner``'s claim; the frame returns to the pool only when
@@ -155,8 +171,26 @@ class GlobalPageTable:
         if own:
             return False
         del self._owners[key]
+        self._frame_scale.pop(key, None)
         self.pools[instance].free([frame])
         return True
+
+    # ---------------- per-frame quant scales (lifecycle ledger) ----------
+    def set_frame_scale(self, instance: int, frame: int, scale: float) -> None:
+        """Mirror a device-derived per-page quant scale into the ledger
+        (tests/tools; the hot path leaves entries SCALE_PENDING).  The frame
+        must be live."""
+        key = (instance, frame)
+        assert key in self._owners, ("scale for an unowned frame", key)
+        assert scale > 0, ("frame scales are strictly positive", key, scale)
+        self._frame_scale[key] = float(scale)
+
+    def frame_scale(self, instance: int, frame: int) -> float:
+        """The ledger's scale for a live frame (SCALE_PENDING when only the
+        device arrays know it)."""
+        key = (instance, frame)
+        assert key in self._owners, ("scale of an unowned frame", key)
+        return self._frame_scale[key]
 
     def frame_refcount(self, instance: int, frame: int) -> int:
         return len(self._owners.get((instance, frame), ()))
@@ -397,6 +431,10 @@ class GlobalPageTable:
             pos = np.arange(used_s - n, used_s)
             s_cols.append(np.stack([np.full(n, src),
                                     np.asarray(fs)[pos // page], pos % page]))
+            # contributor frames for the scale ledger: the src frames whose
+            # tokens land in newly-allocated dst frames below
+            src_scales = [self._frame_scale.get((src, f), SCALE_PENDING)
+                          for f in {int(x) for x in np.asarray(fs)[pos // page]}]
             # destination: extend the shard's fill (allocate frames as needed)
             used_d = shard_fill.get(dst, 0)
             fd = by_shard.setdefault(dst, [])
@@ -412,8 +450,15 @@ class GlobalPageTable:
                 if self.pools[dst].free_frames < need:
                     raise KVSpillError(rid, dst)
                 new = self.pools[dst].alloc(need)
+                # dst frames requantize with a scale covering every
+                # contributing src page (the device body's offset-0 rule);
+                # the ledger mirrors that as the max of the KNOWN src
+                # scales, or stays PENDING when none were mirrored
+                known = [v for v in src_scales if v > 0]
+                val = max(known) if known else SCALE_PENDING
                 for f in new:
                     self._claim(rid, dst, f)
+                    self._frame_scale[(dst, f)] = val
                 self._pages[rid].extend((dst, f) for f in new)
                 fd.extend(new)
             dpos = np.arange(used_d, used_d + n)
@@ -490,6 +535,10 @@ class GlobalPageTable:
             raise KVSpillError(rid, instance)
         clone = self.pools[instance].alloc(1)[0]
         self._claim(rid, instance, clone)
+        # the clone is a bit-copy of the shared frame, so it inherits the
+        # frame's quant scale verbatim (read before rid's claim is released)
+        self._frame_scale[(instance, clone)] = self._frame_scale.get(
+            (instance, frame), SCALE_PENDING)
         used = self._last_fill[rid].get(instance, 0)
         lo = idx * self.page_size
         n = min(used, lo + self.page_size) - lo
@@ -563,6 +612,9 @@ class GlobalPageTable:
             if s in tails:
                 clone = self.pools[s].alloc(1)[0]
                 self._claim(child, s, clone)
+                # bit-copy of the parent's tail -> same quant scale
+                self._frame_scale[(s, clone)] = self._frame_scale.get(
+                    (s, tails[s]), SCALE_PENDING)
                 n = used - (len(frames) - 1) * page
                 off = np.arange(n)
                 s_cols.append(np.stack([np.full(n, s),
@@ -685,6 +737,15 @@ class GlobalPageTable:
             assert (s, f) in mapped or own == {CACHE_OWNER}, (
                 "owned frame mapped by no request", s, f, own)
             held[s] += 1
+        # scale/ownership lockstep: every live frame has exactly one scale
+        # entry (PENDING or a real positive scale) and no freed frame keeps
+        # a stale one — a mismatch means a movement path dropped or leaked
+        # the quant sidecar
+        assert set(self._frame_scale) == set(self._owners), (
+            "scale ledger out of sync with frame ownership",
+            set(self._frame_scale) ^ set(self._owners))
+        for key, v in self._frame_scale.items():
+            assert v == SCALE_PENDING or v > 0, ("illegal frame scale", key, v)
         return {s: (self.pools[s].free_frames, held[s])
                 for s in range(self.num_instances)}
 
@@ -769,6 +830,8 @@ class GlobalPageTable:
         # the aliasing guard.
         self._owners = {(s, f): own for (s, f), own in self._owners.items()
                         if s != instance}
+        self._frame_scale = {(s, f): v for (s, f), v in
+                             self._frame_scale.items() if s != instance}
         self._used[instance] = 0
         # drained: nothing allocates there until join_instance brings it back
         self._fresh_pool(instance, drained=True)

@@ -132,7 +132,13 @@ def _flash_fwd(q, k, v, scale, causal, q_offset, kv_len, interpret,
 # --------------------------------------------------------------------------- #
 def flash_backward(q, k, v, o, lse, do, *, scale, causal, q_offset=0,
                    kv_len=None, bk=DEFAULT_BK):
-    """Block-scanned attention backward; returns (dq, dk, dv) in input dtypes."""
+    """Block-scanned attention backward; returns (dq, dk, dv) in input dtypes.
+
+    q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D(v)] (GQA grads sum over the group);
+    o/do [B, Sq, Hq, Dv]; lse [B, Hq, Sq] f32 from the forward.  Requires
+    Skv divisible by ``bk``.  Pinned (through the custom_vjp) by
+    tests/test_kernels.py::test_flash_gradients_vs_oracle.
+    """
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     bk = min(bk, Skv)
@@ -203,6 +209,15 @@ _flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     q_offset: int = 0, kv_len=None, interpret: bool = False):
-    """Kernel-path flash attention; see ``ref.flash_attention`` for semantics."""
+    """Kernel-path flash attention; see ``ref.flash_attention`` for semantics.
+
+    q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D(v)]; Sq/Skv must divide into the
+    128-element q/kv blocks (callers pad); bf16 or f32 in, f32 accumulation,
+    out in q.dtype + lse [B, Hq, Sq] f32.  KV pools are never quantized on
+    this path — prefill reads/writes full-precision activations; quantization
+    happens when pages enter the paged pool (``core/migrate.py``).  Pinned by
+    tests/test_kernels.py::test_flash_vs_oracle (interpret mode) and
+    ::test_flash_gradients_vs_oracle.
+    """
     scale = scale if scale is not None else q.shape[-1] ** -0.5
     return _flash(q, k, v, scale, causal, q_offset, kv_len, interpret)

@@ -36,7 +36,13 @@ BLOCKWISE_THRESHOLD = 2048
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     q_offset: int = 0, kv_len=None):
-    """Differentiable attention. See ``ref.flash_attention`` for semantics."""
+    """Differentiable attention. See ``ref.flash_attention`` for semantics.
+
+    q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D] (GQA: Hkv divides Hq); any float
+    dtype, f32 accumulation.  Long kv (>= BLOCKWISE_THRESHOLD, 512-aligned)
+    lowers the blockwise ref so dry-run memory stays flash-class.  Pinned by
+    tests/test_kernels.py::test_flash_vs_oracle / ::test_blockwise_matches_dense.
+    """
     impl = _backend()
     if impl == "ref":
         if k.shape[1] >= BLOCKWISE_THRESHOLD and k.shape[1] % 512 == 0:
@@ -52,7 +58,10 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
 
 
 def attention(q, k, v, **kw):
-    """Attention without the LSE output (most call sites)."""
+    """Attention without the LSE output (most call sites).
+
+    Same layout contract as ``flash_attention``; forwards all kwargs.
+    """
     return flash_attention(q, k, v, **kw)[0]
 
 
@@ -60,18 +69,36 @@ def attention(q, k, v, **kw):
 # paged decode attention
 # --------------------------------------------------------------------------- #
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                           scale: float | None = None):
+                           scale: float | None = None,
+                           k_scale=None, v_scale=None):
+    """Paged decode attention with LSE. See ``ref.paged_decode_attention``.
+
+    q [N, Hq, Dk]; pages [P, page, Hkv, D] (per-device sub-pool view: the
+    stripe (ps) dim is resolved by the caller's frame indices, the group
+    (kg) dim is the Hkv axis).  Quantized (fp8/int8) pools additionally
+    pass per-page ``k_scale``/``v_scale`` [P] f32 — dequant is fused into
+    whichever impl runs (``kernels/quant.py`` defines the format).  Pinned
+    by tests/test_kernels.py::test_paged_decode_vs_oracle and
+    tests/test_quant.py.
+    """
     impl = _backend()
     if impl == "ref":
         return ref.paged_decode_attention(q, k_pages, v_pages, block_tables,
-                                          lengths, scale=scale)
+                                          lengths, scale=scale,
+                                          k_scale=k_scale, v_scale=v_scale)
     from . import paged_attention as pa
     return pa.paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
-                                     scale=scale,
+                                     scale=scale, k_scale=k_scale,
+                                     v_scale=v_scale,
                                      interpret=(impl == "pallas_interpret"))
 
 
 def merge_lse(partial_out, partial_lse, mask=None):
+    """CP-shard LSE merge (always the ref impl — it is already fused-friendly).
+
+    partial_out [W, N, Hq, Dv]; partial_lse [W, N, Hq] f32; optional mask
+    [W, N].  Pinned by tests/test_properties.py::test_merge_lse_split_invariance.
+    """
     return ref.merge_lse(partial_out, partial_lse, mask)
 
 

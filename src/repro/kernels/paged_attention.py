@@ -41,18 +41,25 @@ def _kernel(
     q_ref,              # [1, 1, G, Dk]   (VMEM block)
     k_ref,              # [1, page, 1, Dk]
     v_ref,              # [1, page, 1, Dv]
+    # then, iff quantized: ks_ref [1, 1], vs_ref [1, 1] f32 (per-page scales)
     # outputs
-    o_ref,              # [1, 1, G, Dv]
-    lse_ref,            # [1, 1, G]
+    # o_ref   [1, 1, G, Dv]
+    # lse_ref [1, 1, G]
     # scratch
-    m_scr,              # [G, 128] f32
-    l_scr,              # [G, 128] f32
-    acc_scr,            # [G, Dv]  f32
-    *,
+    # m_scr   [G, 128] f32
+    # l_scr   [G, 128] f32
+    # acc_scr [G, Dv]  f32
+    *rest,
     scale: float,
     page: int,
     num_page_blocks: int,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
     n = pl.program_id(0)
     b = pl.program_id(2)
     length = lengths_ref[n]
@@ -68,6 +75,13 @@ def _kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, Dk]
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dk]
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dv]
+        if quantized:
+            # fused per-page dequant: the scale block for THIS page rode the
+            # same block-table index map as the page itself, so the multiply
+            # happens in VMEM right after the upcast — no dequantized copy
+            # of the pool ever exists in HBM.
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # [G, page]
         pos = b * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -98,11 +112,24 @@ def _kernel(
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                           scale: float | None = None, interpret: bool = False):
+                           scale: float | None = None,
+                           k_scale=None, v_scale=None,
+                           interpret: bool = False):
     """See ``ref.paged_decode_attention`` for exact semantics.
 
     q [N, Hq, Dk]; k_pages [P, page, Hkv, Dk]; v_pages [P, page, Hkv, Dv];
     block_tables [N, MB] int32; lengths [N] int32.
+
+    Quantized pools (fp8/int8, ``kernels/quant.py``): pass per-page
+    ``k_scale``/``v_scale`` [P] f32.  Each scale is reshaped to [P, 1] and
+    streamed through a (1, 1) BlockSpec whose index map follows the SAME
+    scalar-prefetched block-table entry as the page block, so ``_compute``
+    dequants in VMEM (upcast-then-multiply) before the MXU matmuls — the
+    pool never exists dequantized in HBM.  Pass neither or both.
+
+    Pinned against the jnp oracle (interpret mode) by tests/test_kernels.py::
+    test_paged_decode_vs_oracle and tests/test_quant.py::test_pallas_interpret_
+    matches_ref_quantized.
     """
     N, Hq, Dk = q.shape
     P, page, Hkv, _ = k_pages.shape
@@ -110,22 +137,35 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     MB = block_tables.shape[1]
     G = Hq // Hkv
     assert Hq % Hkv == 0
+    assert (k_scale is None) == (v_scale is None)
+    quantized = k_scale is not None
     scale = scale if scale is not None else Dk ** -0.5
 
     q3 = q.reshape(N, Hkv, G, Dk)  # group q heads by kv head
 
     grid = (N, Hkv, MB)
     kernel = functools.partial(_kernel, scale=scale, page=page,
-                               num_page_blocks=MB)
+                               num_page_blocks=MB, quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dk), lambda n, h, b, bt, ln: (n, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, Dk), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
+        pl.BlockSpec((1, page, 1, Dv), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
+    ]
+    operands = [q3, k_pages, v_pages]
+    if quantized:
+        # scales ride the same block-table-driven index map as their page
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda n, h, b, bt, ln: (bt[n, b], 0)),
+            pl.BlockSpec((1, 1), lambda n, h, b, bt, ln: (bt[n, b], 0)),
+        ]
+        operands += [k_scale.astype(jnp.float32).reshape(P, 1),
+                     v_scale.astype(jnp.float32).reshape(P, 1)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dk), lambda n, h, b, bt, ln: (n, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, Dk), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, Dv), lambda n, h, b, bt, ln: (bt[n, b], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, Dv), lambda n, h, b, bt, ln: (n, h, 0, 0)),
             pl.BlockSpec((1, 1, G), lambda n, h, b, bt, ln: (n, h, 0)),
@@ -145,6 +185,6 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
             jax.ShapeDtypeStruct((N, Hkv, G), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, lengths, q3, k_pages, v_pages)
+    )(block_tables, lengths, *operands)
 
     return out.reshape(N, Hq, Dv), lse.reshape(N, Hq)

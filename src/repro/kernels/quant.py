@@ -1,0 +1,107 @@
+"""Quantized paged-KV formats: storage dtypes, per-page scales, (de)quant helpers.
+
+The paged KV pools (``core/dcp.py::init_serve_state``) can be stored in a
+narrow dtype selected by the engine's ``kv_dtype`` knob:
+
+    kv_dtype   storage dtype        qmax    bytes/value
+    --------   ------------------   -----   -----------
+    "bf16"     model dtype (bf16)   —       2.0   (default; no quantization)
+    "fp8"      float8_e4m3fn        448.0   1.0
+    "int8"     int8                 127.0   1.0
+
+Quantization is symmetric per-PAGE: one f32 scale per (layer, chunk, frame)
+pool page, stored in a sidecar array (``k_scale``/``v_scale``/``kv_scale``,
+shape ``[nb, n_attn, I, tp, F']``) that lives in the donated serve state and
+travels with every KV-movement collective.  A stored value ``x_q`` decodes as
+``x = x_q * scale``; encoding clips ``x / scale`` to ``[-qmax, qmax]``.
+
+Scale lifecycle — the offset-0 rule (see docs/KERNELS.md):
+  * A write that lands at page offset 0 RESETS that page's scale to the
+    amax/qmax of this call's tokens for the page (frames are always refilled
+    from offset 0 when reused, so stale scales never leak across owners).
+  * A write into a partially-filled page (offset > 0) CLIPS into the page's
+    existing scale — later decode appends never re-scale earlier tokens.
+
+Scales are floored at ``SCALE_FLOOR`` when derived, so every live page scale
+is strictly positive and the decode divide needs no runtime guard.
+
+Pinned by ``tests/test_quant.py`` (round-trip error bounds per dtype and pool
+geometry) and the ``quant`` conformance shard (``tests/integration/engine_quant.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# smallest representable page scale: keeps all-zero pages encodable (scale
+# floor x qmax is still denormal-free) without ever storing scale == 0
+SCALE_FLOOR = 1e-8
+
+# kv_dtype -> (storage dtype or None for "keep model dtype", qmax, bytes/value)
+KV_FORMATS: dict = {
+    "bf16": (None, None, 2.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0, 1.0),
+    "int8": (jnp.int8, 127.0, 1.0),
+}
+
+
+def check_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_FORMATS:
+        raise ValueError(
+            f"kv_dtype must be one of {sorted(KV_FORMATS)}, got {kv_dtype!r}")
+    return kv_dtype
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    return check_kv_dtype(kv_dtype) != "bf16"
+
+
+def kv_storage_dtype(kv_dtype: str, model_dtype):
+    """Pool element dtype for ``kv_dtype`` (falls back to the model dtype)."""
+    sdt = KV_FORMATS[check_kv_dtype(kv_dtype)][0]
+    return model_dtype if sdt is None else sdt
+
+
+def kv_qmax(kv_dtype: str) -> float:
+    """Largest magnitude representable by the storage dtype (quant range)."""
+    qmax = KV_FORMATS[check_kv_dtype(kv_dtype)][1]
+    assert qmax is not None, "bf16 pools are not quantized"
+    return qmax
+
+
+def kv_bytes_per_value(kv_dtype: str) -> float:
+    """Stored bytes per KV element (excludes the ~1/page scale sidecar)."""
+    return KV_FORMATS[check_kv_dtype(kv_dtype)][2]
+
+
+def amax_scale(x: jax.Array, kv_dtype: str, *, axis=-1) -> jax.Array:
+    """Per-slice symmetric scale: ``max|x| / qmax`` over ``axis``, floored.
+
+    Returns f32 with ``axis`` reduced away. The result is always a legal
+    stored scale (>= SCALE_FLOOR), so the matching dequant divide is safe.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    return jnp.maximum(amax / kv_qmax(kv_dtype), SCALE_FLOOR)
+
+
+def quantize(x: jax.Array, scale: jax.Array, kv_dtype: str) -> jax.Array:
+    """Encode ``x`` with (broadcastable) per-page ``scale``; clips to qmax.
+
+    int8 rounds to nearest; fp8 uses the hardware cast's rounding.
+    """
+    qmax = kv_qmax(kv_dtype)
+    sdt = KV_FORMATS[kv_dtype][0]
+    y = jnp.clip(x.astype(jnp.float32) / scale, -qmax, qmax)
+    if sdt == jnp.int8:
+        y = jnp.round(y)
+    return y.astype(sdt)
+
+
+def dequantize(x_q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Decode stored values with their (broadcastable) page scale -> f32."""
+    return x_q.astype(jnp.float32) * scale
+
+
+__all__ = ["KV_FORMATS", "SCALE_FLOOR", "check_kv_dtype", "is_quantized",
+           "kv_storage_dtype", "kv_qmax", "kv_bytes_per_value", "amax_scale",
+           "quantize", "dequantize"]

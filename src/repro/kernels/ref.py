@@ -34,6 +34,10 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     ``q_offset``: absolute position of q[0] (for chunked prefill).
     ``kv_len``: optional [B] valid kv lengths (padding mask).
     Returns out [B, Sq, Hq, D] (q.dtype), lse [B, Hq, Sq] (f32).
+
+    Accepts any dtype; scores/softmax accumulate in f32.  Dv may differ
+    from Dk (MLA).  Pinned by tests/test_kernels.py::test_flash_vs_oracle
+    and ::test_flash_mla_dv_neq_dk.
     """
     orig_dtype = q.dtype
     B, Sq, Hq, D = q.shape
@@ -68,7 +72,8 @@ def flash_attention_blockwise(q, k, v, *, causal: bool = True,
     Same semantics as ``flash_attention`` but never materialises the
     [Sq, Skv] score matrix — this is what the CPU dry-run lowers for long
     sequences so ``memory_analysis`` reflects a flash-class implementation.
-    Differentiable (the scan body is checkpointed).
+    Differentiable (the scan body is checkpointed).  Requires Skv divisible
+    by ``block_k``.  Pinned by tests/test_kernels.py::test_blockwise_matches_dense.
     """
     orig_dtype = q.dtype
     B, Sq, Hq, D = q.shape
@@ -123,7 +128,8 @@ def flash_attention_blockwise(q, k, v, *, causal: bool = True,
 # paged decode attention (FlashMLA/paged-attention analogue)
 # --------------------------------------------------------------------------- #
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                           scale: float | None = None):
+                           scale: float | None = None,
+                           k_scale=None, v_scale=None):
     """Decode attention over a paged KV pool, with LSE output.
 
     q:            [N, Hq, Dk]      one query token per work row
@@ -131,7 +137,19 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     v_pages:      [P, page, Hkv, Dv]
     block_tables: [N, MB] int32    page ids per row (entries >= lengths ignored)
     lengths:      [N]     int32    valid kv tokens per row; 0 => inactive row
+    k_scale/v_scale: optional [P] f32 per-page dequant scales for quantized
+                  (fp8/int8) pools; when given, gathered pages decode as
+                  ``page * scale`` before use (``kernels/quant.py``). Pass
+                  neither (bf16) or both; for MLA's shared pool pass the
+                  same array twice.
     Returns out [N, Hq, Dv] (q.dtype), lse [N, Hq] (f32; -inf-ish for len 0).
+
+    Layout contract: pages are the per-device sub-pool view [F', page, kg, D]
+    of the striped pool (kg kv heads resident, ``attn_tp_geometry``); the
+    kv-head axis is whatever slice the caller holds — this function never
+    sees the stripe (ps) dim.  Pinned by tests/test_kernels.py::
+    test_paged_decode_vs_oracle (dense geometry), test_paged_decode_grouped_
+    subpool_view (kg > 1 view), and tests/test_quant.py (quantized pools).
     """
     orig_dtype = q.dtype
     N, Hq, Dk = q.shape
@@ -146,6 +164,15 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     # (this path is what the CPU dry-run lowers — memory must stay honest).
     k = k_pages[block_tables].reshape(N, MB * page, Hkv, Dk)
     v = v_pages[block_tables].reshape(N, MB * page, Hkv, Dv)
+    if k_scale is not None:
+        # quantized pools: dequant only the gathered [N, MB*page] window.
+        # Scales are per page, constant across the page's tokens/head-dims.
+        ks = jnp.broadcast_to(k_scale[block_tables][..., None],
+                              block_tables.shape + (page,)).reshape(N, MB * page)
+        vs = jnp.broadcast_to(v_scale[block_tables][..., None],
+                              block_tables.shape + (page,)).reshape(N, MB * page)
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
     qg = (q.astype(jnp.float32) * scale).reshape(N, Hkv, G, Dk).astype(q.dtype)
     s = jnp.einsum("nhgd,nkhd->nhgk", qg, k,
                    preferred_element_type=jnp.float32)  # [N, Hkv, G, L]
@@ -166,7 +193,12 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
 
 
 def decode_attention_dense(q, k, v, lengths, *, scale: float | None = None):
-    """Contiguous-KV decode reference: q [N,Hq,Dk], k [N,L,Hkv,Dk], v [N,L,Hkv,Dv]."""
+    """Contiguous-KV decode reference: q [N,Hq,Dk], k [N,L,Hkv,Dk], v [N,L,Hkv,Dv].
+
+    The degenerate one-page-per-row layout (page size L, identity block
+    table) — used by the dense decode backend; exercised transitively by
+    every test that pins ``paged_decode_attention``.
+    """
     # Route through the paged oracle with one page (of size L) per row.
     N = q.shape[0]
     bt = jnp.arange(N, dtype=jnp.int32)[:, None]
@@ -183,8 +215,9 @@ def merge_lse(partial_out, partial_lse, mask=None):
     mask: optional [W, N] bool (False entries are ignored).
     Returns merged out [N, Hq, Dv] (partial_out.dtype), merged lse [N, Hq].
 
-    Invariant (tested by property tests): merging the per-shard outputs of a
-    length-split attention equals the unsplit attention.
+    Invariant: merging the per-shard outputs of a length-split attention
+    equals the unsplit attention.  Pinned by tests/test_properties.py::
+    test_merge_lse_split_invariance and ::test_merge_lse_permutation_invariance.
     """
     orig_dtype = partial_out.dtype
     o = partial_out.astype(jnp.float32)

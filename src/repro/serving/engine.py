@@ -63,6 +63,7 @@ from ..core.page_table import KVSpillError
 from ..core.prefix import PrefixTrie, page_keys
 from ..core.scheduler import BaseScheduler, DualBalancedScheduler
 from ..core.state import ClusterState, Request
+from ..kernels import quant
 from ..models import encdec, transformer
 
 
@@ -108,6 +109,9 @@ class _Inflight:
     # the exact blast radius of an instance failure between dispatch and
     # harvest — entries outside it harvest normally
     holders: dict = field(default_factory=dict)
+    # [I, M, V] device logits when the engine runs with keep_logits
+    # (quant conformance); None on the hot path
+    logits: object = None
 
 
 class NanoCPEngine:
@@ -125,12 +129,28 @@ class NanoCPEngine:
                  admission=None,
                  prefix_cache: bool = False,
                  prefill_cells: int = 0,
-                 chunk_tokens: int | None = None):
+                 chunk_tokens: int | None = None,
+                 kv_dtype: str = "bf16",
+                 keep_logits: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.tp = tp or mesh.shape["model"]
         self.backend = backend
         self.eos = eos_token
+        # paged-KV storage precision (kernels/quant.py): "bf16" keeps
+        # today's bit-exact pools; "fp8"/"int8" store quantized pages with
+        # per-page scale sidecars and fuse dequant into decode attention
+        quant.check_kv_dtype(kv_dtype)
+        self.kv_dtype = kv_dtype
+        if quant.is_quantized(kv_dtype):
+            assert cfg.has_attention and not cfg.is_encoder_decoder, \
+                "quantized KV pools need a decoder-side paged attention " \
+                "pool (encoder-decoder and attention-free archs are bf16)"
+        # debug/conformance hook: keep each step's logits on device and
+        # record them per request at harvest (tolerance-gated engine-vs-
+        # reference comparison for quantized pools) — off on the hot path
+        self.keep_logits = keep_logits
+        self.step_logits: dict = {}
         # one-step-lookahead pipeline (False = dispatch+harvest each step:
         # EOS finishes apply before the next lowering, so no speculative
         # slot-steps ever run — the non-pipelined reference semantics)
@@ -215,7 +235,8 @@ class NanoCPEngine:
             num_frames=self.cluster.page_table.frames_per_instance + 1,
             page=page_size, data_size=num_instances, tp=self.tp,
             backend=backend,
-            eos=-1 if eos_token is None else int(eos_token))
+            eos=-1 if eos_token is None else int(eos_token),
+            kv_dtype=kv_dtype)
         # Decode params and the initial serve state are COMMITTED to their
         # shard_map layouts here, once: otherwise every dispatch re-shards
         # them (implicit device-to-device transfers on multi-device meshes —
@@ -249,10 +270,16 @@ class NanoCPEngine:
         # a steady state whose bindings stay — or RELAX back to — node-local
         # compiles exactly the node-local rotation rounds, never the
         # cluster ring (the compiler-visible payoff of DCP relaxation)
+        # quantized engines tag every bucket key with the kv dtype: a bf16
+        # and an fp8 engine sharing a process must never share executables
+        # (their serve-state signatures differ); bf16 keys stay unchanged
         self.aot = AOTGraphEngine(self._build_step,
                                   audit_every_step=audit_donation_every_step,
                                   r_ladder=self._r_ladder(
-                                      ring, instances_per_node))
+                                      ring, instances_per_node),
+                                  key_tag=(kv_dtype if
+                                           quant.is_quantized(kv_dtype)
+                                           else None))
         self._scatter = migrate.PrefillScatter(cfg, self._dims0,
                                                num_instances)
         # live KV re-shard collective (mid-decode CP escalation / drain);
@@ -342,7 +369,7 @@ class NanoCPEngine:
 
     # ------------------------------------------------------------------ #
     def _build_step(self, key):
-        M, S, MB, W, R = key
+        M, S, MB, W, R = key[:5]   # key may carry the kv_dtype tag after R
         N = M + (W - 1) * S
         # rounds_used=R bounds the compiled ppermute rounds: node-local
         # placements on a W < I topology never pay the full cluster ring
@@ -351,7 +378,7 @@ class NanoCPEngine:
                            page=self._dims0.page,
                            data_size=self.cluster.num_instances, tp=self.tp,
                            backend=self.backend, eos=self._dims0.eos,
-                           rounds_used=R)
+                           rounds_used=R, kv_dtype=self.kv_dtype)
         I = self.cluster.num_instances
         tbl_spec = {
             "slot_rid": (I, M), "slot_token": (I, M), "slot_pos": (I, M),
@@ -1151,8 +1178,8 @@ class NanoCPEngine:
             return
         have = set(self.aot.cached_keys())
         new_keys = []
-        for key in sorted(have):
-            M, S, MB, W, R = key
+        for key in sorted(have, key=lambda k: k[:5]):
+            M, S, MB, W, R = key[:5]
             if S == 0:
                 continue
             k2 = self.aot.quantise(M, S, MB, W, max(R, need))
@@ -1266,6 +1293,8 @@ class NanoCPEngine:
         self._inflight = None
         t0 = time.perf_counter()
         toks = np.asarray(jax.device_get(infl.toks))
+        logits = (None if infl.logits is None
+                  else np.asarray(jax.device_get(infl.logits)))
         self.timings["harvest_us"] = (time.perf_counter() - t0) * 1e6
         self.hot_path_stats["async_token_fetches"] += 1
         done = []
@@ -1273,6 +1302,8 @@ class NanoCPEngine:
             t = int(toks[i, b])
             self.results[rid].tokens.append(t)
             self.next_tok[rid] = t
+            if logits is not None:
+                self.step_logits.setdefault(rid, []).append(logits[i, b])
             req.token_times.append(now)
             if last:
                 # cluster bookkeeping already done at dispatch; stamp the
@@ -1437,7 +1468,10 @@ class NanoCPEngine:
         t0 = time.perf_counter()
         check = self.aot.should_audit_donation()
         in_ptrs = self.aot.buffer_ptrs(self.state) if check else None
-        self.state, toks, _ = fn(self.decode_params, self.state, tbl_dev)
+        self.state, toks, step_logits = fn(self.decode_params, self.state,
+                                           tbl_dev)
+        if not self.keep_logits:
+            step_logits = None
         try:
             toks.copy_to_host_async()
         except AttributeError:
@@ -1469,7 +1503,7 @@ class NanoCPEngine:
                 length_done.append(req)
         for req in length_done:
             self.cluster.finish(req, now)
-        self._inflight = _Inflight(toks, snapshot, holders)
+        self._inflight = _Inflight(toks, snapshot, holders, step_logits)
         self.iterations += 1
         self.last_bucket = key
         self.last_rounds_used = tbl.R

@@ -40,6 +40,10 @@ class LatencyModel:
     cfg: ModelConfig
     hw: HardwareModel = HardwareModel()
     ep_size: int = 32                 # instances sharing the expert pool
+    # paged-KV storage precision (kernels/quant.py): scales the KV byte
+    # terms — pool sweeps, reshard payloads, scatter writes.  Weights stay
+    # bf16 (kv_dtype only covers the paged pools).
+    kv_dtype: str = "bf16"
 
     # ---------------- per-layer weight footprints (bf16 bytes) ----------
     @property
@@ -76,11 +80,14 @@ class LatencyModel:
     # ---------------- per-token constants ----------------
     @property
     def kv_bytes_per_token(self) -> float:
-        """KV bytes per token per attention layer (bf16)."""
+        """KV bytes per token per attention layer at ``kv_dtype`` (bf16 = 2
+        bytes/value, fp8/int8 = 1; per-page scales are amortized to ~0)."""
+        from ..kernels.quant import kv_bytes_per_value
+        b = kv_bytes_per_value(self.kv_dtype)
         c = self.cfg
         if c.is_mla:
-            return 2.0 * (c.kv_lora_rank + c.qk_rope_head_dim)
-        return 2.0 * 2 * c.num_kv_heads * c.head_dim_
+            return b * (c.kv_lora_rank + c.qk_rope_head_dim)
+        return b * 2 * c.num_kv_heads * c.head_dim_
 
     @property
     def q_row_bytes(self) -> float:

@@ -1,0 +1,155 @@
+"""Quantized paged-KV engine conformance cell (one subprocess per cell).
+
+Drives ``NanoCPEngine`` with fp8/int8 KV pools (per-page scale sidecars +
+fused-dequant decode attention, ``kernels/quant.py``) and compares against
+the single-device fp32 reference under an EXPLICIT numerics contract:
+
+  * the prefill-sampled first token is exact (prefill reads full-precision
+    activations; quantization happens at the pool write);
+  * every decode step's logits stay within a per-dtype absolute bound of
+    the reference logits computed on the ENGINE's transcript (teacher-
+    forced, so one near-tie never cascades into a bogus logit diff);
+  * the emitted token matches the reference argmax unless the reference
+    top-2 margin is inside the logit tolerance (a genuine near-tie), and
+    near-ties must stay a minority of steps;
+  * bf16 hot-path invariants still hold: transfer-guard-clean steady
+    state, donation audited with no re-shard copies, ``frame_audit`` clean
+    (the scale ledger stays in lockstep with frame ownership).
+
+Modes:
+
+  * steady    — three requests, multi-step decode, no re-shard.
+  * escalate  — one long decode crossing a CP bucket edge mid-decode: the
+                re-shard's gather->scatter must dequantize with SOURCE page
+                scales and requantize with DESTINATION page scales
+                (``migrate.KVReshard``) — the cell fails loudly if scales
+                are dropped or mixed across the move.
+
+Usage: engine_quant.py KV_DTYPE I TP [escalate]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import CONFIGS, reduced
+from repro.core.bucketing import CPBuckets, ShapeBuckets
+from repro.models import init_params, transformer
+from repro.serving.engine import NanoCPEngine
+
+VOCAB = 256
+ARCH = "tinyllama-1.1b"
+
+# absolute logit-delta bound per kv dtype (f32 logits, reduced config).
+# Calibrated at ~3x the observed worst case so a numerics regression trips
+# the gate while seed-to-seed jitter does not.
+LOGIT_TOL = {"fp8": 1.5, "int8": 0.5}
+
+
+def reference_logits(cfg, params, seq):
+    logits, _ = transformer.forward(cfg, params, jnp.asarray(seq)[None])
+    return np.asarray(logits[0, -1], np.float32)
+
+
+def run_case(kv_dtype: str, I: int, TP: int, escalate: bool) -> None:
+    tol = LOGIT_TOL[kv_dtype]
+    cfg = reduced(CONFIGS[ARCH], vocab_size=VOCAB)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        init_params(jax.random.PRNGKey(0), cfg))
+    mesh = compat.make_mesh((I, TP), ("data", "model"))
+    if escalate:
+        edges, degrees = (48,), (1, 2)
+    else:
+        edges = (64, 160)
+        degrees = (1, 2, 3) if I >= 3 else (1, 2, 2)
+    eng = NanoCPEngine(
+        cfg, params, mesh, num_instances=I, instances_per_node=I, tp=TP,
+        kv_capacity_tokens=4096, page_size=16,
+        buckets=CPBuckets(edges=edges, degrees=degrees),
+        shape_buckets=ShapeBuckets(m_buckets=(1, 2, 4), s_buckets=(0, 1, 2, 4),
+                                   window=I),
+        max_slots_per_instance=4, audit_donation_every_step=True,
+        kv_dtype=kv_dtype, keep_logits=True)
+    assert any("scale" in k for k in eng.state), sorted(eng.state)
+    print(f"quant {kv_dtype} I={I} TP={TP} escalate={escalate} tol={tol}")
+
+    rng = np.random.default_rng(0)
+    if escalate:
+        prompts = {eng.add_request(rng.integers(0, VOCAB, (40,)),
+                                   max_new_tokens=24): None}
+    else:
+        prompts = {eng.add_request(rng.integers(0, VOCAB, (L,)),
+                                   max_new_tokens=6): None
+                   for L in (24, 90, 180)}
+    for rid in prompts:
+        prompts[rid] = list(map(int, eng._prompts[rid]))
+
+    eng.step()                                    # admission + warmup
+    assert not eng.cluster.waiting, "all requests must admit at step 1"
+    eng.step()
+    copies_before = eng.aot.stats.donation_copies
+    with jax.transfer_guard("disallow"):
+        for _ in range(96):
+            if not (eng.cluster.active or eng._inflight is not None):
+                break
+            eng.step()
+    assert not eng.cluster.active and eng._inflight is None
+
+    hp = eng.hot_path_stats
+    if escalate:
+        assert hp["escalations"] >= 1, hp
+        assert hp["reshard_tokens"] > 0, hp
+        fin = list(eng.finished)[0]
+        assert len(fin.kv_binding) == 2, fin.kv_binding
+
+    # ---- numerics contract vs the fp32 single-device reference ----
+    worst = 0.0
+    near_ties = total = 0
+    for rid, res in eng.results.items():
+        seq = list(prompts[rid])
+        # prefill reads full-precision activations -> first token is exact
+        t0 = int(np.argmax(reference_logits(cfg, params, seq)))
+        assert res.tokens[0] == t0, (rid, res.tokens[0], t0)
+        seq.append(res.tokens[0])
+        steps = eng.step_logits[rid]
+        assert len(steps) == len(res.tokens) - 1, (rid, len(steps))
+        for j, got in enumerate(steps):
+            ref = reference_logits(cfg, params, seq)
+            delta = float(np.max(np.abs(np.asarray(got, np.float32) - ref)))
+            worst = max(worst, delta)
+            assert delta <= tol, (rid, j, delta, tol)
+            order = np.argsort(ref)
+            margin = float(ref[order[-1]] - ref[order[-2]])
+            total += 1
+            if res.tokens[j + 1] != int(order[-1]):
+                # tolerated ONLY as a genuine near-tie
+                assert margin <= tol, (rid, j, res.tokens[j + 1],
+                                       int(order[-1]), margin, tol)
+                near_ties += 1
+            seq.append(res.tokens[j + 1])
+        print(f"  rid {rid}: {len(res.tokens)} tokens, contract holds")
+    assert near_ties <= total // 2, (near_ties, total)
+    print(f"  worst |dlogit| = {worst:.4f} (tol {tol}), "
+          f"near-ties {near_ties}/{total}")
+
+    # ---- hot-path + ledger invariants ----
+    st = eng.aot.stats
+    n_leaves = len(jax.tree.leaves(eng.state))
+    assert st.donation_checks > 0 and st.donation_reuses > 0, st.as_dict()
+    assert st.donation_copies <= n_leaves, st.as_dict()
+    assert st.donation_copies == copies_before, \
+        ("quantized decode broke step donation", st.as_dict())
+    # the kv-dtype tag keeps quantized executables in their own bucket keys
+    assert eng.last_bucket[-1] == kv_dtype, eng.last_bucket
+    eng.cluster.page_table.frame_audit()
+    print(f"  aot: {st.as_dict()}")
+    print(f"quant {kv_dtype} I={I} TP={TP} escalate={escalate}: PASS")
+
+
+if __name__ == "__main__":
+    import sys
+    kv_dtype, I, TP = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+    run_case(kv_dtype, I, TP, "escalate" in sys.argv[4:])

@@ -216,6 +216,30 @@ def test_engine_disagg(args):
     assert "PASS" in out
 
 
+# quantized paged-KV cells (tolerance-gated — the ONE exception to the
+# token-for-token rule, by design): fp8/int8 pools with per-page scale
+# sidecars and fused-dequant decode attention must track the fp32
+# reference within an explicit per-dtype logit bound on the engine's own
+# transcript, with argmax equality outside genuine near-ties; the
+# escalate cell re-shards quantized KV mid-decode (scales dequant at the
+# source, requant at the destination).  All bf16 cells above stay exact
+# (tests/integration/engine_quant.py documents the contract).
+QUANT_CELLS = [
+    ("fp8", "2", "2"),
+    ("fp8", "4", "1"),
+    ("int8", "2", "2"),
+    ("fp8", "2", "2", "escalate"),
+]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("args", QUANT_CELLS,
+                         ids=["-".join(c) for c in QUANT_CELLS])
+def test_engine_quant(args):
+    out = run_integration("engine_quant.py", *args)
+    assert "PASS" in out
+
+
 @pytest.mark.conformance
 def test_engine_multinode_conformance_cell():
     """Full conformance workload on a two-node W=4, I=8 topology (nothing
